@@ -1,0 +1,24 @@
+"""Paper §V-C cache-size study: reuse%/accuracy vs CS + store capacity (LRU).
+
+Expected (paper): reuse%% rises with cache size until caches hold all
+to-be-executed tasks, then plateaus; accuracy *decreases* slightly with
+larger caches (more, older reuse candidates)."""
+from __future__ import annotations
+
+from .common import run_network
+
+SIZES = (4, 16, 64, 256)
+
+
+def run(n_tasks: int = 250) -> list:
+    rows = []
+    for dataset in ("cctv1", "stanford_ar"):
+        parts = []
+        for size in SIZES:
+            _, s = run_network(dataset, n_tasks=n_tasks, threshold=0.85,
+                               cs_capacity=size, user_cs_capacity=max(size // 8, 1),
+                               en_store_capacity=size * 4)
+            parts.append(f"cap{size}=reuse{s['reuse_pct']:.0f}pct/"
+                         f"acc{s['accuracy_pct']:.0f}pct")
+        rows.append((f"cache_sweep/{dataset}", 0.0, ";".join(parts)))
+    return rows

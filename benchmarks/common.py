@@ -1,0 +1,63 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+
+def timeit(fn: Callable, n: int = 20, warmup: int = 3) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def run_network(dataset: str, *, n_tasks: int = 300, threshold: float = 0.9,
+                mode: str = "reservoir", topology: str = "testbed",
+                num_tables: int = None, users: int = 2, rate_hz: float = 20.0,
+                measure_fwd_errors: bool = False, cs_capacity: int = 512,
+                user_cs_capacity: int = 32, en_store_capacity: int = 100_000,
+                seed: int = 0):
+    """One simulator run -> (net, summary dict).  Mirrors §V-B / §V-C setup:
+    1 LSH table for mnist/stanford_ar, 5 for the rest (unless overridden)."""
+    from repro.core import LSHParams, ReservoirNetwork
+    from repro.core.topology import paper_topology, testbed_topology
+    from repro.data import DATASETS, dataset_service, make_stream
+
+    spec = DATASETS[dataset]
+    if num_tables is None:
+        num_tables = 1 if dataset in ("mnist", "stanford_ar") else 5
+    p = LSHParams(dim=spec.dim, num_tables=num_tables, num_probes=8,
+                  seed=11)
+    if topology == "testbed":
+        g, ens = testbed_topology()
+        attach = ["fwd1", "fwd2"]
+    else:
+        g, ens = paper_topology(seed=seed)
+        attach = [n for n in g.nodes if n not in ens][:max(users, 2)]
+    net = ReservoirNetwork(
+        g, ens, p, mode=mode, cs_capacity=cs_capacity,
+        user_cs_capacity=user_cs_capacity, en_store_capacity=en_store_capacity,
+        measure_fwd_errors=measure_fwd_errors, icedge_tag_bits=10, seed=seed)
+    net.register_service(dataset_service(spec))
+    for u in range(users):
+        net.add_user(f"u{u}", attach[u % len(attach)])
+    X, _ = make_stream(spec, n_tasks, seed=seed + 1)
+    t = 0.0
+    for i, x in enumerate(X):
+        net.submit_task(f"u{i % users}", spec.name, x, threshold, at_time=t)
+        t += 1.0 / rate_hz
+    net.run()
+    return net, net.metrics.summary()
+
+
+DATASET_ORDER = ("mnist", "pandaset", "stanford_ar", "cctv1", "cctv2")

@@ -1,0 +1,24 @@
+"""Paper Fig. 10: task forwarding error rate (5 LSH tables).
+
+A forwarding error: a task executed from scratch at its EN while ANOTHER EN
+held a reusable similar task.  Paper: <9% across datasets, decreasing with
+threshold."""
+from __future__ import annotations
+
+from .common import DATASET_ORDER, run_network
+
+THRESHOLDS = (0.7, 0.8, 0.9, 0.95)
+
+
+def run(n_tasks: int = 200) -> list:
+    rows = []
+    for dataset in DATASET_ORDER:
+        parts = []
+        for thr in THRESHOLDS:
+            _, s = run_network(dataset, n_tasks=n_tasks, threshold=thr,
+                               topology="paper", num_tables=5,
+                               measure_fwd_errors=True)
+            parts.append(f"thr{thr}={s['fwd_error_pct']:.1f}pct")
+        rows.append((f"fwd_error/{dataset}", 0.0,
+                     ";".join(parts) + ";paper<9pct, decreasing"))
+    return rows

@@ -1,0 +1,28 @@
+"""Paper Figs. 8d/9d: percent of tasks satisfied by reuse vs threshold."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import DATASET_ORDER, run_network
+
+THRESHOLDS = (0.5, 0.7, 0.8, 0.9, 0.95)
+
+
+def run(n_tasks: int = 250) -> list:
+    rows = []
+    means = []
+    for dataset in DATASET_ORDER:
+        pr = []
+        for thr in THRESHOLDS:
+            _, s = run_network(dataset, n_tasks=n_tasks, threshold=thr)
+            pr.append(s["reuse_pct"])
+        means.append(np.mean(pr))
+        der = ";".join(f"thr{t}={p:.1f}" for t, p in zip(THRESHOLDS, pr))
+        _, s9 = run_network(dataset, n_tasks=n_tasks, threshold=0.9)
+        der += (f";cs_pct@0.9={s9['reuse_pct_cs']:.1f}"
+                f";en_pct@0.9={s9['reuse_pct_en']:.1f}")
+        rows.append((f"percent_reuse/{dataset}", 0.0, der))
+    rows.append(("percent_reuse/average", 0.0,
+                 f"mean_over_datasets={np.mean(means):.1f}pct;paper_avg~50-52pct;"
+                 f"paper_cctv_max=88-91pct"))
+    return rows

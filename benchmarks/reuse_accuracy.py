@@ -1,0 +1,19 @@
+"""Paper Figs. 8c/9c: accuracy of reuse vs similarity threshold."""
+from __future__ import annotations
+
+from .common import DATASET_ORDER, run_network
+
+THRESHOLDS = (0.5, 0.7, 0.8, 0.9, 0.95)
+
+
+def run(n_tasks: int = 250) -> list:
+    rows = []
+    for dataset in DATASET_ORDER:
+        accs = []
+        for thr in THRESHOLDS:
+            _, s = run_network(dataset, n_tasks=n_tasks, threshold=thr)
+            accs.append(s["accuracy_pct"])
+        der = ";".join(f"thr{t}={a:.1f}" for t, a in zip(THRESHOLDS, accs))
+        rows.append((f"reuse_accuracy/{dataset}", 0.0,
+                     der + f";paper=90-100pct at high thr"))
+    return rows

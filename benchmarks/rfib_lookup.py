@@ -1,0 +1,48 @@
+"""Paper Fig. 6 + rFIB size study: task-via-rFIB vs Interest-via-FIB."""
+from __future__ import annotations
+
+import random
+
+from repro.core import FIB, RFIB, encode_task_hash
+from repro.core.rfib import partition
+from .common import timeit
+
+
+def run() -> list:
+    rows = []
+    rng = random.Random(3)
+    for n_services in (100, 1_000):
+        fib = FIB()
+        rfib = RFIB()
+        ens = [f"/edge/en{i}" for i in range(10)]
+        faces = {e: [i + 1] for i, e in enumerate(ens)}
+        for s in range(n_services):
+            svc = f"/svc{s:04d}"
+            fib.insert(svc, rng.randrange(1, 11))
+            for e in partition(svc, ens, faces, num_tables=5, num_buckets=256):
+                rfib.insert(e)
+        svc = f"/svc{n_services // 2:04d}"
+        hash_comp = encode_task_hash([rng.randrange(256) for _ in range(5)], 1)
+        name = f"{svc}/task/{hash_comp}"
+
+        fib_us = timeit(lambda: fib.lookup(name), n=200)
+        rfib_us = timeit(lambda: rfib.lookup(svc, hash_comp), n=200)
+        rows.append((f"fib_lookup/services={n_services}", fib_us,
+                     f"us={fib_us:.2f}"))
+        rows.append((f"rfib_lookup/services={n_services}", rfib_us,
+                     f"us={rfib_us:.2f};overhead_us={rfib_us - fib_us:.2f};"
+                     f"paper_overhead_us<=5 (once per task)"))
+        rows.append((f"rfib_size/services={n_services}", 0.0,
+                     f"bytes={rfib.size_bytes()};entries={len(rfib)}"))
+    # paper's max config: 1K services, 100 ENs, 10 tables -> size must stay
+    # far below the paper's 54.2MB bound
+    big = RFIB()
+    ens = [f"/metro/zone{i // 10}/en{i}" for i in range(100)]
+    faces = {e: [i + 1] for i, e in enumerate(ens)}
+    for s in range(1_000):
+        for e in partition(f"/svc{s:04d}", ens, faces, num_tables=10,
+                           num_buckets=1 << 24, index_size_bytes=4):
+            big.insert(e)
+    rows.append(("rfib_size/max_config", 0.0,
+                 f"bytes={big.size_bytes()};entries={len(big)};paper_MB=54.2"))
+    return rows

@@ -1,0 +1,48 @@
+"""§Roofline: per (arch x shape) three-term roofline from dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and prints
+the full baseline table: compute / memory / collective terms in seconds,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS usefulness ratio.
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART_DIR = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load_cells(mesh: str = "16x16") -> list:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run() -> list:
+    rows = []
+    cells = load_cells("16x16")
+    if not cells:
+        return [("roofline/missing", 0.0,
+                 f"no dry-run artifacts under {ART_DIR}; run "
+                 "`python -m repro.launch.dryrun --all --both-meshes` first")]
+    for c in cells:
+        r = c.get("roofline", {})
+        name = f"roofline/{c['arch']}/{c['shape']}"
+        dom_s = max(r.get("compute_s", 0), r.get("memory_s", 0),
+                    r.get("collective_s", 0))
+        frac = r.get("compute_s", 0.0) / max(dom_s, 1e-12)
+        rows.append((name, dom_s * 1e6,
+                     f"compute_s={r.get('compute_s', 0):.4f};"
+                     f"memory_s={r.get('memory_s', 0):.4f};"
+                     f"collective_s={r.get('collective_s', 0):.4f};"
+                     f"dominant={r.get('dominant')};"
+                     f"roofline_frac={frac:.3f};"
+                     f"useful_flops_frac={r.get('useful_flops_frac', 0):.3f}"))
+    n_multi = len(load_cells("2x16x16"))
+    rows.append(("roofline/multi_pod_proof", 0.0,
+                 f"cells_compiled_2x16x16={n_multi}/40"))
+    return rows

@@ -1,0 +1,49 @@
+"""Benchmark driver: one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see DESIGN.md §8 for the
+benchmark <-> paper artifact mapping).  Select subsets with
+``python -m benchmarks.run [names...]``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+BENCHES = (
+    "hashing_time",       # Table III
+    "search_accuracy",    # Table IV (a) + (b)
+    "rfib_lookup",        # Fig. 6 + rFIB size
+    "completion_time",    # Figs. 8a/8b + 9a/9b
+    "reuse_accuracy",     # Figs. 8c + 9c
+    "percent_reuse",      # Figs. 8d + 9d
+    "cache_sweep",        # §V-C cache-size study
+    "forwarding_error",   # Fig. 10
+    "icedge_compare",     # Fig. 11
+    "serving_reuse",      # beyond-paper: reuse-aware LM serving
+    "multiprobe",         # beyond-paper: probe depth vs recall vs cost
+    "roofline",           # §Roofline (reads dry-run artifacts)
+)
+
+
+def main() -> None:
+    selected = sys.argv[1:] or BENCHES
+    print("name,us_per_call,derived")
+    failures = []
+    for bench in selected:
+        mod = __import__(f"benchmarks.{bench}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001 — report, keep the suite going
+            failures.append((bench, repr(e)))
+            print(f"{bench}/ERROR,0,{e!r}")
+            continue
+        for name, us, derived in rows:
+            print(f'{name},{us:.2f},"{derived}"')
+        print(f"# {bench} done in {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Table IV: LSH nearest-neighbour search accuracy (a) and times (b)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.lsh import LSHParams
+from repro.core.reuse_store import ReuseStore
+from repro.data import DATASETS, make_stream
+from .common import DATASET_ORDER, timeit
+
+
+def run(n_store: int = 4000, n_query: int = 400) -> list:
+    rows = []
+    # (a) accuracy: retrieved NN has the query's label (same object/scene)
+    from repro.data.synthetic import _labeler
+
+    for dataset in DATASET_ORDER:
+        spec = DATASETS[dataset]
+        label = _labeler(spec)
+        X, labels = make_stream(spec, n_store + n_query, seed=5)
+        for t in (1, 5, 10):
+            store = ReuseStore(LSHParams(dim=spec.dim, num_tables=t,
+                                         num_probes=8, seed=7),
+                               capacity=n_store + 8)
+            store.insert_batch(X[:n_store], list(labels[:n_store]))
+            hit = 0
+            for x, l in zip(X[n_store:], labels[n_store:]):
+                res, sim, idx = store.query(x, threshold=-1.0)
+                hit += int(idx is not None and res == l)
+            acc = 100.0 * hit / n_query
+            rows.append((f"nn_accuracy/{dataset}/tables={t}", 0.0,
+                         f"accuracy_pct={acc:.2f}"))
+    # (b) search time vs store size
+    spec = DATASETS["cctv1"]
+    X, labels = make_stream(spec, 22_000, seed=9)
+    for t in (1, 5, 10):
+        for n in (2_000, 10_000, 20_000):
+            store = ReuseStore(LSHParams(dim=spec.dim, num_tables=t,
+                                         num_probes=8, seed=7), capacity=n + 8)
+            store.insert_batch(X[:n], list(labels[:n]))
+            q = X[n: n + 50]
+            us = timeit(lambda: [store.query(x, -1.0) for x in q], n=5) / 50
+            rows.append((f"nn_search_time/tables={t}/store={n}", us,
+                         f"ms_per_search={us / 1e3:.3f}"))
+    return rows

@@ -1,0 +1,91 @@
+"""End-to-end training driver: train a ~100M-param qwen3-family model for a
+few hundred steps on a synthetic token stream with the full stack — AdamW
+(quantized moments optional), microbatching, async checkpointing, restart.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(The assigned full configs target the 256-chip production mesh; this driver
+uses a ~100M-param config of the same family so the loop runs end-to-end on
+whatever hardware is present, per the (b) deliverable.)
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ShapeSpec, get_arch
+from repro.launch.train import synthetic_batch
+from repro.models import build_model
+from repro.training import (
+    AsyncCheckpointer,
+    OptimizerConfig,
+    adamw_init,
+    latest_step,
+    make_train_step,
+    restore,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--width", type=int, default=512,
+                    help="d_model (512 => ~100M params; shrink for slow CPUs)")
+    args = ap.parse_args()
+
+    # ~100M params at the default width: qwen3 family, 8 layers, vocab 50k
+    w = args.width
+    cfg = dataclasses.replace(
+        get_arch("qwen3-1.7b"), n_layers=8, d_model=w, n_heads=8,
+        n_kv_heads=4, head_dim=w // 8, d_ff=4 * w, vocab_size=50_304,
+        dtype="float32", loss_chunk=128)
+    model = build_model(cfg)
+    n_params = cfg.flops_params()
+    print(f"arch family qwen3, ~{n_params / 1e6:.0f}M params")
+
+    shape = ShapeSpec("train", args.seq_len, args.batch, "train")
+    ocfg = OptimizerConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps,
+                           moment_dtype="bfloat16")
+    step_fn = jax.jit(make_train_step(model, ocfg, microbatches=2),
+                      donate_argnums=(0,))
+    ckpt = AsyncCheckpointer()
+
+    if latest_step(args.ckpt_dir) is not None:
+        target = jax.eval_shape(
+            lambda k: {"params": model.init(k),
+                       "opt": adamw_init(model.init(k), ocfg)},
+            jax.random.PRNGKey(0))
+        state = restore(args.ckpt_dir, target)
+        start = int(np.asarray(state["opt"]["step"]))
+        print(f"resumed from checkpoint at step {start}")
+    else:
+        params = model.init(jax.random.PRNGKey(0))
+        state = {"params": params, "opt": adamw_init(params, ocfg)}
+        start = 0
+
+    t0, first_loss = time.time(), None
+    for step in range(start, args.steps):
+        batch = synthetic_batch(model, cfg, shape, step % 64)  # repeat data
+        state, metrics = step_fn(state, batch)
+        if step % 25 == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            first_loss = first_loss or loss
+            print(f"step {step:4d}  loss {loss:.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.2f}  "
+                  f"lr {float(metrics['lr']):.2e}", flush=True)
+        if step and step % 100 == 0:
+            ckpt.save(state, args.ckpt_dir, step)
+    ckpt.wait()
+    final = float(metrics["loss"])
+    print(f"\n{args.steps - start} steps in {time.time() - t0:.0f}s; "
+          f"loss {first_loss:.3f} -> {final:.3f} "
+          f"({'LEARNING' if final < first_loss else 'check config'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Reservoir core: the paper's contribution as a composable library.
+
+Layers (paper §IV):
+  * ``lsh``            — cross-polytope / hyperplane LSH with multi-probe
+  * ``namespace``      — /<service>/task/<hash-of-input> task naming
+  * ``packets``        — Interest / Data semantics
+  * ``content_store``  — CS (in-network result reuse)
+  * ``pit``            — PIT with aggregation (in-flight dedup)
+  * ``fib`` / ``rfib`` — plain forwarding + reuse-aware bucket-range routing
+  * ``forwarder``      — the extended Interest pipeline (Fig. 5)
+  * ``reuse_store``    — EN-side LSH-indexed result store
+  * ``edge_node``      — EN services, TTC estimation, offload protocol bits
+  * ``network``        — discrete-event simulation of the whole framework
+  * ``topology``       — paper §V topologies
+"""
+from .content_store import ContentStore  # noqa: F401
+from .edge_node import EdgeNode, Service, TTCEstimator  # noqa: F401
+from .fib import FIB  # noqa: F401
+from .forwarder import Forwarder, ForwardAction  # noqa: F401
+from .lsh import LSH, LSHParams, get_lsh, normalize  # noqa: F401
+from .namespace import (  # noqa: F401
+    decode_task_hash,
+    encode_task_hash,
+    is_task_name,
+    make_exact_name,
+    make_task_name,
+    parse_task_name,
+)
+from .network import Metrics, PaperDelayModel, ReservoirNetwork, TaskRecord  # noqa: F401
+from .packets import Data, Interest  # noqa: F401
+from .pit import PendingInterestTable  # noqa: F401
+from .reuse_store import ReuseStore  # noqa: F401
+from .rfib import RFIB, RFibEntry, partition, rebalance  # noqa: F401
+from .similarity import cosine, get_similarity, structural  # noqa: F401
+from .topology import line_topology, paper_topology, testbed_topology  # noqa: F401

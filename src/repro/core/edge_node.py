@@ -1,0 +1,161 @@
+"""Edge Node (EN): service execution, reuse store, TTC estimation (§IV-C/E).
+
+An EN offers a set of *services*.  A received task is first matched against
+the reuse store; on a hit whose similarity clears the task's threshold the
+stored result is returned (reuse at the EN).  Otherwise the task is executed
+from scratch, its result stored, and — per the paper's offloading protocol
+(Fig. 3b/3c) — the EN returns a Time-To-Completion estimate so the user can
+fetch the result right when it is ready, plus a pull of large inputs.
+
+TTC is estimated from per-service execution statistics (EWMA) plus the
+current queue backlog, matching "ENs maintain statistics about the execution
+of the services over time".
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from .lsh import LSHParams
+from .packets import Data, Interest
+from .namespace import parse_task_name
+from .reuse_store import ReuseStore
+
+
+@dataclasses.dataclass
+class Service:
+    """An edge service: ``execute`` is the from-scratch path.
+
+    ``execute(input) -> result``; ``exec_time_s`` may be a constant or a
+    (lo, hi) range sampled per execution (the paper's TF models: 70–100 ms).
+    """
+
+    name: str
+    execute: Callable[[np.ndarray], Any]
+    exec_time_s: Any = (0.070, 0.100)
+    input_dim: int = 64
+    kind: str = "classification"  # or "generation", "embedding"
+
+    def sample_exec_time(self, rng: random.Random) -> float:
+        if isinstance(self.exec_time_s, (int, float)):
+            return float(self.exec_time_s)
+        lo, hi = self.exec_time_s
+        return rng.uniform(lo, hi)
+
+
+class TTCEstimator:
+    """EWMA service time + queue backlog -> time-to-completion estimate."""
+
+    def __init__(self, alpha: float = 0.2, initial_s: float = 0.085):
+        self.alpha = alpha
+        self.ewma: Dict[str, float] = {}
+        self.initial = initial_s
+
+    def observe(self, service: str, exec_time: float) -> None:
+        prev = self.ewma.get(service, exec_time)
+        self.ewma[service] = (1 - self.alpha) * prev + self.alpha * exec_time
+
+    def estimate(self, service: str, queue_len: int = 0) -> float:
+        base = self.ewma.get(service, self.initial)
+        return base * (1 + queue_len)
+
+
+@dataclasses.dataclass
+class TaskOutcome:
+    data: Data
+    reused: bool
+    similarity: float
+    exec_time_s: float  # 0.0 when reused
+    store_size: int
+
+
+class EdgeNode:
+    def __init__(
+        self,
+        prefix: str,
+        lsh_params: LSHParams,
+        store_capacity: int = 100_000,
+        similarity: str = "cosine",
+        seed: int = 0,
+    ):
+        self.prefix = prefix.rstrip("/")
+        self.lsh_params = lsh_params
+        self.services: Dict[str, Service] = {}
+        self.stores: Dict[str, ReuseStore] = {}
+        self.ttc = TTCEstimator()
+        self.store_capacity = store_capacity
+        self.similarity = similarity
+        self.queue_len = 0
+        self._rng = random.Random(seed)
+        self.stats = {"reused": 0, "executed": 0, "unknown_service": 0}
+
+    def register(self, service: Service) -> None:
+        name = service.name.strip("/")
+        self.services[name] = service
+        self.stores[name] = ReuseStore(
+            self.lsh_params, capacity=self.store_capacity, similarity=self.similarity
+        )
+
+    # ------------------------------------------------------------- task path
+    def handle_task(self, interest: Interest, now: float = 0.0) -> TaskOutcome:
+        """Full task treatment (reuse check -> execute if needed)."""
+        service_name, kw, _ = parse_task_name(interest.name)
+        svc = self.services.get(service_name.strip("/"))
+        if svc is None:
+            self.stats["unknown_service"] += 1
+            raise KeyError(f"EN {self.prefix} does not offer {service_name}")
+        emb = np.asarray(interest.app_params["input"], np.float32)
+        threshold = float(interest.app_params.get("threshold", 0.0))
+        store = self.stores[svc.name.strip("/")]
+        if kw == "task":  # reuse-eligible (opt-out tasks use 'exact')
+            result, sim, idx = store.query(emb, threshold)
+            if idx is not None:
+                self.stats["reused"] += 1
+                data = Data(
+                    interest.name,
+                    content=result,
+                    meta={"reuse": "en", "similarity": sim, "en": self.prefix},
+                )
+                return TaskOutcome(data, True, sim, 0.0, len(store))
+        else:
+            sim = -1.0
+        # Execute from scratch, record, store for future reuse.
+        exec_time = svc.sample_exec_time(self._rng)
+        result = svc.execute(emb)
+        self.ttc.observe(svc.name.strip("/"), exec_time)
+        if kw == "task":
+            store.insert(emb, result)
+        self.stats["executed"] += 1
+        data = Data(
+            interest.name,
+            content=result,
+            meta={"reuse": None, "en": self.prefix},
+        )
+        return TaskOutcome(data, False, sim, exec_time, len(store))
+
+    def estimate_ttc(self, service: str) -> float:
+        return self.ttc.estimate(service.strip("/"), self.queue_len)
+
+    # --------------------------------------------------------- protocol bits
+    def make_ttc_response(self, interest: Interest) -> Data:
+        """Fig. 3b: no reuse possible -> Data carrying (TTC, EN prefix)."""
+        service_name, _, _ = parse_task_name(interest.name)
+        return Data(
+            interest.name,
+            content={"ttc": self.estimate_ttc(service_name), "en_prefix": self.prefix},
+            meta={"reuse": None, "control": "ttc", "cacheable": False},
+        )
+
+    def result_name(self, interest: Interest) -> str:
+        """Name of the deferred result fetch: /<EN-prefix>/<svc>/task/<hash>."""
+        return f"{self.prefix}{interest.name}"
+
+    def input_pull_interests(self, interest: Interest, chunk_bytes: int = 8192):
+        """Fig. 3c: pull a large input from the user in chunks."""
+        size = int(interest.app_params.get("input_size", 0))
+        user = interest.app_params.get("user_prefix", "/user")
+        nchunks = max(1, -(-size // chunk_bytes))
+        return [Interest(f"{user}/input/{interest.nonce}/{i}") for i in range(nchunks)]

@@ -1,0 +1,60 @@
+"""Pending Interest Table (PIT) with aggregation (paper §II).
+
+Simultaneously offloaded similar tasks share a name, so all but the first are
+*aggregated*: they leave state but are not forwarded; one Data satisfies all.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from .packets import Interest
+
+
+@dataclasses.dataclass
+class PitEntry:
+    name: str
+    in_faces: List[Tuple[int, int]] = dataclasses.field(default_factory=list)  # (face, nonce)
+    expiry: float = 0.0
+
+
+class PendingInterestTable:
+    def __init__(self, lifetime_s: float = 4.0):
+        self.lifetime_s = lifetime_s
+        self._table: Dict[str, PitEntry] = {}
+        self.aggregations = 0
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+    def insert(self, interest: Interest, in_face: int, now: float) -> bool:
+        """Returns True if this is a NEW entry (Interest must be forwarded);
+        False if aggregated with an existing pending entry."""
+        entry = self._table.get(interest.name)
+        if entry is not None and now <= entry.expiry:
+            if (in_face, interest.nonce) not in entry.in_faces:
+                entry.in_faces.append((in_face, interest.nonce))
+            entry.expiry = now + self.lifetime_s
+            self.aggregations += 1
+            return False
+        self._table[interest.name] = PitEntry(
+            interest.name, [(in_face, interest.nonce)], now + self.lifetime_s
+        )
+        return True
+
+    def satisfy(self, name: str) -> Optional[List[int]]:
+        """Data arrived: pop the entry, return downstream faces to send to."""
+        entry = self._table.pop(name, None)
+        if entry is None:
+            return None
+        faces: List[int] = []
+        for face, _ in entry.in_faces:
+            if face not in faces:
+                faces.append(face)
+        return faces
+
+    def expire(self, now: float) -> int:
+        stale = [n for n, e in self._table.items() if now > e.expiry]
+        for n in stale:
+            del self._table[n]
+        return len(stale)

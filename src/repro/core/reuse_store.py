@@ -1,0 +1,153 @@
+"""EN-side reuse store: LSH-indexed storage of executed tasks (paper §IV-E).
+
+Stores ``(input embedding, result)`` of every from-scratch execution.  For an
+incoming task it multi-probes the LSH tables (FALCONN-style, see ``lsh.py``),
+gathers candidate previous tasks, and returns the nearest neighbour by the
+configured similarity.  The EN reuses that result iff the similarity exceeds
+the task-carried threshold.
+
+Capacity-bounded with LRU eviction (the paper's §V-C cache-size study applies
+the same policy at user devices, forwarders, and ENs).  For large stores the
+candidate-scoring matmul is offloaded to the ``sim_topk`` Pallas kernel.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+from .lsh import LSH, LSHParams, get_lsh, normalize
+from .similarity import get_similarity
+
+
+class ReuseStore:
+    def __init__(
+        self,
+        lsh_params: LSHParams,
+        capacity: int = 100_000,
+        similarity: str = "cosine",
+        use_kernel_threshold: int = 4096,
+    ):
+        self.lsh: LSH = get_lsh(lsh_params)
+        self.params = lsh_params
+        self.capacity = int(capacity)
+        self.similarity_name = similarity
+        self.similarity = get_similarity(similarity)
+        self.use_kernel_threshold = use_kernel_threshold
+        d = lsh_params.dim
+        self._emb = np.zeros((0, d), np.float32)
+        self._results: List[Any] = []
+        self._buckets_of: List[np.ndarray] = []  # per slot: (T,) bucket ids
+        self._free: List[int] = []
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        self._tables: List[dict] = [dict() for _ in range(lsh_params.num_tables)]
+        self.inserts = 0
+        self.queries = 0
+        self.candidate_counts: List[int] = []
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    # ---------------------------------------------------------------- insert
+    def _alloc(self) -> int:
+        if self._free:
+            return self._free.pop()
+        idx = self._emb.shape[0]
+        grow = max(256, idx)
+        self._emb = np.concatenate([self._emb, np.zeros((grow, self._emb.shape[1]), np.float32)])
+        self._results.extend([None] * grow)
+        self._buckets_of.extend([None] * grow)
+        self._free.extend(reversed(range(idx + 1, idx + grow)))
+        return idx
+
+    def _evict_lru(self) -> None:
+        idx, _ = self._lru.popitem(last=False)
+        for t, b in enumerate(self._buckets_of[idx]):
+            lst = self._tables[t].get(int(b))
+            if lst is not None:
+                try:
+                    lst.remove(idx)
+                except ValueError:
+                    pass
+                if not lst:
+                    del self._tables[t][int(b)]
+        self._results[idx] = None
+        self._buckets_of[idx] = None
+        self._free.append(idx)
+
+    def insert(self, embedding: np.ndarray, result: Any) -> int:
+        emb = normalize(np.asarray(embedding, np.float32).reshape(-1))
+        while len(self._lru) >= self.capacity > 0:
+            self._evict_lru()
+        idx = self._alloc()
+        self._emb[idx] = emb
+        self._results[idx] = result
+        buckets = self.lsh.hash_one(emb)
+        self._buckets_of[idx] = buckets
+        for t, b in enumerate(buckets):
+            self._tables[t].setdefault(int(b), []).append(idx)
+        self._lru[idx] = None
+        self.inserts += 1
+        return idx
+
+    def insert_batch(self, embeddings: np.ndarray, results: List[Any]) -> None:
+        """Bulk insert: one batched LSH hash, then table updates."""
+        embs = normalize(np.asarray(embeddings, np.float32))
+        buckets = np.asarray(self.lsh.hash_batch(embs))  # (N, T)
+        for emb, res, bks in zip(embs, results, buckets):
+            while len(self._lru) >= self.capacity > 0:
+                self._evict_lru()
+            idx = self._alloc()
+            self._emb[idx] = emb
+            self._results[idx] = res
+            self._buckets_of[idx] = bks
+            for t, b in enumerate(bks):
+                self._tables[t].setdefault(int(b), []).append(idx)
+            self._lru[idx] = None
+            self.inserts += 1
+
+    # ----------------------------------------------------------------- query
+    def candidates(self, embedding: np.ndarray) -> List[int]:
+        emb = normalize(np.asarray(embedding, np.float32).reshape(-1))
+        probes = self.lsh.probe_one(emb)  # (T, P)
+        seen: "OrderedDict[int, None]" = OrderedDict()
+        for t in range(probes.shape[0]):
+            tab = self._tables[t]
+            for b in probes[t]:
+                for idx in tab.get(int(b), ()):
+                    seen.setdefault(idx, None)
+        return list(seen)
+
+    def query(
+        self, embedding: np.ndarray, threshold: float = 0.0
+    ) -> Tuple[Optional[Any], float, Optional[int]]:
+        """Nearest stored task; returns (result, similarity, idx) or misses."""
+        self.queries += 1
+        cand = self.candidates(embedding)
+        self.candidate_counts.append(len(cand))
+        if not cand:
+            return None, -1.0, None
+        emb = normalize(np.asarray(embedding, np.float32).reshape(-1))
+        cand_arr = np.asarray(cand, np.int64)
+        store = self._emb[cand_arr]
+        if len(cand) >= self.use_kernel_threshold and self.similarity_name == "cosine":
+            from repro.kernels import ops as _kops  # lazy: optional accelerated path
+
+            sims = np.asarray(_kops.similarity_scores(emb[None], store))[0]
+        else:
+            sims = self.similarity(emb, store)
+        best = int(np.argmax(sims))
+        idx = int(cand_arr[best])
+        sim = float(sims[best])
+        if sim < threshold:
+            return None, sim, None
+        self._lru.move_to_end(idx)  # reuse refreshes LRU position
+        return self._results[idx], sim, idx
+
+    # ------------------------------------------------------------ inspection
+    def embedding_of(self, idx: int) -> np.ndarray:
+        return self._emb[idx]
+
+    def result_of(self, idx: int) -> Any:
+        return self._results[idx]

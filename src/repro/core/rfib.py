@@ -1,0 +1,145 @@
+"""Reuse FIB (rFIB) — the paper's core forwarder extension (§IV-D, Fig. 4).
+
+Each entry maps a *service* plus a consecutive range of LSH bucket indices
+(per table) to the EN that handles those buckets, its outgoing interface(s),
+and the per-table index size in bytes.  Lookup decodes the per-table bucket
+indices from the task name's hash component, finds the EN whose range covers
+each table's index, and picks the EN handling the **majority** of the indexed
+buckets (maximising the chance of reuse).  The lookup happens once per task;
+the result is attached as the Interest's forwarding hint.
+
+Consecutive ranges also serve as this framework's elastic-scaling unit: when
+ENs join/leave, ranges are re-split (``partition``/``rebalance``), exactly the
+consistent-range scheme described in DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .namespace import decode_task_hash
+
+
+@dataclasses.dataclass
+class RFibEntry:
+    service: str
+    # per-table inclusive bucket ranges: table index -> (lo, hi)
+    ranges: Dict[int, Tuple[int, int]]
+    en_prefix: str
+    faces: List[int]
+    index_size_bytes: int = 1
+
+    def covers(self, table: int, bucket: int) -> bool:
+        r = self.ranges.get(table)
+        return r is not None and r[0] <= bucket <= r[1]
+
+    def size_bytes(self) -> int:
+        """On-forwarder footprint estimate (for the paper's rFIB-size study)."""
+        return (
+            len(self.service)
+            + len(self.en_prefix)
+            + len(self.ranges) * (1 + 2 * self.index_size_bytes)  # table id + lo/hi
+            + len(self.faces) * 2
+            + 1  # index size field
+        )
+
+
+class RFIB:
+    def __init__(self):
+        self._by_service: Dict[str, List[RFibEntry]] = {}
+        self.lookups = 0
+
+    def __len__(self) -> int:
+        return sum(len(v) for v in self._by_service.values())
+
+    def insert(self, entry: RFibEntry) -> None:
+        self._by_service.setdefault(entry.service.strip("/"), []).append(entry)
+
+    def remove_en(self, service: str, en_prefix: str) -> None:
+        svc = service.strip("/")
+        entries = self._by_service.get(svc, [])
+        entries[:] = [e for e in entries if e.en_prefix != en_prefix]
+
+    def entries(self, service: str) -> List[RFibEntry]:
+        return self._by_service.get(service.strip("/"), [])
+
+    def index_size(self, service: str) -> Optional[int]:
+        entries = self.entries(service)
+        return entries[0].index_size_bytes if entries else None
+
+    def size_bytes(self) -> int:
+        return sum(e.size_bytes() for v in self._by_service.values() for e in v)
+
+    def lookup(self, service: str, hash_component: str) -> Optional[RFibEntry]:
+        """Majority vote over tables (paper Fig. 4 example: 2-of-3 -> EN1)."""
+        self.lookups += 1
+        entries = self.entries(service)
+        if not entries:
+            return None
+        buckets = decode_task_hash(hash_component, entries[0].index_size_bytes)
+        votes: Dict[str, int] = {}
+        first: Dict[str, RFibEntry] = {}
+        for table, bucket in enumerate(buckets):
+            for e in entries:
+                if e.covers(table, bucket):
+                    votes[e.en_prefix] = votes.get(e.en_prefix, 0) + 1
+                    first.setdefault(e.en_prefix, e)
+                    break
+        if not votes:
+            return None
+        # majority; ties broken by EN prefix for determinism
+        winner = max(votes.items(), key=lambda kv: (kv[1], kv[0]))[0]
+        return first[winner]
+
+
+def partition(
+    service: str,
+    en_prefixes: Sequence[str],
+    faces: Dict[str, List[int]],
+    num_tables: int,
+    num_buckets: int,
+    index_size_bytes: int = 1,
+    weights: Optional[Sequence[float]] = None,
+) -> List[RFibEntry]:
+    """Equally (or weighted) distribute consecutive bucket ranges among ENs.
+
+    Matches the paper's evaluation setup ("we equally distribute the LSH
+    buckets between the ENs") and Fig. 4's consecutive-block layout.
+    """
+    n = len(en_prefixes)
+    if n == 0:
+        return []
+    if weights is None:
+        weights = [1.0] * n
+    total = sum(weights)
+    bounds = [0]
+    acc = 0.0
+    for w in weights:
+        acc += w
+        bounds.append(round(num_buckets * acc / total))
+    bounds[-1] = num_buckets
+    out = []
+    for i, en in enumerate(en_prefixes):
+        lo, hi = bounds[i], bounds[i + 1] - 1
+        if hi < lo:
+            continue
+        out.append(
+            RFibEntry(
+                service=service.strip("/"),
+                ranges={t: (lo, hi) for t in range(num_tables)},
+                en_prefix=en,
+                faces=list(faces.get(en, [])),
+                index_size_bytes=index_size_bytes,
+            )
+        )
+    return out
+
+
+def rebalance(rfib: RFIB, service: str, en_prefixes: Sequence[str],
+              faces: Dict[str, List[int]], num_tables: int, num_buckets: int,
+              index_size_bytes: int = 1) -> None:
+    """Elastic re-partition after EN join/leave: replace the service's entries."""
+    svc = service.strip("/")
+    rfib._by_service[svc] = partition(
+        svc, en_prefixes, faces, num_tables, num_buckets, index_size_bytes
+    )

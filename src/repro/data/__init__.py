@@ -1,0 +1,1 @@
+from .synthetic import DATASETS, DatasetSpec, make_stream, dataset_service  # noqa: F401

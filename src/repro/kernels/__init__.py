@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for Reservoir's compute hot spots.
+
+  * ``lsh_hash``         — fused cross-polytope hashing (per-request)
+  * ``sim_topk``         — streaming nearest-neighbour over the reuse store
+  * ``flash_attention``  — prefill attention (online softmax, KV streaming)
+  * ``decode_attention`` — 1-query decode vs huge KV caches (flash-decode)
+
+Each <name>.py holds the pl.pallas_call + BlockSpec tiling; ``ops.py`` the
+jit'd wrappers; ``ref.py`` the pure-jnp oracles used by the test sweeps.
+"""
+from . import ops, ref  # noqa: F401

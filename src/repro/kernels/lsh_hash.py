@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: fused cross-polytope LSH hashing.
+
+The per-request hot spot of Reservoir at fleet scale (paper Table III: 0.4 to
+3.3 ms *per task* on a CPU).  On TPU the whole hash is one fused pass:
+
+    proj = x_tile @ R[t, k]           (MXU: bB x D times D x D)
+    vid  = argmax(|proj|) with sign   (VPU, in VMEM)
+
+Grid: (B / bB, T, K).  Each step loads one (D, D) rotation into VMEM, hits
+the MXU once, and reduces in-register — no HBM round-trip for the projection.
+Tile sizes are 128-aligned for the MXU; D itself is the embedding dim
+(128/256 in deployments, zero-padded by ops.py otherwise).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lsh_hash_kernel(x_ref, rot_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)           # (bB, D)
+    rot = rot_ref[0, 0].astype(jnp.float32)      # (D, D)
+    # proj[b, d] = sum_e R[d, e] x[b, e]  (matches core.lsh / ref einsum)
+    proj = jax.lax.dot_general(
+        x, rot, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (bB, D) on the MXU
+    absp = jnp.abs(proj)
+    vid = jnp.argmax(absp, axis=-1)              # (bB,)
+    mx = jnp.max(absp, axis=-1)
+    sign_neg = jnp.take_along_axis(proj, vid[:, None], axis=-1)[:, 0] < 0
+    d = proj.shape[-1]
+    out = jnp.where(sign_neg, vid + d, vid).astype(jnp.int32)
+    del mx
+    out_ref[...] = out[:, None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def lsh_hash(x: jax.Array, rotations: jax.Array, *, block_b: int = 128,
+             interpret: bool = True) -> jax.Array:
+    """x: (B, D) f32/bf16; rotations: (T, K, D, D) -> (B, T, K) int32 ids."""
+    B, D = x.shape
+    T, K = rotations.shape[:2]
+    bB = min(block_b, B)
+    grid = (pl.cdiv(B, bB), T, K)
+    return pl.pallas_call(
+        _lsh_hash_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bB, D), lambda b, t, k: (b, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, t, k: (t, k, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bB, 1, 1), lambda b, t, k: (b, t, k)),
+        out_shape=jax.ShapeDtypeStruct((B, T, K), jnp.int32),
+        interpret=interpret,
+    )(x, rotations)

@@ -1,0 +1,91 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to hardware-aligned tiles, platform dispatch (interpret=True
+on CPU — the kernels target TPU; interpret mode executes the kernel body for
+correctness), and dtype plumbing.  Every op has a pure-jnp oracle in
+``ref.py``; tests sweep shapes/dtypes against it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .decode_attention import decode_attention as _decode_kernel
+from .flash_attention import flash_attention as _flash_kernel
+from .lsh_hash import lsh_hash as _lsh_kernel
+from .sim_topk import sim_top1 as _sim_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> Tuple[jax.Array, int]:
+    n = x.shape[axis]
+    target = -(-n // mult) * mult
+    if target == n:
+        return x, n
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - n)
+    return jnp.pad(x, pad), n
+
+
+# ------------------------------------------------------------------- lsh_hash
+def lsh_hash_ids(x: jax.Array, rotations: jax.Array) -> jax.Array:
+    """(B, D) x (T, K, D, D) -> (B, T, K) cross-polytope vertex ids."""
+    xp, b = _pad_to(x, 0, 8)
+    out = _lsh_kernel(xp, rotations, interpret=_interpret())
+    return out[:b]
+
+
+def lsh_buckets(x: jax.Array, rotations: jax.Array, num_buckets: int) -> jax.Array:
+    """Fused hash + per-table bucket mixing -> (B, T) int32."""
+    vids = lsh_hash_ids(x, rotations)
+    radix = 2 * x.shape[-1]
+    val = jnp.zeros(vids.shape[:-1], jnp.int32)
+    for kk in range(vids.shape[-1]):
+        val = (val * radix + vids[..., kk]) % num_buckets
+    return val
+
+
+# ------------------------------------------------------------------- sim_topk
+def similarity_scores(q: jax.Array, store: jax.Array) -> jax.Array:
+    """Dense cosine scores (small candidate sets); jnp path, kernels handle
+    the streaming large-store case via ``nearest_neighbor``."""
+    return ref.similarity_scores_ref(q, store)
+
+
+def nearest_neighbor(q: jax.Array, store: jax.Array,
+                     n_valid: Optional[jax.Array] = None):
+    """Streaming top-1 over a (large, unit-normalised) store."""
+    qp, nq = _pad_to(q, 0, 8)
+    sp, ns = _pad_to(store, 0, 8)
+    nv = jnp.asarray(ns if n_valid is None else n_valid, jnp.int32)
+    val, idx = _sim_kernel(qp, sp, nv, interpret=_interpret())
+    return val[:nq], idx[:nq]
+
+
+# ------------------------------------------------------------ flash attention
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None, block_q=128, block_k=128):
+    """(B,S,H,D) x (B,T,KV,D)^2 -> (B,S,H,D); TPU flash, interpret on CPU."""
+    return _flash_kernel(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=_interpret())
+
+
+def decode_attention(q, k, v, kv_len, *, softcap=None, scale=None,
+                     block_k=512):
+    """(B,H,D) x (B,T,KV,D)^2 + (B,) -> (B,H,D)."""
+    return _decode_kernel(
+        q, k, v, kv_len, softcap=softcap, scale=scale, block_k=block_k,
+        interpret=_interpret())

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------------- lsh_hash
+def lsh_hash_ref(x: jax.Array, rotations: jax.Array) -> jax.Array:
+    """Cross-polytope vertex ids.  x: (B, D); rotations: (T, K, D, D).
+
+    Returns (B, T, K) int32 vertex ids in [0, 2D): argmax |R x| with a sign
+    bit (v < D means +e_v, v >= D means -e_{v-D}).
+    """
+    proj = jnp.einsum("tkde,be->btkd", rotations.astype(jnp.float32),
+                      x.astype(jnp.float32))
+    scores = jnp.concatenate([proj, -proj], axis=-1)
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+
+# ----------------------------------------------------------- similarity_topk
+def similarity_scores_ref(q: jax.Array, store: jax.Array) -> jax.Array:
+    """Cosine similarity: q (Q, D) x store (N, D) -> (Q, N) f32."""
+    qf = q.astype(jnp.float32)
+    sf = store.astype(jnp.float32)
+    qn = qf / jnp.maximum(jnp.linalg.norm(qf, axis=-1, keepdims=True), 1e-12)
+    sn = sf / jnp.maximum(jnp.linalg.norm(sf, axis=-1, keepdims=True), 1e-12)
+    return qn @ sn.T
+
+
+def sim_top1_ref(q: jax.Array, store: jax.Array, valid_n: Optional[int] = None):
+    """Nearest neighbour: returns (best_sim (Q,), best_idx (Q,))."""
+    s = similarity_scores_ref(q, store)
+    if valid_n is not None:
+        mask = jnp.arange(s.shape[1]) < valid_n
+        s = jnp.where(mask[None, :], s, -jnp.inf)
+    return jnp.max(s, axis=-1), jnp.argmax(s, axis=-1).astype(jnp.int32)
+
+
+# ------------------------------------------------------------ flash attention
+def flash_attention_ref(
+    q: jax.Array,                  # (B, S, H, D)
+    k: jax.Array,                  # (B, T, KV, D)
+    v: jax.Array,                  # (B, T, KV, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, S, KV, G, D).astype(jnp.float32)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    sidx = jnp.arange(S)[:, None]
+    tidx = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= tidx <= sidx
+    if window is not None:
+        mask &= tidx > sidx - window
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+# ------------------------------------------------------------ decode attention
+def decode_attention_ref(
+    q: jax.Array,                  # (B, H, D) one query per row
+    k: jax.Array,                  # (B, T, KV, D)
+    v: jax.Array,                  # (B, T, KV, D)
+    kv_len: jax.Array,             # (B,) valid cache length
+    *,
+    scale: Optional[float] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    B, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    mask = jnp.arange(T)[None, :] < kv_len[:, None]   # (B, T)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

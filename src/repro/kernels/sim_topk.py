@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: streaming nearest-neighbour search (cosine top-1).
+
+The EN-side reuse query (paper Table IVb: 0.09-4.4 ms per search on CPU).
+Inputs are L2-normalised (the reuse store normalises on insert), so cosine
+similarity is a plain matmul.  Grid: (Q / bQ, N / bN) with N innermost —
+TPU grids execute sequentially, so a VMEM scratch carries the running
+(best value, best index) across N tiles and the result is written once at
+the last tile.  This streams an arbitrarily large store through VMEM with
+O(bQ) state — the kernel analogue of multi-probe "search only what's needed".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sim_top1_kernel(q_ref, s_ref, nvalid_ref, val_ref, idx_ref,
+                     best_val, best_idx, *, block_n: int):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_val[...] = jnp.full_like(best_val, -jnp.inf)
+        best_idx[...] = jnp.zeros_like(best_idx)
+
+    q = q_ref[...].astype(jnp.float32)            # (bQ, D)
+    s = s_ref[...].astype(jnp.float32)            # (bN, D)
+    scores = jax.lax.dot_general(
+        q, s, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)       # (bQ, bN)
+    base = j * block_n
+    cols = base + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    valid = cols < nvalid_ref[0]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    tile_val = jnp.max(scores, axis=-1)           # (bQ,)
+    tile_arg = jnp.argmax(scores, axis=-1).astype(jnp.int32) + base
+    better = tile_val > best_val[...]
+    best_val[...] = jnp.where(better, tile_val, best_val[...])
+    best_idx[...] = jnp.where(better, tile_arg, best_idx[...])
+
+    @pl.when(j == nj - 1)
+    def _done():
+        val_ref[...] = best_val[...]
+        idx_ref[...] = best_idx[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_n", "interpret"))
+def sim_top1(q: jax.Array, store: jax.Array, n_valid: jax.Array | None = None,
+             *, block_q: int = 128, block_n: int = 512,
+             interpret: bool = True):
+    """q: (Q, D); store: (N, D), rows L2-normalised. -> (best (Q,), idx (Q,)).
+
+    ``n_valid`` masks the tail of a pre-allocated (ring-buffer) store.
+    """
+    Q, D = q.shape
+    N = store.shape[0]
+    bQ, bN = min(block_q, Q), min(block_n, N)
+    nv = jnp.asarray([N if n_valid is None else n_valid], jnp.int32)
+    grid = (pl.cdiv(Q, bQ), pl.cdiv(N, bN))
+    val, idx = pl.pallas_call(
+        functools.partial(_sim_top1_kernel, block_n=bN),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bQ, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((bN, D), lambda i, j: (j, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((bQ,), lambda i, j: (i,)),
+            pl.BlockSpec((bQ,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q,), jnp.float32),
+            jax.ShapeDtypeStruct((Q,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bQ,), jnp.float32),
+            pltpu.VMEM((bQ,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, store, nv)
+    return val, idx

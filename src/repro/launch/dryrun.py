@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the real step function (train_step with optimizer,
+or prefill/decode serve_step with KV caches), lowers it with ShapeDtypeStruct
+stand-ins (no allocation), compiles it for the production mesh, and records:
+
+  * memory_analysis()  — per-device argument/output/temp bytes (fits check)
+  * cost_analysis()    — HLO FLOPs + bytes for the §Roofline terms
+  * collective bytes   — parsed from the compiled HLO per collective kind
+
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>.json; the
+roofline benchmark and EXPERIMENTS.md §Dry-run read them.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--cells a:s,a:s,...]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_SHAPES, ARCHS, get_arch, get_shape
+from repro.launch import hlo_analysis
+from repro.launch import shardings as shl
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.partitioning import use_mesh
+from repro.training import OptimizerConfig, adamw_init, make_train_step
+
+HW = {"peak_flops_bf16": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+
+def _serve_params(model, cfg):
+    """Serving params are the bf16 inference checkpoint (no f32 master):
+    halves FSDP gather traffic + weight HBM for prefill/decode cells."""
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    dt = jnp.dtype(cfg.dtype)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dt)
+        if s.dtype == jnp.float32 and len(s.shape) >= 2 else s, shapes)
+
+
+def optimized_settings(arch_cfg, shape_kind: str = "prefill"):
+    """Beyond-paper optimized defaults found by the §Perf hillclimb.
+
+    Blocked attention is applied to PREFILL cells only: §Perf measured small
+    regressions on some train cells (the scan-attention backward re-reads
+    block buffers), so training keeps the naive path by default.
+    """
+    ov = {}
+    mode = "fsdp"
+    if arch_cfg.family == "ssm":
+        ov.update(mlstm_impl="chunked", scan_chunk=64)
+    elif shape_kind == "prefill":
+        ov["attn_impl"] = "blocked"
+    if arch_cfg.n_experts:
+        mode = "ep"
+        ov["moe_dispatch_groups"] = 16
+    return ov, mode
+
+
+def _microbatches(arch_cfg, shape) -> int:
+    if shape.kind != "train":
+        return 1
+    # keep per-device live activations ~O(GB): bigger models -> more splits
+    if arch_cfg.d_model >= 3584:
+        return 8
+    if arch_cfg.d_model >= 2048:
+        return 4
+    return 2
+
+
+def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
+               mode: str = "fsdp", moment_dtype: str = "float32",
+               rules: Optional[dict] = None,
+               microbatches: Optional[int] = None,
+               overrides: Optional[dict] = None) -> dict:
+    import dataclasses as _dc
+
+    cfg = get_arch(arch_name)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    ocfg = OptimizerConfig(moment_dtype=moment_dtype)
+    if mode == "ep" and rules is None:
+        rules = {"experts": "data"}  # tokens move, expert weights stay
+    result = {
+        "arch": cfg.name, "shape": shape.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "mode": mode, "moment_dtype": moment_dtype,
+        "kind": shape.kind,
+    }
+    t0 = time.time()
+    with use_mesh(mesh, rules):
+        if shape.kind == "train":
+            mb = microbatches or _microbatches(cfg, shape)
+            result["microbatches"] = mb
+            state_shapes = jax.eval_shape(
+                lambda k: {"params": model.init(k),
+                           "opt": adamw_init(model.init(k), ocfg)},
+                jax.random.PRNGKey(0))
+            state_shd = shl.state_shardings(state_shapes, mesh, mode, cfg.family)
+            step = make_train_step(model, ocfg, microbatches=mb,
+                                   grad_shardings=state_shd["params"],
+                                   compute_dtype=cfg.dtype)
+            batch_specs = model.input_specs(shape)
+            batch_shd = shl.batch_shardings(batch_specs, mesh)
+            jitted = jax.jit(step, in_shardings=(state_shd, batch_shd),
+                             out_shardings=(state_shd, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shapes, batch_specs)
+        elif shape.kind == "prefill":
+            params_shapes = _serve_params(model, cfg)
+            params_shd = shl.state_shardings(params_shapes, mesh, mode, cfg.family)
+            batch_specs = model.input_specs(shape)
+            batch_shd = shl.batch_shardings(batch_specs, mesh)
+            max_len = shape.seq_len
+
+            def prefill_step(params, batch):
+                return model.prefill(params, batch, max_len)
+
+            jitted = jax.jit(prefill_step, in_shardings=(params_shd, batch_shd))
+            lowered = jitted.lower(params_shapes, batch_specs)
+        else:  # decode
+            params_shapes = _serve_params(model, cfg)
+            params_shd = shl.state_shardings(params_shapes, mesh, mode, cfg.family)
+            cache_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+            cache_shd = shl.cache_shardings(cache_specs, mesh, cfg.family)
+            tok_specs = model.input_specs(shape)
+            tok_shd = shl.batch_shardings(tok_specs, mesh)
+            pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+            def serve_step(params, tokens, cache, pos):
+                return model.decode_step(params, tokens, cache, pos)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(params_shd, tok_shd["tokens"], cache_shd,
+                              shl.replicated(mesh)),
+                out_shardings=(None, cache_shd),
+                donate_argnums=(2,))
+            lowered = jitted.lower(params_shapes, tok_specs["tokens"],
+                                   cache_specs, pos_spec)
+        result["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 2)
+
+        mem = compiled.memory_analysis()
+        print(mem)
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                result[attr] = int(v)
+        cost = compiled.cost_analysis()
+        print({k: v for k, v in cost.items() if k in ("flops", "bytes accessed")})
+        # XLA counts while bodies once; keep raw numbers for reference but
+        # use the trip-count-aware walk (hlo_analysis) for the roofline.
+        result["xla_flops_raw"] = float(cost.get("flops", 0.0))
+        result["xla_bytes_raw"] = float(cost.get("bytes accessed", 0.0))
+        t2 = time.time()
+        prof = hlo_analysis.analyze(compiled.as_text())
+        result["analysis_s"] = round(time.time() - t2, 2)
+        result["hlo_flops"] = prof["flops"]
+        result["hlo_bytes"] = prof["bytes"]
+        result["collectives"] = prof["collectives"]
+        result["collective_counts"] = prof["collective_counts"]
+        result["collective_bytes"] = prof["collective_bytes"]
+    return result
+
+
+def roofline_terms(result: dict, model_flops: float) -> dict:
+    chips = result["chips"]
+    # cost_analysis on the SPMD-partitioned module reports PER-DEVICE flops
+    compute_s = result["hlo_flops"] / HW["peak_flops_bf16"]
+    memory_s = result["hlo_bytes"] / HW["hbm_bw"]
+    coll_s = result["collective_bytes"] / HW["ici_bw"]
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s), ("collective", coll_s)),
+        key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flops_frac": (model_flops / chips) / max(result["hlo_flops"], 1.0),
+    }
+
+
+def model_flops_for(cfg, shape) -> float:
+    n = cfg.flops_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch  # one decoded token per row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--cells", type=str, default=None,
+                    help="comma-separated arch:shape pairs")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--mode", choices=("tp", "fsdp", "ep"), default="fsdp")
+    ap.add_argument("--moment-dtype", default="float32")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--override", action="append", default=[],
+                    help="ArchConfig overrides, e.g. attn_impl=blocked")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the §Perf hillclimb's per-arch settings")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        key, val = ov.split("=", 1)
+        for cast in (int, float):
+            try:
+                val = cast(val)
+                break
+            except ValueError:
+                continue
+        overrides[key] = val
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in ALL_SHAPES:
+                cells.append((a, s.name))
+    elif args.cells:
+        for c in args.cells.split(","):
+            a, s = c.split(":")
+            cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all or --cells"
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{get_arch(arch).name.replace('/', '_')}__{shape}__{'2x16x16' if mp else '16x16'}"
+            out_path = os.path.join(args.out, tag + ".json")
+            print(f"=== {tag} ===", flush=True)
+            try:
+                cell_over, cell_mode = dict(overrides), args.mode
+                if args.optimized:
+                    auto_over, auto_mode = optimized_settings(
+                        get_arch(arch), get_shape(shape).kind)
+                    cell_over = {**auto_over, **cell_over}
+                    if auto_mode != "fsdp":
+                        cell_mode = auto_mode
+                res = lower_cell(arch, shape, multi_pod=mp, mode=cell_mode,
+                                 moment_dtype=args.moment_dtype,
+                                 microbatches=args.microbatches,
+                                 overrides=cell_over)
+                res["roofline"] = roofline_terms(
+                    res, model_flops_for(get_arch(arch), get_shape(shape)))
+                with open(out_path, "w") as f:
+                    json.dump(res, f, indent=1)
+                print(f"    ok: compile={res['compile_s']}s "
+                      f"dominant={res['roofline']['dominant']}", flush=True)
+            except Exception as e:  # noqa: BLE001 — record, continue grid
+                failures.append((tag, repr(e)))
+                with open(out_path + ".err", "w") as f:
+                    f.write(traceback.format_exc())
+                print(f"    FAILED: {e}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("\nall cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

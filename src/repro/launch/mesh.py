@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: (16, 16) = 256 chips, axes
+(data, model).  Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model)
+— 'pod' composes with 'data' for hierarchical gradient reduction.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)}. "
+            "The dry-run launcher sets xla_force_host_platform_device_count.")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever this host actually has (tests / examples): (n, mp) mesh."""
+    n = len(jax.devices())
+    data = max(1, n // model_parallel)
+    return jax.make_mesh((data, model_parallel), ("data", "model"))

@@ -1,0 +1,194 @@
+"""Sharding derivation: map every parameter / optimizer / batch / cache leaf
+onto the production mesh.
+
+Parallelism layout (DESIGN.md §4):
+  * TP over 'model': attention heads, MLP hidden, experts (EP), vocab
+  * DP over ('pod', 'data'): batch
+  * FSDP (optional, ``mode='fsdp'``): parameters + optimizer state
+    additionally sharded over 'data' on their non-TP dimension — required to
+    fit llama4-maverick's optimizer state
+  * context parallelism: KV caches sharded over 'model' on the sequence dim
+  * xlstm-125m: pure DP (125M params — TP would be all overhead)
+
+Everything keys off leaf *paths*, so optimizer moments (which mirror the
+parameter tree, with int8 payloads keeping the parameter shape and scales
+dropping the last axis) inherit parameter shardings automatically.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# parameter name -> (which dim is TP-sharded, counted from the END of the
+# leaf's *base* rank).  -1 = last dim, -2 = second-to-last, None = replicate.
+_OUT_DIM = {  # project INTO sharded feature space: shard output (last) dim
+    "wq", "wk", "wv", "wi", "in_proj", "up", "wx", "ff_wi", "router", "w_if",
+}
+_IN_DIM = {  # project OUT of sharded feature space: shard input dim
+    "wo", "out_proj", "down", "ff_wo",
+}
+_EMBED = {"embed", "head"}
+_REPLICATED = {
+    "conv_w", "conv_b", "A_log", "dt_bias", "D", "norm", "ln", "ln1", "ln2",
+    "lnx", "pn1", "pn2", "final_norm", "enc_norm", "dec_norm", "b", "b_if",
+    "bq", "bk", "bv", "q_norm", "k_norm", "r", "scale",
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return tuple(out)
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axes don't divide (pjit in_shardings
+    require exact divisibility — e.g. seamless's 256206 vocab % 16 != 0,
+    or global_batch=1 in the long_500k cell)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axes in zip(shape, parts):
+        if axes is not None and dim % _axis_size(mesh, axes) != 0:
+            axes = None
+        out.append(axes)
+    return P(*out)
+
+
+def _ns(mesh: Mesh, spec: P, leaf) -> NamedSharding:
+    return NamedSharding(mesh, fit_spec(spec, leaf.shape, mesh))
+
+
+def param_spec(path, leaf, mesh: Mesh, mode: str = "tp",
+               family: str = "dense") -> P:
+    names = _path_names(path)
+    name = names[-1]
+    parent = names[-2] if len(names) > 1 else ""
+    ndim = len(leaf.shape)
+    fsdp = "data" if (mode in ("fsdp", "ep") and "data" in mesh.axis_names) else None
+
+    if family == "ssm" and name not in _EMBED:
+        return P()  # xlstm: replicate (pure DP)
+
+    def lead(base: Tuple[Optional[str], ...]) -> P:
+        extra = ndim - len(base)
+        assert extra >= 0, (names, leaf.shape, base)
+        return P(*((None,) * extra + tuple(base)))
+
+    if name in _EMBED:
+        return lead(("model", fsdp))
+    if parent == "moe" or (name in ("wi", "wo") and ndim >= 3 and "moe" in names):
+        if name == "router":
+            return lead((fsdp, "model"))
+        if mode == "ep":
+            # §Perf (llama4): expert weights STATIONARY — experts sharded
+            # over 'data', hidden over 'model'; tokens move (a2a), the
+            # 21.5GB/layer expert weights never do.  No FSDP re-gather.
+            if name == "wi":          # (E, d, 2f)
+                return lead(("data", None, "model"))
+            return lead(("data", "model", None))  # wo: (E, f, d)
+        if name in ("wi", "wo"):      # (E, d_in, d_out): experts over model
+            return lead(("model", fsdp, None))
+    if name in _REPLICATED:
+        return lead((None,) * min(ndim, 1)) if ndim else P()
+    if name in _OUT_DIM and ndim >= 2:
+        return lead((fsdp, "model"))
+    if name in _IN_DIM and ndim >= 2:
+        return lead(("model", fsdp))
+    return P()  # conservative default: replicate
+
+
+def state_shardings(state_shapes, mesh: Mesh, mode: str = "tp",
+                    family: str = "dense"):
+    """Shardings for a {params, opt} train state (or bare params tree)."""
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        # optimizer moments mirror params: strip the m/v/error prefix and the
+        # q/scale suffix, then reuse the parameter rule
+        if names and names[0] in ("m", "v", "error", "params"):
+            names_p = names[1:]
+        else:
+            names_p = names
+        if names and names[-1] == "step":
+            return NamedSharding(mesh, P())
+        is_scale = names_p and names_p[-1] == "scale"
+        is_q = names_p and names_p[-1] == "q"
+        if is_scale or is_q:
+            names_p = names_p[:-1]
+        fake_path = [type("K", (), {"key": n})() for n in names_p]
+        spec = param_spec(fake_path, leaf, mesh, mode, family)
+        if is_scale:
+            # scales keep ndim (keepdims) but last dim is 1: never shard it
+            parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+            if parts:
+                parts[-1] = None
+            spec = P(*parts)
+        return _ns(mesh, spec, leaf)
+
+    return jax.tree_util.tree_map_with_path(assign, state_shapes)
+
+
+def batch_shardings(batch_specs, mesh: Mesh):
+    ba = batch_axes(mesh)
+
+    def assign(path, leaf):
+        spec = [ba] + [None] * (len(leaf.shape) - 1)
+        return _ns(mesh, P(*spec), leaf)
+
+    return jax.tree_util.tree_map_with_path(assign, batch_specs)
+
+
+def cache_shardings(cache_specs, mesh: Mesh, family: str = "dense"):
+    """KV caches: batch over DP axes, sequence dim over 'model' (context
+    parallelism for the 32k/500k cells); recurrent states: batch + heads."""
+    ba = batch_axes(mesh)
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        ndim = len(leaf.shape)
+        if family == "ssm":
+            # xlstm states: (..., B, ...): batch dim is axis -4/-3/-2 per leaf
+            base = {"mC": (ba, None, None, None), "mn": (ba, None, None),
+                    "mm": (ba, None), "mbuf": (ba, None, None),
+                    "sh": (ba, None, None), "sc": (ba, None, None),
+                    "sn": (ba, None, None), "sm": (ba, None),
+                    "sbuf": (ba, None, None)}[name]
+        elif name in ("ssm", "ssm_tail"):
+            base = (ba, "model", None, None)        # (B, H, P, N): heads TP
+        elif name in ("conv", "conv_tail"):
+            base = (ba, None, "model")              # (B, W, conv_dim)
+        elif name.startswith(("k", "v", "xk", "xv")):
+            base = (ba, "model", None, None)        # (B, S, KV, D): seq CP
+        else:
+            base = (ba,) + (None,) * (ndim - 1)
+        extra = ndim - len(base)
+        return _ns(mesh, P(*((None,) * extra + tuple(base))), leaf)
+
+    return jax.tree_util.tree_map_with_path(assign, cache_specs)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,2 @@
+from .model_zoo import build_model  # noqa: F401
+from .partitioning import set_mesh, shard, use_mesh  # noqa: F401

@@ -1,0 +1,206 @@
+"""Attention: GQA/MQA/MHA with RoPE, soft-capping, sliding windows, qk-norm.
+
+Covers every attention variant in the assigned architecture pool:
+  * GQA with arbitrary kv-head counts (MQA when kv=1, MHA when kv=H)
+  * RoPE (configurable theta), optional QKV biases (qwen2.5)
+  * per-head q/k RMS norm (qwen3)
+  * attention-logit soft-capping + query_pre_attn scaling (gemma2)
+  * alternating local (sliding-window) / global layers (gemma2)
+  * cross-attention over an encoder memory (seamless, enc-dec)
+  * single-token decode against a long KV cache (32k/500k cells)
+
+The default math path is pure jnp (einsum) so XLA SPMD can partition it; the
+Pallas flash/decode kernels in ``repro.kernels`` implement the same contract
+for TPU and are validated against this math.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_rope, dense_init, rms_norm, softcap
+from .partitioning import shard
+
+Array = jax.Array
+
+
+class AttnDims(NamedTuple):
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+
+
+def attn_dims(cfg) -> AttnDims:
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    return AttnDims(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd)
+
+
+# ----------------------------------------------------------------------- init
+def attention_init(key, cfg, cross: bool = False) -> dict:
+    d = attn_dims(cfg)
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(ks[0], d.d_model, d.n_heads * d.head_dim),
+        "wk": dense_init(ks[1], d.d_model, d.n_kv * d.head_dim),
+        "wv": dense_init(ks[2], d.d_model, d.n_kv * d.head_dim),
+        "wo": dense_init(ks[3], d.n_heads * d.head_dim, d.d_model),
+    }
+    if getattr(cfg, "qkv_bias", False):
+        params["bq"] = jnp.zeros((d.n_heads * d.head_dim,), jnp.float32)
+        params["bk"] = jnp.zeros((d.n_kv * d.head_dim,), jnp.float32)
+        params["bv"] = jnp.zeros((d.n_kv * d.head_dim,), jnp.float32)
+    if getattr(cfg, "qk_norm", False):
+        params["q_norm"] = jnp.zeros((d.head_dim,), jnp.float32)
+        params["k_norm"] = jnp.zeros((d.head_dim,), jnp.float32)
+    return params
+
+
+# ----------------------------------------------------------------- projection
+def project_q(params: dict, x: Array, cfg, positions: Array) -> Array:
+    d = attn_dims(cfg)
+    q = x @ params["wq"].astype(x.dtype)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+    q = q.reshape(*x.shape[:-1], d.n_heads, d.head_dim)
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"], getattr(cfg, "norm_eps", 1e-6))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def project_kv(params: dict, x: Array, cfg, positions: Optional[Array]) -> Tuple[Array, Array]:
+    d = attn_dims(cfg)
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if "bk" in params:
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    k = k.reshape(*x.shape[:-1], d.n_kv, d.head_dim)
+    v = v.reshape(*x.shape[:-1], d.n_kv, d.head_dim)
+    if "k_norm" in params:
+        k = rms_norm(k, params["k_norm"], getattr(cfg, "norm_eps", 1e-6))
+    if positions is not None:  # cross-attention keys carry no rope
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def _scale(cfg, head_dim: int) -> float:
+    qs = getattr(cfg, "query_pre_attn_scalar", None)
+    return 1.0 / np.sqrt(qs if qs is not None else head_dim)
+
+
+# ----------------------------------------------------------------- core math
+def attn_core(
+    q: Array,                      # (B, S, H, D)
+    k: Array,                      # (B, T, KV, D)
+    v: Array,                      # (B, T, KV, D)
+    *,
+    cfg,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_positions: Optional[Array] = None,   # (B, S) absolute positions of q
+    kv_len: Optional[Array] = None,        # dynamic valid length of k/v
+) -> Array:
+    """Grouped-query attention, logits in f32, optional softcap/window."""
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, D)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    logits = logits * _scale(cfg, D)
+    logits = softcap(logits, getattr(cfg, "attn_logit_softcap", None))
+
+    qpos = q_positions if q_positions is not None else jnp.arange(S)[None, :]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((B if qpos.shape[0] > 1 else 1, S, T), bool)
+    if causal:
+        mask &= kpos[:, None, :] <= qpos[..., :, None]
+    if window is not None:
+        mask &= kpos[:, None, :] > (qpos[..., :, None] - window)
+    if kv_len is not None:
+        mask &= kpos[:, None, :] < jnp.reshape(kv_len, (-1, 1, 1))
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, H, D)
+
+
+# ----------------------------------------------------------------- full apply
+def attention_apply(
+    params: dict,
+    x: Array,                      # (B, S, d_model)
+    cfg,
+    *,
+    positions: Optional[Array] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    memory: Optional[Array] = None,        # (B, T, d_model) for cross-attn
+    return_kv: bool = False,
+):
+    B, S, _ = x.shape
+    pos = positions if positions is not None else jnp.arange(S)[None, :]
+    q = project_q(params, x, cfg, pos)
+    if memory is None:
+        k, v = project_kv(params, x, cfg, pos)
+    else:
+        k, v = project_kv(params, memory, cfg, None)
+        causal = False
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "kv", "head_dim")
+    if getattr(cfg, "attn_impl", "naive") == "blocked" and memory is None:
+        from .blocked_attention import blocked_attention
+
+        out = blocked_attention(
+            q, k, v, causal=causal, window=window,
+            softcap=getattr(cfg, "attn_logit_softcap", None),
+            scale=_scale(cfg, q.shape[-1]),
+            block_q=getattr(cfg, "attn_block_q", 2048),
+            block_k=getattr(cfg, "attn_block_k", 1024))
+    else:
+        out = attn_core(q, k, v, cfg=cfg, causal=causal, window=window,
+                        q_positions=pos)
+    y = out.reshape(B, S, -1) @ params["wo"].astype(x.dtype)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attention_decode(
+    params: dict,
+    x: Array,                      # (B, 1, d_model) new token(s)
+    cfg,
+    k_cache: Array,                # (B, W, KV, D) — ring buffer, may be sharded on W
+    v_cache: Array,
+    pos: Array,                    # scalar current position
+) -> Tuple[Array, Array, Array]:
+    """One decode step against a (possibly ring-buffer) KV cache.
+
+    The cache holds W slots; the new KV is written at ``pos % W``.  Sliding-
+    window layers allocate W = window, full-attention layers W = max_len.
+    Because keys are RoPE'd with their *true* positions before caching and
+    softmax is permutation-invariant over slots, masking only needs the valid
+    slot count ``min(pos+1, W)`` — no slot-order bookkeeping.
+    """
+    B = x.shape[0]
+    W = k_cache.shape[1]
+    p = jnp.asarray(pos).reshape(()).astype(jnp.int32)
+    pos_b = jnp.broadcast_to(p, (B,))
+    q = project_q(params, x, cfg, pos_b[:, None])
+    k_new, v_new = project_kv(params, x, cfg, pos_b[:, None])
+    slot = jnp.mod(p, W)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), slot, axis=1)
+    kv_len = jnp.minimum(pos_b + 1, W)
+    out = attn_core(
+        q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+        cfg=cfg, causal=False, window=None,
+        q_positions=pos_b[:, None], kv_len=kv_len,
+    )
+    y = out.reshape(B, 1, -1) @ params["wo"].astype(x.dtype)
+    return y, k_cache, v_cache

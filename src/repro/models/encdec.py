@@ -1,0 +1,244 @@
+"""Encoder-decoder transformer for seamless-m4t-large-v2 ([audio]).
+
+The modality frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, S_enc, d_model) — the speech feature
+extractor is out of scope; the transformer backbone (24 encoder + 24 decoder
+layers, cross-attention) is fully implemented.
+
+Shape mapping for the LM shape grid (DESIGN.md §Arch-applicability):
+  * train/prefill: S_enc = S_dec = seq_len / 2 (total tokens == seq_len)
+  * decode: decoder KV cache = seq_len, encoder memory = ENC_MEMORY_LEN
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    attention_apply,
+    attention_decode,
+    attention_init,
+    attn_core,
+    attn_dims,
+    project_kv,
+    project_q,
+)
+from .layers import cast, embed_apply, embed_init, mlp_apply, mlp_init, rms_norm, softcap
+from .partitioning import shard
+from .transformer import _remat
+
+Array = jax.Array
+
+ENC_MEMORY_LEN = 4_096  # encoder memory length for decode-shape cells
+
+
+def _enc_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "attn": attention_init(k1, cfg),
+        "ln2": jnp.zeros((d,), jnp.float32),
+        "mlp": mlp_init(k2, d, cfg.d_ff),
+    }
+
+
+def _dec_layer_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "self_attn": attention_init(k1, cfg),
+        "lnx": jnp.zeros((d,), jnp.float32),
+        "cross_attn": attention_init(k2, cfg),
+        "ln2": jnp.zeros((d,), jnp.float32),
+        "mlp": mlp_init(k3, d, cfg.d_ff),
+    }
+
+
+class EncDecModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        assert cfg.enc_layers and cfg.dec_layers
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        return {
+            "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+            "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(
+                jax.random.split(ks[1], cfg.enc_layers)),
+            "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(
+                jax.random.split(ks[2], cfg.dec_layers)),
+            "enc_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "dec_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+
+    # ---------------------------------------------------------------- encode
+    def encode(self, params, frames: Array) -> Array:
+        cfg = self.cfg
+        x = shard(cast(frames, cfg), "batch", "seq", "embed")
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        def body(x, p):
+            h = attention_apply(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                                cfg, positions=positions, causal=False)
+            x = x + h
+            x = x + mlp_apply(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.mlp_act)
+            return shard(x, "batch", "seq", "embed"), None
+
+        x, _ = jax.lax.scan(_remat(body, cfg), x, params["enc_layers"])
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # ---------------------------------------------------------------- decode
+    def _dec_body(self, params_slice, x, memory, positions):
+        cfg, p = self.cfg, params_slice
+        h = attention_apply(p["self_attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                            cfg, positions=positions, causal=True)
+        x = x + h
+        h = attention_apply(p["cross_attn"], rms_norm(x, p["lnx"], cfg.norm_eps),
+                            cfg, positions=positions, memory=memory)
+        x = x + h
+        x = x + mlp_apply(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.mlp_act)
+        return shard(x, "batch", "seq", "embed")
+
+    def decode_full(self, params, tokens: Array, memory: Array) -> Array:
+        cfg = self.cfg
+        x = embed_apply(cast(params["embed"], cfg), tokens, False, cfg.d_model)
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        def body(x, p):
+            return self._dec_body(p, x, memory, positions), None
+
+        x, _ = jax.lax.scan(_remat(body, cfg), x, params["dec_layers"])
+        x = rms_norm(x, params["dec_norm"], cfg.norm_eps)
+        return x
+
+    def logits(self, params, hidden: Array) -> Array:
+        out = hidden @ cast(params["embed"], self.cfg).T  # tied head
+        return shard(out.astype(jnp.float32), "batch", "seq", "vocab")
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch) -> Tuple[Array, Dict[str, Array]]:
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"])
+        hidden = self.decode_full(params, batch["tokens"], memory)
+        labels = batch["labels"]
+        B, S, D = hidden.shape
+        chunk = min(cfg.loss_chunk, S)
+        n_chunks = max(S // chunk, 1)
+        w = cast(params["embed"], cfg)
+
+        def ce(h, l):
+            logits = shard((h @ w.T).astype(jnp.float32), "batch", "seq", "vocab")
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, jnp.maximum(l, 0)[..., None], -1)[..., 0]
+            valid = (l >= 0).astype(jnp.float32)
+            return jnp.sum((logz - gold) * valid), jnp.sum(valid)
+
+        hs = jnp.moveaxis(hidden[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, D), 1, 0)
+        ls = jnp.moveaxis(labels[:, : n_chunks * chunk].reshape(B, n_chunks, chunk), 1, 0)
+
+        def body(c, hl):
+            t, n = ce(*hl)
+            return (c[0] + t, c[1] + n), None
+
+        (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hs, ls))
+        nll = tot / jnp.maximum(cnt, 1.0)
+        return nll, {"nll": nll, "tokens": cnt}
+
+    # --------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_len: int, enc_len: int = ENC_MEMORY_LEN,
+                   dtype=jnp.bfloat16) -> dict:
+        d = attn_dims(self.cfg)
+        L = self.cfg.dec_layers
+        return {
+            "k": jnp.zeros((L, batch, max_len, d.n_kv, d.head_dim), dtype),
+            "v": jnp.zeros((L, batch, max_len, d.n_kv, d.head_dim), dtype),
+            "xk": jnp.zeros((L, batch, enc_len, d.n_kv, d.head_dim), dtype),
+            "xv": jnp.zeros((L, batch, enc_len, d.n_kv, d.head_dim), dtype),
+        }
+
+    def cache_specs(self, batch: int, max_len: int, enc_len: int = ENC_MEMORY_LEN,
+                    dtype=jnp.bfloat16) -> dict:
+        z = self.init_cache  # reuse shapes via eval_shape (no allocation)
+        return jax.eval_shape(lambda: z(batch, max_len, enc_len, dtype))
+
+    def prefill(self, params, batch, max_len: int, cache_dtype=jnp.bfloat16):
+        """Encode frames + run decoder prompt; build self+cross KV caches."""
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed_apply(cast(params["embed"], cfg), tokens, False, cfg.d_model)
+        positions = jnp.arange(S)[None, :]
+
+        def body(x, p):
+            a_in = rms_norm(x, p["ln1"], cfg.norm_eps)
+            h, (k, v) = attention_apply(p["self_attn"], a_in, cfg,
+                                        positions=positions, return_kv=True)
+            x = x + h
+            c_in = rms_norm(x, p["lnx"], cfg.norm_eps)
+            q = project_q(p["cross_attn"], c_in, cfg, positions)
+            xk, xv = project_kv(p["cross_attn"], memory, cfg, None)
+            out = attn_core(q, xk, xv, cfg=cfg, causal=False)
+            h = out.reshape(B, S, -1) @ p["cross_attn"]["wo"].astype(x.dtype)
+            x = x + h
+            x = x + mlp_apply(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.mlp_act)
+            return x, (k, v, xk, xv)
+
+        x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["dec_layers"])
+        x = rms_norm(x, params["dec_norm"], cfg.norm_eps)
+        logits = self.logits(params, x[:, -1:, :])
+        cache = self.init_cache(B, max_len, xks.shape[2], cache_dtype)
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], ks.astype(cache_dtype), 0, axis=2)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], vs.astype(cache_dtype), 0, axis=2)
+        cache["xk"] = xks.astype(cache_dtype)
+        cache["xv"] = xvs.astype(cache_dtype)
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache, pos):
+        cfg = self.cfg
+        x = embed_apply(cast(params["embed"], cfg), tokens, False, cfg.d_model)
+        B = x.shape[0]
+
+        def body(x, inp):
+            p, kc, vc, xk, xv = inp
+            a_in = rms_norm(x, p["ln1"], cfg.norm_eps)
+            h, kc, vc = attention_decode(p["self_attn"], a_in, cfg, kc, vc, pos)
+            x = x + h
+            c_in = rms_norm(x, p["lnx"], cfg.norm_eps)
+            pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
+            q = project_q(p["cross_attn"], c_in, cfg, pos_b[:, None])
+            out = attn_core(q, xk.astype(q.dtype), xv.astype(q.dtype),
+                            cfg=cfg, causal=False)
+            x = x + out.reshape(B, 1, -1) @ p["cross_attn"]["wo"].astype(x.dtype)
+            x = x + mlp_apply(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.mlp_act)
+            return x, (kc, vc)
+
+        xs = (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"])
+        x, (ks, vs) = jax.lax.scan(body, x, xs)
+        x = rms_norm(x, params["dec_norm"], cfg.norm_eps)
+        logits = self.logits(params, x)
+        new_cache = dict(cache, k=ks, v=vs)
+        return logits, new_cache
+
+    # ----------------------------------------------------------------- specs
+    def input_specs(self, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        dt = jnp.dtype(cfg.dtype)
+        if shape.kind in ("train", "prefill"):
+            half = S // 2
+            specs = {
+                "frames": jax.ShapeDtypeStruct((B, half, cfg.d_model), dt),
+                "tokens": jax.ShapeDtypeStruct((B, half), jnp.int32),
+            }
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, half), jnp.int32)
+            return specs
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}

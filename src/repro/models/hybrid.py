@@ -1,0 +1,236 @@
+"""Zamba2-style hybrid model: Mamba2 backbone + one SHARED attention block.
+
+zamba2-7b: 81 Mamba2 layers; a single shared (attention + MLP) block — one
+parameter set — is applied every ``cfg.attn_every`` Mamba layers (each
+application sees different activations, so each keeps its own KV cache at
+serve time).  Structure: G = n_layers // attn_every groups of
+[attn_every x mamba2, shared-attn], plus a tail of remaining mamba layers.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention_apply, attention_decode, attention_init, attn_dims
+from .layers import cast, embed_apply, embed_init, mlp_apply, mlp_init, rms_norm
+from .partitioning import shard
+from .ssm import (
+    mamba2_apply,
+    mamba2_decode,
+    mamba2_init,
+    mamba2_state_shapes,
+    ssm_dims,
+)
+from .transformer import _remat
+
+Array = jax.Array
+
+
+def _mamba_layer_init(key, cfg):
+    return {"ln": jnp.zeros((cfg.d_model,), jnp.float32), "mamba": mamba2_init(key, cfg)}
+
+
+def _shared_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": attention_init(k1, cfg),
+        "ln2": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+class HybridModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.period = cfg.attn_every
+        self.n_groups = cfg.n_layers // self.period
+        self.tail = cfg.n_layers - self.n_groups * self.period
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        main = jax.vmap(
+            jax.vmap(lambda k: _mamba_layer_init(k, cfg))
+        )(jax.random.split(ks[0], self.n_groups * self.period).reshape(
+            self.n_groups, self.period, 2))
+        params = {
+            "embed": embed_init(ks[1], cfg.vocab_size, cfg.d_model),
+            "main": main,                              # (G, P, ...)
+            "shared": _shared_block_init(ks[2], cfg),  # ONE param set
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if self.tail:
+            params["tail"] = jax.vmap(lambda k: _mamba_layer_init(k, cfg))(
+                jax.random.split(ks[3], self.tail))
+        if not cfg.tie_embeddings:
+            params["head"] = embed_init(ks[4], cfg.vocab_size, cfg.d_model)
+        return params
+
+    def _shared_apply(self, params, x, positions):
+        cfg = self.cfg
+        p = params["shared"]
+        h = attention_apply(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                            cfg, positions=positions, causal=True)
+        x = x + h
+        x = x + mlp_apply(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.mlp_act)
+        return x
+
+    # --------------------------------------------------------------- forward
+    def hidden_states(self, params, batch) -> Array:
+        cfg = self.cfg
+        x = embed_apply(cast(params["embed"], cfg), batch["tokens"], False, cfg.d_model)
+        x = shard(x, "batch", "seq", "embed")
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        def mamba_body(x, p):
+            y = mamba2_apply(p["mamba"], rms_norm(x, p["ln"], cfg.norm_eps),
+                             cfg, chunk=cfg.scan_chunk)
+            return shard(x + y, "batch", "seq", "embed"), None
+
+        def group_body(x, group_params):
+            x, _ = jax.lax.scan(mamba_body, x, group_params)
+            x = self._shared_apply(params, x, positions)
+            return x, None
+
+        x, _ = jax.lax.scan(_remat(group_body, cfg), x, params["main"])
+        if self.tail:
+            x, _ = jax.lax.scan(mamba_body, x, params["tail"])
+        return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    def loss(self, params, batch) -> Tuple[Array, Dict[str, Array]]:
+        cfg = self.cfg
+        hidden = self.hidden_states(params, batch)
+        labels = batch["labels"]
+        B, S, D = hidden.shape
+        chunk = min(cfg.loss_chunk, S)
+        n_chunks = max(S // chunk, 1)
+        w = cast(params["embed"] if cfg.tie_embeddings else params["head"], cfg)
+
+        def ce(h, l):
+            logits = shard((h @ w.T).astype(jnp.float32), "batch", "seq", "vocab")
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, jnp.maximum(l, 0)[..., None], -1)[..., 0]
+            valid = (l >= 0).astype(jnp.float32)
+            return jnp.sum((logz - gold) * valid), jnp.sum(valid)
+
+        hs = jnp.moveaxis(hidden[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, D), 1, 0)
+        ls = jnp.moveaxis(labels[:, : n_chunks * chunk].reshape(B, n_chunks, chunk), 1, 0)
+
+        def body(c, hl):
+            t, n = ce(*hl)
+            return (c[0] + t, c[1] + n), None
+
+        (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hs, ls))
+        nll = tot / jnp.maximum(cnt, 1.0)
+        return nll, {"nll": nll, "tokens": cnt}
+
+    # --------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+        d = attn_dims(cfg)
+        st, cb = mamba2_state_shapes(cfg, batch)
+        cache = {
+            "ssm": jnp.zeros((self.n_groups, self.period) + st, jnp.float32),
+            "conv": jnp.zeros((self.n_groups, self.period) + cb, jnp.float32),
+            "k": jnp.zeros((self.n_groups, batch, max_len, d.n_kv, d.head_dim), dtype),
+            "v": jnp.zeros((self.n_groups, batch, max_len, d.n_kv, d.head_dim), dtype),
+        }
+        if self.tail:
+            cache["ssm_tail"] = jnp.zeros((self.tail,) + st, jnp.float32)
+            cache["conv_tail"] = jnp.zeros((self.tail,) + cb, jnp.float32)
+        return cache
+
+    def cache_specs(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len, dtype))
+
+    def prefill(self, params, batch, max_len: int, cache_dtype=jnp.bfloat16):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed_apply(cast(params["embed"], cfg), tokens, False, cfg.d_model)
+        positions = jnp.arange(S)[None, :]
+
+        def mamba_body(x, p):
+            from .ssm import CONV_WIDTH, _split_in
+
+            xn = rms_norm(x, p["ln"], cfg.norm_eps)
+            y, hT = mamba2_apply(p["mamba"], xn, cfg, chunk=cfg.scan_chunk,
+                                 return_state=True)
+            # conv rolling buffer: pre-conv activations of the last W-1 steps
+            _, xbc_tail, _ = _split_in(
+                p["mamba"], xn[:, S - (CONV_WIDTH - 1):, :], ssm_dims(cfg))
+            return x + y, (hT, xbc_tail.astype(jnp.float32))
+
+        def group_body(carry, group_params):
+            x = carry
+            x, (hTs, bufs) = jax.lax.scan(mamba_body, x, group_params)
+            p = params["shared"]
+            h, (k, v) = attention_apply(
+                p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                positions=positions, causal=True, return_kv=True)
+            x = x + h
+            x = x + mlp_apply(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.mlp_act)
+            return x, (hTs, bufs, k, v)
+
+        x, (ssm, conv, ks, vs) = jax.lax.scan(group_body, x, params["main"])
+        if self.tail:
+            x, (ssm_t, conv_t) = jax.lax.scan(mamba_body, x, params["tail"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        w = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = shard((x[:, -1:, :] @ cast(w, cfg).T).astype(jnp.float32),
+                       "batch", "seq", "vocab")
+        cache = self.init_cache(B, max_len, cache_dtype)
+        cache["ssm"], cache["conv"] = ssm, conv
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], ks.astype(cache_dtype), 0, axis=2)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], vs.astype(cache_dtype), 0, axis=2)
+        if self.tail:
+            cache["ssm_tail"], cache["conv_tail"] = ssm_t, conv_t
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache, pos):
+        cfg = self.cfg
+        x = embed_apply(cast(params["embed"], cfg), tokens, False, cfg.d_model)
+
+        def mamba_step(x, inp):
+            p, st, cb = inp
+            y, st, cb = mamba2_decode(p["mamba"], rms_norm(x, p["ln"], cfg.norm_eps),
+                                      cfg, st, cb)
+            return x + y, (st, cb)
+
+        def group_body(x, inp):
+            gp, st, cb, kc, vc = inp
+            x, (st, cb) = jax.lax.scan(mamba_step, x, (gp, st, cb))
+            p = params["shared"]
+            h, kc, vc = attention_decode(
+                p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, kc, vc, pos)
+            x = x + h
+            x = x + mlp_apply(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.mlp_act)
+            return x, (st, cb, kc, vc)
+
+        xs = (params["main"], cache["ssm"], cache["conv"], cache["k"], cache["v"])
+        x, (ssm, conv, ks, vs) = jax.lax.scan(group_body, x, xs)
+        new_cache = dict(cache, ssm=ssm, conv=conv, k=ks, v=vs)
+        if self.tail:
+            x, (st, cb) = jax.lax.scan(
+                mamba_step, x, (params["tail"], cache["ssm_tail"], cache["conv_tail"]))
+            new_cache["ssm_tail"], new_cache["conv_tail"] = st, cb
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        w = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = shard((x @ cast(w, cfg).T).astype(jnp.float32),
+                       "batch", "seq", "vocab")
+        return logits, new_cache
+
+    # ----------------------------------------------------------------- specs
+    def input_specs(self, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            return specs
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}

@@ -1,0 +1,104 @@
+"""Shared model layers: norms, rotary embeddings, MLPs, embeddings.
+
+Pure-JAX (no flax): parameters are nested dicts of arrays, layers are
+``init(key, cfg) -> params`` + ``apply(params, x, ...) -> y`` pairs.  All
+parameters carry *logical axis names* (see ``partitioning.py``) via the
+``repro.models.partitioning.logical`` annotation dict built alongside init.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------- dtype
+def activation_dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(getattr(cfg, "dtype", "bfloat16"))
+
+
+def cast(x: Array, cfg) -> Array:
+    return x.astype(activation_dtype(cfg))
+
+
+# ----------------------------------------------------------------------- init
+def dense_init(key, in_dim: int, out_dim: int, scale: Optional[float] = None) -> Array:
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale)
+
+
+def embed_init(key, vocab: int, dim: int) -> Array:
+    return jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------- norms
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6,
+             zero_centered: bool = True) -> Array:
+    """RMSNorm; ``zero_centered`` follows gemma ((1+scale) parameterisation)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    w = (1.0 + scale) if zero_centered else scale
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ soft caps
+def softcap(x: Array, cap: Optional[float]) -> Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ------------------------------------------------------------------------ mlp
+def mlp_init(key, d_model: int, d_ff: int) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": dense_init(k1, d_model, 2 * d_ff),  # fused gate+up
+        "wo": dense_init(k2, d_ff, d_model),
+    }
+
+
+def mlp_apply(params: dict, x: Array, act: str = "silu") -> Array:
+    """Gated MLP: SwiGLU (act='silu') or GeGLU (act='gelu', gemma)."""
+    gate_up = x @ params["wi"].astype(x.dtype)
+    gate, up = jnp.split(gate_up, 2, axis=-1)
+    if act == "silu":
+        g = jax.nn.silu(gate)
+    elif act == "gelu":
+        g = jax.nn.gelu(gate, approximate=True)
+    else:
+        raise ValueError(f"unknown activation {act!r}")
+    return (g * up) @ params["wo"].astype(x.dtype)
+
+
+# ------------------------------------------------------------------ embedding
+def embed_apply(table: Array, tokens: Array, scale: bool, d_model: int) -> Array:
+    x = jnp.take(table, tokens, axis=0)
+    if scale:  # gemma scales embeddings by sqrt(d_model)
+        x = x * jnp.asarray(np.sqrt(d_model), x.dtype)
+    return x
+
+
+def unembed_apply(table_or_head: Array, x: Array, transpose: bool) -> Array:
+    w = table_or_head.astype(x.dtype)
+    return x @ (w.T if transpose else w)

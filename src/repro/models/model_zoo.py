@@ -1,0 +1,17 @@
+"""Model zoo: build the right model class for an ArchConfig."""
+from __future__ import annotations
+
+from .encdec import EncDecModel
+from .hybrid import HybridModel
+from .transformer import DecoderLM
+from .xlstm_model import XLSTMModel
+
+
+def build_model(cfg):
+    if cfg.is_encdec:
+        return EncDecModel(cfg)
+    if cfg.family == "hybrid":
+        return HybridModel(cfg)
+    if cfg.family == "ssm":
+        return XLSTMModel(cfg)
+    return DecoderLM(cfg)  # dense | moe | vlm

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts layer with sort-based (one-hot-free) token dispatch.
+
+Covers the pool's two MoE architectures:
+  * llama4-maverick: 128 routed experts, top-1, plus a shared expert
+  * qwen2-moe:       60 routed experts, top-4 (renormalised), 4 shared experts
+
+Dispatch is capacity-based: tokens are stably sorted by expert id, each token
+gets its position within its expert's group, tokens beyond the capacity
+``C = k * N / E * capacity_factor`` are dropped (residual passes through).
+This avoids the (N, E, C) one-hot dispatch tensor — at llama4 scale that
+tensor would be ~10^12 elements — and lowers to gather/scatter + dense
+(E, C, ff) expert matmuls that XLA SPMD partitions over the 'experts' axis
+(expert parallelism).  A Switch-style load-balancing auxiliary loss is
+returned for training.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, mlp_apply, mlp_init
+from .partitioning import shard
+
+Array = jax.Array
+
+
+def moe_init(key, cfg) -> dict:
+    e, d = cfg.n_experts, cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "router": dense_init(k1, d, e, scale=0.02),
+        "wi": jax.random.normal(k2, (e, d, 2 * ff), jnp.float32) / jnp.sqrt(d),
+        "wo": jax.random.normal(k3, (e, ff, d), jnp.float32) / jnp.sqrt(ff),
+    }
+    if cfg.n_shared_experts:
+        params["shared"] = mlp_init(k4, d, ff * cfg.n_shared_experts)
+    return params
+
+
+def capacity(n_tokens: int, cfg) -> int:
+    c = int(cfg.top_k * n_tokens * cfg.capacity_factor / cfg.n_experts)
+    return max(8, c)
+
+
+def moe_apply(params: dict, x: Array, cfg) -> Tuple[Array, Array]:
+    """x: (B, S, d) -> (y, aux_loss).
+
+    With ``cfg.moe_dispatch_groups = G`` > 1 (§Perf: set to the DP shard
+    count), tokens are routed in G independent groups: the argsort/cumsum/
+    scatter of the dispatch stay *local to each data shard* (vmap over the
+    sharded leading axis) instead of operating on the global token axis —
+    which is what removed the multi-TB all-reduces from the llama4 cell.
+    """
+    groups = getattr(cfg, "moe_dispatch_groups", 0) or 0
+    B, S, d = x.shape
+    if groups > 1 and (B * S) % groups == 0:
+        xg = x.reshape(groups, (B * S) // groups, 1, d)
+        xg = shard(xg, "batch", None, None, "embed")
+        yg, aux = jax.vmap(
+            lambda xs: _moe_dispatch(params, xs, cfg))(xg)
+        y = shard(yg, "batch", None, None, "embed").reshape(B, S, d)
+        return y, jnp.mean(aux)
+    return _moe_dispatch(params, x, cfg)
+
+
+def _moe_dispatch(params: dict, x: Array, cfg) -> Tuple[Array, Array]:
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    N = B * S
+    C = capacity(N, cfg)
+    xf = x.reshape(N, d)
+
+    # --- routing (f32 for stability)
+    logits = (xf.astype(jnp.float32) @ params["router"]).astype(jnp.float32)  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (N, k)
+    if getattr(cfg, "renorm_topk", True) and k > 1:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # --- Switch-style load-balance aux loss: E * sum(mean_prob * dispatch_frac)
+    me = jnp.mean(probs, axis=0)                                   # (E,)
+    density = jnp.zeros((E,), jnp.float32).at[expert_ids[:, 0]].add(1.0) / N
+    aux = E * jnp.sum(me * density)
+
+    # --- sort-based dispatch
+    flat_expert = expert_ids.reshape(-1)                           # (N*k,)
+    sort_idx = jnp.argsort(flat_expert, stable=True)               # (N*k,)
+    sorted_expert = flat_expert[sort_idx]
+    counts = jnp.bincount(flat_expert, length=E)                   # (E,)
+    group_start = jnp.cumsum(counts) - counts                      # exclusive
+    pos_in_expert = jnp.arange(N * k) - group_start[sorted_expert]
+    keep = pos_in_expert < C
+    slot = jnp.where(keep, sorted_expert * C + pos_in_expert, E * C)  # E*C = drop
+    token_idx = sort_idx // k                                      # (N*k,)
+
+    xin = xf[token_idx].astype(x.dtype)                            # (N*k, d)
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(
+        jnp.where(keep[:, None], xin, 0)
+    )[:-1]
+    buf = shard(buf.reshape(E, C, d), "experts", "expert_cap", "embed")
+
+    # --- expert computation: fused gate+up, (E, C, *) einsums
+    gate_up = jnp.einsum("ecd,edf->ecf", buf, params["wi"].astype(x.dtype))
+    g, u = jnp.split(gate_up, 2, axis=-1)
+    act = jax.nn.silu(g) * u
+    eout = jnp.einsum("ecf,efd->ecd", act, params["wo"].astype(x.dtype))
+    eout = shard(eout, "experts", "expert_cap", "embed")
+
+    # --- combine
+    flat_out = jnp.concatenate([eout.reshape(E * C, d), jnp.zeros((1, d), x.dtype)])
+    y_k = flat_out[jnp.where(keep, slot, E * C)]                   # (N*k, d)
+    gates_sorted = gate_vals.reshape(-1)[sort_idx].astype(x.dtype)
+    y_k = y_k * jnp.where(keep, gates_sorted, 0.0)[:, None]
+    y = jnp.zeros((N, d), x.dtype).at[token_idx].add(y_k)
+
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], xf, act="silu")
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,110 @@
+"""Logical-axis partitioning: map model axes onto the production mesh.
+
+Every activation/parameter dimension has a *logical* name (batch, seq,
+embed, heads, kv, head_dim, ff, experts, vocab, kv_seq, ...).  A rule set
+maps logical names to mesh axes; ``shard(x, *names)`` applies a
+``with_sharding_constraint`` when a mesh is active, and is a no-op otherwise
+(so the same model code runs in unit tests on one CPU device).
+
+Default rules implement the framework's parallelism layout (DESIGN.md §4):
+  batch   -> ('pod', 'data')   data parallelism (hierarchical across pods)
+  heads/ff/experts/vocab -> 'model'   tensor/expert parallelism
+  kv_seq  -> 'model'           context parallelism for huge KV caches
+Rules are swappable per-experiment — the §Perf hillclimb iterates here.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+_state = threading.local()
+
+
+def default_rules(mesh: Optional[Mesh]) -> Rules:
+    axes = mesh.axis_names if mesh is not None else ()
+    batch = tuple(a for a in ("pod", "data") if a in axes) or None
+    model = "model" if "model" in axes else None
+    return {
+        "batch": batch,
+        "seq": None,
+        "dec_seq": None,
+        "embed": None,
+        "heads": model,
+        "kv": None,        # kv heads often < model axis; replicate by default
+        "head_dim": None,
+        "ff": model,
+        "experts": model,
+        "expert_cap": None,
+        "vocab": model,
+        "kv_seq": model,   # context parallelism for 500k-token caches
+        "state": None,
+        "layers": None,
+        "frames": None,
+    }
+
+
+def set_mesh(mesh: Optional[Mesh], rules: Optional[Rules] = None) -> None:
+    _state.mesh = mesh
+    _state.rules = dict(default_rules(mesh), **(rules or {}))
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def get_rules() -> Rules:
+    r = getattr(_state, "rules", None)
+    return r if r is not None else default_rules(None)
+
+
+def spec(*logical_axes: Optional[str]) -> P:
+    rules = get_rules()
+    out = []
+    for name in logical_axes:
+        if name is None:
+            out.append(None)
+        else:
+            out.append(rules.get(name))
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op without mesh)."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec(*logical_axes)))
+
+
+def named_sharding(*logical_axes: Optional[str]) -> Optional[NamedSharding]:
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec(*logical_axes))
+
+
+class use_mesh:
+    """Context manager: activate (mesh, rules) for model code + jit."""
+
+    def __init__(self, mesh: Optional[Mesh], rules: Optional[Rules] = None):
+        self.mesh, self.rules = mesh, rules
+
+    def __enter__(self):
+        self._prev = (get_mesh(), getattr(_state, "rules", None))
+        set_mesh(self.mesh, self.rules)
+        if self.mesh is not None:
+            self._mesh_cm = self.mesh
+            self._mesh_cm.__enter__()
+        return self
+
+    def __exit__(self, *exc):
+        if self.mesh is not None:
+            self._mesh_cm.__exit__(*exc)
+        _state.mesh, _state.rules = self._prev
+        return False

@@ -1,0 +1,196 @@
+"""Mamba2 (SSD) blocks for the hybrid zamba2-7b architecture.
+
+Implements the state-space-duality form of Mamba2: scalar-per-head decay
+``dA = dt * A`` with matrix state ``h_t (heads, head_dim, d_state)``:
+
+  h_t = exp(dA_t) * h_{t-1} + dt_t * B_t x_t^T      (recurrent/decode form)
+  y_t = C_t . h_t + D * x_t
+
+Training/prefill uses the chunked algorithm (intra-chunk quadratic form +
+inter-chunk state recurrence) — O(L) in sequence length, which is what makes
+the ``long_500k`` cell tractable for SSM/hybrid archs.  Decode is a single
+O(1) state update.  Depthwise causal conv (width 4) precedes x/B/C as in the
+reference implementation; n_groups = 1.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init, rms_norm
+from .partitioning import shard
+
+Array = jax.Array
+
+CONV_WIDTH = 4
+
+
+class SSMDims(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    d_state: int
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state  # x + B + C (n_groups=1)
+
+
+def ssm_dims(cfg) -> SSMDims:
+    d_inner = 2 * cfg.d_model
+    head_dim = getattr(cfg, "ssm_head_dim", 64)
+    return SSMDims(cfg.d_model, d_inner, d_inner // head_dim, head_dim, cfg.ssm_state)
+
+
+def mamba2_init(key, cfg) -> dict:
+    d = ssm_dims(cfg)
+    ks = jax.random.split(key, 5)
+    in_dim = 2 * d.d_inner + 2 * d.d_state + d.n_heads  # z, x, B, C, dt
+    return {
+        "in_proj": dense_init(ks[0], d.d_model, in_dim),
+        "conv_w": jax.random.normal(ks[1], (CONV_WIDTH, d.conv_dim), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((d.conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, d.n_heads).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((d.n_heads,), jnp.float32),
+        "D": jnp.ones((d.n_heads,), jnp.float32),
+        "norm": jnp.zeros((d.d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], d.d_inner, d.d_model),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv along seq: x (B, L, C), w (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b.astype(out.dtype))
+
+
+def _split_in(params, x, d: SSMDims):
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt = jnp.split(
+        proj, [d.d_inner, d.d_inner + d.conv_dim], axis=-1
+    )
+    return z, xbc, dt
+
+
+def _segsum(x: Array) -> Array:
+    """(..., L) -> (..., L, L): S[q, k] = sum_{j=k+1..q} x_j, -inf above diag."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def mamba2_apply(
+    params: dict, x_in: Array, cfg, chunk: int = 256,
+    initial_state: Optional[Array] = None, return_state: bool = False,
+):
+    """Chunked SSD forward: x_in (B, L, d_model)."""
+    d = ssm_dims(cfg)
+    B_, L, _ = x_in.shape
+    z, xbc, dt_raw = _split_in(params, x_in, d)
+    xbc = _causal_conv(xbc, params["conv_w"].astype(x_in.dtype), params["conv_b"])
+    xs, Bmat, Cmat = jnp.split(xbc, [d.d_inner, d.d_inner + d.d_state], axis=-1)
+    xh = xs.reshape(B_, L, d.n_heads, d.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,L,H)
+    A = -jnp.exp(params["A_log"])  # (H,) negative
+    dA = dt * A  # (B, L, H)
+
+    nchunk = max(1, L // chunk)
+    Q = L // nchunk
+    assert Q * nchunk == L, f"seq {L} not divisible by chunk {Q}"
+
+    def r(t, *shape):
+        return t.reshape(B_, nchunk, Q, *shape)
+
+    xc = r(xh, d.n_heads, d.head_dim).astype(jnp.float32)
+    dtc = r(dt, d.n_heads)
+    dAc = r(dA, d.n_heads)                       # (B, C, Q, H)
+    Bc = r(Bmat, d.d_state).astype(jnp.float32)  # (B, C, Q, N)
+    Cc = r(Cmat, d.d_state).astype(jnp.float32)
+
+    dAc_h = jnp.moveaxis(dAc, -1, -2)            # (B, C, H, Q)
+    cum = jnp.cumsum(dAc_h, axis=-1)             # (B, C, H, Q)
+
+    # --- intra-chunk (quadratic within chunk)
+    Ldecay = jnp.exp(_segsum(dAc_h))             # (B, C, H, Q, Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)  # (B,C,Q,Q)
+    gated = scores[:, :, None] * Ldecay          # (B,C,H,Q,Q)
+    xdt = xc * dtc[..., None]                    # (B,C,Q,H,P)
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", gated, xdt)
+
+    # --- chunk states
+    decay_states = jnp.exp(cum[..., -1:] - cum)  # (B,C,H,Q)
+    states = jnp.einsum("bckn,bchk,bckhp->bchpn", Bc, decay_states, xdt)
+
+    # --- inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(cum[..., -1])          # (B,C,H)
+
+    def step(h, inp):
+        st, dec = inp                            # (B,H,P,N), (B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                          # emit state *entering* chunk
+
+    h0 = (
+        jnp.zeros((B_, d.n_heads, d.head_dim, d.d_state), jnp.float32)
+        if initial_state is None else initial_state.astype(jnp.float32)
+    )
+    hT, h_in = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)              # (B,C,H,P,N)
+
+    # --- inter-chunk output
+    out_decay = jnp.exp(cum)                     # (B,C,H,Q)
+    y_off = jnp.einsum("bcqn,bchpn,bchq->bcqhp", Cc, h_in, out_decay)
+
+    y = (y_diag + y_off).reshape(B_, L, d.n_heads, d.head_dim)
+    y = y + xc.reshape(B_, L, d.n_heads, d.head_dim) * params["D"][:, None]
+    y = y.reshape(B_, L, d.d_inner).astype(x_in.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], getattr(cfg, "norm_eps", 1e-6))
+    out = y @ params["out_proj"].astype(x_in.dtype)
+    if return_state:
+        return out, hT.astype(jnp.float32)
+    return out
+
+
+def mamba2_decode(
+    params: dict, x_in: Array, cfg, state: Array, conv_buf: Array,
+) -> Tuple[Array, Array, Array]:
+    """One-token decode. state: (B,H,P,N) f32; conv_buf: (B, W-1, conv_dim)."""
+    d = ssm_dims(cfg)
+    B_ = x_in.shape[0]
+    z, xbc, dt_raw = _split_in(params, x_in[:, 0, :], d)
+    # conv over the rolling buffer
+    w = params["conv_w"].astype(x_in.dtype)
+    hist = jnp.concatenate([conv_buf.astype(x_in.dtype), xbc[:, None, :]], axis=1)
+    conv = sum(hist[:, i, :] * w[i] for i in range(CONV_WIDTH))
+    xbc_c = jax.nn.silu(conv + params["conv_b"].astype(conv.dtype))
+    new_buf = hist[:, 1:, :]
+    xs, Bmat, Cmat = jnp.split(xbc_c, [d.d_inner, d.d_inner + d.d_state], axis=-1)
+    xh = xs.reshape(B_, d.n_heads, d.head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                          # (B,H)
+    Bf = Bmat.astype(jnp.float32)                 # (B,N)
+    Cf = Cmat.astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bf)
+    state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cf, state) + xh * params["D"][:, None]
+    y = y.reshape(B_, d.d_inner).astype(x_in.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], getattr(cfg, "norm_eps", 1e-6))
+    out = (y @ params["out_proj"].astype(x_in.dtype))[:, None, :]
+    return out, state, new_buf
+
+
+def mamba2_state_shapes(cfg, batch: int) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    d = ssm_dims(cfg)
+    return (batch, d.n_heads, d.head_dim, d.d_state), (batch, CONV_WIDTH - 1, d.conv_dim)

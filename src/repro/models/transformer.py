@@ -1,0 +1,343 @@
+"""Decoder-only transformer LM covering the dense / moe / vlm families.
+
+Layers are organised in *groups*: ``cfg.layer_pattern`` lists the variants in
+one group (e.g. gemma2's ("local", "global")), and the model scans over
+``n_layers / len(pattern)`` groups with stacked parameters — HLO size and
+compile time are O(1) in depth, which is what makes the 40-cell dry-run grid
+tractable.  Remat policy is applied at group granularity.
+
+Serving uses ring-buffer KV caches: sliding-window layers allocate only
+``window`` slots (gemma2's 4k-window local layers store 8x less KV at the
+32k shapes).  The vocabulary loss is computed in sequence chunks so the
+(B, S, 256k) logits tensor is never materialised.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import attention_apply, attention_decode, attention_init, attn_dims
+from .layers import (
+    cast,
+    embed_apply,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+    softcap,
+)
+from .moe import moe_apply, moe_init
+from .partitioning import shard
+
+Array = jax.Array
+AUX_LOSS_COEF = 0.01
+
+
+# -------------------------------------------------------------------- variants
+def variants_for(cfg) -> Tuple[Dict[str, Any], ...]:
+    out = []
+    for kind in cfg.layer_pattern:
+        out.append({
+            "window": cfg.sliding_window if kind == "local" else None,
+            "moe": cfg.n_experts > 0,
+        })
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------- blocks
+def block_init(key, cfg, variant) -> dict:
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    params = {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "attn": attention_init(k1, cfg),
+        "ln2": jnp.zeros((d,), jnp.float32),
+    }
+    if variant["moe"]:
+        params["moe"] = moe_init(k2, cfg)
+    else:
+        params["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff)
+    if cfg.use_post_norms:
+        params["pn1"] = jnp.zeros((d,), jnp.float32)
+        params["pn2"] = jnp.zeros((d,), jnp.float32)
+    return params
+
+
+def block_apply(params, x, cfg, variant, positions, *, return_kv=False):
+    eps = cfg.norm_eps
+    a_in = rms_norm(x, params["ln1"], eps)
+    if return_kv:
+        attn_out, kv = attention_apply(
+            params["attn"], a_in, cfg, positions=positions,
+            window=variant["window"], return_kv=True)
+    else:
+        attn_out = attention_apply(
+            params["attn"], a_in, cfg, positions=positions, window=variant["window"])
+        kv = None
+    if cfg.use_post_norms:
+        attn_out = rms_norm(attn_out, params["pn1"], eps)
+    x = x + attn_out
+    m_in = rms_norm(x, params["ln2"], eps)
+    if variant["moe"]:
+        mlp_out, aux = moe_apply(params["moe"], m_in, cfg)
+    else:
+        mlp_out, aux = mlp_apply(params["mlp"], m_in, cfg.mlp_act), jnp.float32(0)
+    if cfg.use_post_norms:
+        mlp_out = rms_norm(mlp_out, params["pn2"], eps)
+    x = shard(x + mlp_out, "batch", "seq", "embed")
+    return x, kv, aux
+
+
+def block_decode(params, x, cfg, variant, k_cache, v_cache, pos):
+    eps = cfg.norm_eps
+    a_in = rms_norm(x, params["ln1"], eps)
+    attn_out, k_cache, v_cache = attention_decode(
+        params["attn"], a_in, cfg, k_cache, v_cache, pos)
+    if cfg.use_post_norms:
+        attn_out = rms_norm(attn_out, params["pn1"], eps)
+    x = x + attn_out
+    m_in = rms_norm(x, params["ln2"], eps)
+    if variant["moe"]:
+        mlp_out, _ = moe_apply(params["moe"], m_in, cfg)
+    else:
+        mlp_out = mlp_apply(params["mlp"], m_in, cfg.mlp_act)
+    if cfg.use_post_norms:
+        mlp_out = rms_norm(mlp_out, params["pn2"], eps)
+    return x + mlp_out, k_cache, v_cache
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "block":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:  # 'full'
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ----------------------------------------------------------------------- model
+class DecoderLM:
+    """Dense / MoE / early-fusion-VLM decoder language model."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.variants = variants_for(cfg)
+        self.group = len(self.variants)
+        assert cfg.n_layers % self.group == 0, (cfg.n_layers, cfg.layer_pattern)
+        self.n_groups = cfg.n_layers // self.group
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, 3 + self.group)
+        params = {
+            "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model),
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = embed_init(keys[1], cfg.vocab_size, cfg.d_model)
+        for i, variant in enumerate(self.variants):
+            gkeys = jax.random.split(keys[3 + i], self.n_groups)
+            params[f"layers_{i}"] = jax.vmap(
+                lambda k: block_init(k, cfg, variant))(gkeys)
+        return params
+
+    # ------------------------------------------------------------- embedding
+    def _embed_inputs(self, params, batch) -> Tuple[Array, Array]:
+        cfg = self.cfg
+        x = embed_apply(cast(params["embed"], cfg), batch["tokens"],
+                        cfg.scale_embeddings, cfg.d_model)
+        if cfg.frontend is not None and "patch_embeds" in batch:
+            fe = cast(batch["patch_embeds"], cfg)
+            x = jnp.concatenate([fe, x], axis=1)  # early fusion
+        x = shard(x, "batch", "seq", "embed")
+        positions = jnp.arange(x.shape[1])[None, :]
+        return x, positions
+
+    # --------------------------------------------------------------- forward
+    def hidden_states(self, params, batch) -> Tuple[Array, Array]:
+        """Full-sequence forward -> (final-normed hidden, aux loss)."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+
+        def group_body(x, layer_params):
+            aux = jnp.float32(0)
+            for variant, p in zip(self.variants, layer_params):
+                x, _, a = block_apply(p, x, cfg, variant, positions)
+                aux = aux + a
+            return x, aux
+
+        body = _remat(group_body, cfg)
+        xs = tuple(params[f"layers_{i}"] for i in range(self.group))
+        x, auxes = jax.lax.scan(body, x, xs)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, jnp.sum(auxes)
+
+    def logits(self, params, hidden: Array) -> Array:
+        cfg = self.cfg
+        w = params["embed"] if cfg.tie_embeddings else params["head"]
+        out = hidden @ cast(w, cfg).T
+        out = softcap(out.astype(jnp.float32), cfg.final_logit_softcap)
+        return shard(out, "batch", "seq", "vocab")
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch) -> Tuple[Array, Dict[str, Array]]:
+        """Chunked-vocab causal LM loss; labels = next-token ids, -1 = pad."""
+        cfg = self.cfg
+        hidden, aux = self.hidden_states(params, batch)
+        labels = batch["labels"]
+        if cfg.frontend is not None and "patch_embeds" in batch:
+            n_front = batch["patch_embeds"].shape[1]
+            pad = jnp.full((labels.shape[0], n_front), -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        B, S, D = hidden.shape
+        chunk = min(cfg.loss_chunk, S)
+        n_chunks = S // chunk
+        rem = S - n_chunks * chunk
+        w = cast(params["embed"] if cfg.tie_embeddings else params["head"], cfg)
+
+        def ce(h, l):
+            logits = h @ w.T
+            logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+            logits = shard(logits, "batch", "seq", "vocab")
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, jnp.maximum(l, 0)[..., None], axis=-1)[..., 0]
+            valid = (l >= 0).astype(jnp.float32)
+            return jnp.sum((logz - gold) * valid), jnp.sum(valid)
+
+        if n_chunks > 1:
+            hs = jnp.moveaxis(
+                hidden[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, D), 1, 0)
+            ls = jnp.moveaxis(
+                labels[:, : n_chunks * chunk].reshape(B, n_chunks, chunk), 1, 0)
+
+            def loss_chunk_body(c, hl):
+                t, n = ce(*hl)
+                return (c[0] + t, c[1] + n), None
+
+            (tot, cnt) = jax.lax.scan(
+                loss_chunk_body, (jnp.float32(0), jnp.float32(0)), (hs, ls))[0]
+        else:
+            tot, cnt = ce(hidden[:, : n_chunks * chunk], labels[:, : n_chunks * chunk])
+        if rem:
+            t2, c2 = ce(hidden[:, n_chunks * chunk:], labels[:, n_chunks * chunk:])
+            tot, cnt = tot + t2, cnt + c2
+        nll = tot / jnp.maximum(cnt, 1.0)
+        total = nll + AUX_LOSS_COEF * aux
+        return total, {"nll": nll, "aux": aux, "tokens": cnt}
+
+    # --------------------------------------------------------------- serving
+    def cache_window(self, variant, max_len: int) -> int:
+        w = variant["window"]
+        return min(w, max_len) if w else max_len
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+        d = attn_dims(self.cfg)
+        cache = {}
+        for i, variant in enumerate(self.variants):
+            W = self.cache_window(variant, max_len)
+            shp = (self.n_groups, batch, W, d.n_kv, d.head_dim)
+            cache[f"k{i}"] = jnp.zeros(shp, dtype)
+            cache[f"v{i}"] = jnp.zeros(shp, dtype)
+        return cache
+
+    def cache_specs(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+        d = attn_dims(self.cfg)
+        out = {}
+        for i, variant in enumerate(self.variants):
+            W = self.cache_window(variant, max_len)
+            shp = (self.n_groups, batch, W, d.n_kv, d.head_dim)
+            out[f"k{i}"] = jax.ShapeDtypeStruct(shp, dtype)
+            out[f"v{i}"] = jax.ShapeDtypeStruct(shp, dtype)
+        return out
+
+    def prefill(self, params, batch, max_len: int, cache_dtype=jnp.bfloat16):
+        """Run the prompt, build the KV cache, return last-position logits."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        B, S, _ = x.shape
+
+        def group_body(x, layer_params):
+            kvs = []
+            for variant, p in zip(self.variants, layer_params):
+                x, kv, _ = block_apply(p, x, cfg, variant, positions, return_kv=True)
+                kvs.append(kv)
+            return x, tuple(kvs)
+
+        xs = tuple(params[f"layers_{i}"] for i in range(self.group))
+        x, kv_stacks = jax.lax.scan(_remat(group_body, cfg), x, xs)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self.logits(params, x[:, -1:, :])
+        cache = {}
+        for i, variant in enumerate(self.variants):
+            W = self.cache_window(variant, max_len)
+            k, v = kv_stacks[i]
+            if W == S:
+                # scan ys ARE the cache — no zeros/copy/update round-trip
+                # (§Perf gemma2 iteration 2: saves 3 full-cache traversals)
+                cache[f"k{i}"] = k.astype(cache_dtype)
+                cache[f"v{i}"] = v.astype(cache_dtype)
+            elif W > S:  # pad to max_len; position p lives at slot p
+                pad = [(0, 0), (0, 0), (0, W - S), (0, 0), (0, 0)]
+                cache[f"k{i}"] = jnp.pad(k.astype(cache_dtype), pad)
+                cache[f"v{i}"] = jnp.pad(v.astype(cache_dtype), pad)
+            else:  # ring buffer: keep last W positions at slots p % W
+                cache[f"k{i}"] = jnp.roll(
+                    k[:, :, S - W:].astype(cache_dtype), S % W, axis=2)
+                cache[f"v{i}"] = jnp.roll(
+                    v[:, :, S - W:].astype(cache_dtype), S % W, axis=2)
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache, pos):
+        """tokens: (B, 1); pos: scalar int32 (position being written)."""
+        cfg = self.cfg
+        x = embed_apply(cast(params["embed"], cfg), tokens,
+                        cfg.scale_embeddings, cfg.d_model)
+
+        def group_body(x, inp):
+            layer_params = inp[: self.group]
+            kvs = inp[self.group:]
+            new_kvs = []
+            for j, (variant, p) in enumerate(zip(self.variants, layer_params)):
+                kc, vc = kvs[2 * j], kvs[2 * j + 1]
+                kc = shard(kc, "batch", "kv_seq", "kv", "head_dim")
+                vc = shard(vc, "batch", "kv_seq", "kv", "head_dim")
+                x, kc, vc = block_decode(p, x, cfg, variant, kc, vc, pos)
+                new_kvs += [kc, vc]
+            return x, tuple(new_kvs)
+
+        xs = tuple(params[f"layers_{i}"] for i in range(self.group)) + tuple(
+            v for i in range(self.group) for v in (cache[f"k{i}"], cache[f"v{i}"]))
+        x, new_cache = jax.lax.scan(group_body, x, xs)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self.logits(params, x)
+        out_cache = {}
+        for i in range(self.group):
+            out_cache[f"k{i}"] = new_cache[2 * i]
+            out_cache[f"v{i}"] = new_cache[2 * i + 1]
+        return logits, out_cache
+
+    # --------------------------------------------------------------- specs
+    def input_specs(self, shape, dtype=jnp.int32) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        n_front = cfg.n_frontend_tokens if cfg.frontend else 0
+        specs: Dict[str, jax.ShapeDtypeStruct] = {}
+        if shape.kind in ("train", "prefill"):
+            s_text = S - n_front
+            specs["tokens"] = jax.ShapeDtypeStruct((B, s_text), jnp.int32)
+            if n_front:
+                specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (B, n_front, cfg.d_model), jnp.dtype(cfg.dtype))
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, s_text), jnp.int32)
+        else:  # decode: one new token vs a seq_len KV cache
+            specs["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        return specs

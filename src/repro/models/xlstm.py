@@ -1,0 +1,370 @@
+"""xLSTM blocks (sLSTM + mLSTM) for the xlstm-125m architecture.
+
+mLSTM: matrix-memory LSTM with exponential gating (parallelisable):
+    C_t = f_t C_{t-1} + i_t k_t v_t^T,   n_t = f_t n_{t-1} + i_t k_t
+    h_t = (q_t . C_t) / max(|q_t . n_t|, exp(-m_t))
+Training/prefill uses the stabilised parallel (quadratic) form; decode is an
+O(1) state update — which is what makes ``long_500k`` native for this arch.
+
+sLSTM: scalar-memory LSTM with exponential gating and block-diagonal (per
+head) recurrent weights; strictly sequential -> lax.scan over time.
+
+Both match their recurrent references (tested in tests/test_models_core.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init, rms_norm
+from .ssm import CONV_WIDTH, _causal_conv
+
+Array = jax.Array
+
+
+class XLSTMDims(NamedTuple):
+    d_model: int
+    n_heads: int
+    d_inner: int   # mLSTM up-projection (2x)
+    dk: int        # mLSTM per-head q/k/v dim
+    dh: int        # sLSTM per-head hidden dim
+
+
+def xlstm_dims(cfg) -> XLSTMDims:
+    d_inner = 2 * cfg.d_model
+    return XLSTMDims(cfg.d_model, cfg.n_heads, d_inner,
+                     d_inner // cfg.n_heads, cfg.d_model // cfg.n_heads)
+
+
+# ======================================================================= mLSTM
+def mlstm_init(key, cfg) -> dict:
+    d = xlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "up": dense_init(ks[0], d.d_model, 2 * d.d_inner),      # x branch + z gate
+        "conv_w": jax.random.normal(ks[1], (CONV_WIDTH, d.d_inner), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((d.d_inner,), jnp.float32),
+        "wq": dense_init(ks[2], d.d_inner, d.d_inner),
+        "wk": dense_init(ks[3], d.d_inner, d.d_inner),
+        "wv": dense_init(ks[4], d.d_inner, d.d_inner),
+        "w_if": dense_init(ks[5], d.d_inner, 2 * cfg.n_heads, scale=0.02),
+        "b_if": jnp.concatenate([jnp.zeros((cfg.n_heads,)), 3.0 * jnp.ones((cfg.n_heads,))]),
+        "norm": jnp.zeros((d.d_inner,), jnp.float32),
+        "down": dense_init(ks[6], d.d_inner, d.d_model),
+    }
+
+
+def _mlstm_qkvif(params, x, d: XLSTMDims):
+    up = x @ params["up"].astype(x.dtype)
+    xb, z = jnp.split(up, 2, axis=-1)
+    xc = _causal_conv(xb, params["conv_w"].astype(x.dtype), params["conv_b"])
+    B, L = x.shape[:2]
+    q = (xc @ params["wq"].astype(x.dtype)).reshape(B, L, d.n_heads, d.dk)
+    k = (xc @ params["wk"].astype(x.dtype)).reshape(B, L, d.n_heads, d.dk)
+    v = (xb @ params["wv"].astype(x.dtype)).reshape(B, L, d.n_heads, d.dk)
+    gif = (xb @ params["w_if"].astype(x.dtype)).astype(jnp.float32) + params["b_if"]
+    logi, fraw = jnp.split(gif, 2, axis=-1)      # (B, L, H)
+    logf = jax.nn.log_sigmoid(fraw)
+    return q, k, v, logi, logf, z
+
+
+def mlstm_parallel(q, k, v, logi, logf) -> Array:
+    """Stabilised parallel form. q,k,v: (B,L,H,D); gates (B,L,H)."""
+    B, L, H, D = q.shape
+    qf = q.astype(jnp.float32) / np.sqrt(D)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    lf = jnp.moveaxis(logf, -1, 1)               # (B,H,L)
+    li = jnp.moveaxis(logi, -1, 1)
+    cum = jnp.cumsum(lf, axis=-1)
+    dt = cum[..., :, None] - cum[..., None, :] + li[..., None, :]   # (B,H,L,L)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    dt = jnp.where(mask, dt, -jnp.inf)
+    m = jnp.max(dt, axis=-1)                      # (B,H,L)
+    Dmat = jnp.exp(dt - m[..., None])
+    scores = jnp.einsum("blhd,bshd->bhls", qf, kf) * Dmat
+    b = jnp.sum(scores, axis=-1)                  # (B,H,L)
+    denom = jnp.maximum(jnp.abs(b), jnp.exp(-m))
+    h = jnp.einsum("bhls,bshd->blhd", scores / denom[..., None], vf)
+    return h.astype(q.dtype)
+
+
+def mlstm_chunked(q, k, v, logi, logf, chunk: int = 256,
+                  initial_state=None, return_state: bool = False):
+    """Chunked mLSTM: O(L * chunk) memory instead of the O(L^2) parallel
+    form — the §Perf fix for xlstm prefill_32k (DESIGN.md hillclimb cell 1).
+
+    Within a chunk: quadratic with local stabilisation; across chunks: the
+    recurrent (C, n, m) state.  Matches ``mlstm_parallel`` exactly.
+    """
+    B, L, H, D = q.shape
+    nc = max(1, L // chunk)
+    Q = L // nc
+    assert Q * nc == L, (L, chunk)
+    qf = q.astype(jnp.float32) / np.sqrt(D)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+
+    def r(t, *shape):
+        return jnp.moveaxis(t.reshape(B, nc, Q, *shape), 1, 0)
+
+    qc, kc, vc = r(qf, H, D), r(kf, H, D), r(vf, H, D)   # (nc,B,Q,H,D)
+    lic = jnp.moveaxis(r(logi, H), -1, -2)               # (nc,B,H,Q)
+    lfc = jnp.moveaxis(r(logf, H), -1, -2)
+
+    if initial_state is None:
+        C0 = jnp.zeros((B, H, D, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = initial_state
+
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def body(state, inp):
+        C_in, n_in, m_in = state
+        qb, kb, vb, li, lf = inp                      # (B,Q,H,D)/(B,H,Q)
+        cum = jnp.cumsum(lf, axis=-1)                 # (B,H,Q) local decay
+        # intra-chunk log weights w[t,s] = cum[t]-cum[s]+li[s]
+        w = cum[..., :, None] - cum[..., None, :] + li[..., None, :]
+        w = jnp.where(mask, w, -jnp.inf)
+        m_intra = jnp.max(w, axis=-1)                 # (B,H,Q)
+        m_inter = m_in[..., None] + cum               # (B,H,Q)
+        m_t = jnp.maximum(m_intra, m_inter)
+        Dmat = jnp.exp(w - m_t[..., None])
+        scores = jnp.einsum("bqhd,bshd->bhqs", qb, kb) * Dmat
+        num = jnp.einsum("bhqs,bshd->bqhd", scores, vb)
+        b_intra = jnp.sum(scores, axis=-1)            # (B,H,Q)
+        # inter-chunk contribution
+        inter_scale = jnp.exp(m_inter - m_t)          # (B,H,Q)
+        num_inter = jnp.einsum("bqhd,bhde->bqhe", qb, C_in)
+        num = num + num_inter * jnp.moveaxis(inter_scale, -1, 1)[..., None]
+        b_inter = jnp.einsum("bqhd,bhd->bhq", qb, n_in) * inter_scale
+        b_tot = b_intra + b_inter
+        den = jnp.maximum(jnp.abs(b_tot), jnp.exp(-m_t))
+        h = num / jnp.moveaxis(den, -1, 1)[..., None]  # (B,Q,H,D)
+        # state update to end of chunk
+        cum_end = cum[..., -1:]
+        w_out = cum_end - cum + li                    # (B,H,Q)
+        m_out = jnp.maximum(m_in + cum_end[..., 0], jnp.max(w_out, axis=-1))
+        wo = jnp.exp(w_out - m_out[..., None])        # (B,H,Q)
+        C_new = C_in * jnp.exp(m_in + cum_end[..., 0] - m_out)[..., None, None] \
+            + jnp.einsum("bhq,bqhd,bqhe->bhde", wo, kb, vb)
+        n_new = n_in * jnp.exp(m_in + cum_end[..., 0] - m_out)[..., None] \
+            + jnp.einsum("bhq,bqhd->bhd", wo, kb)
+        return (C_new, n_new, m_out), h
+
+    state, hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, L, H, D).astype(q.dtype)
+    if return_state:
+        return h, state
+    return h
+
+
+def mlstm_step(q, k, v, logi, logf, state):
+    """O(1) recurrence. q,k,v: (B,H,D); gates (B,H); state (C,n,m)."""
+    C, n, m = state
+    qf = q.astype(jnp.float32) / np.sqrt(q.shape[-1])
+    m_new = jnp.maximum(logf + m, logi)
+    fp = jnp.exp(logf + m - m_new)[..., None]
+    ip = jnp.exp(logi - m_new)[..., None]
+    C = C * fp[..., None] + ip[..., None] * k.astype(jnp.float32)[..., :, None] \
+        * v.astype(jnp.float32)[..., None, :]
+    n = n * fp + ip * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m_new))
+    return (num / den[..., None]).astype(q.dtype), (C, n, m_new)
+
+
+def _mlstm_core(q, k, v, logi, logf, cfg):
+    if getattr(cfg, "mlstm_impl", "quadratic") == "chunked":
+        return mlstm_chunked(q, k, v, logi, logf,
+                             chunk=getattr(cfg, "scan_chunk", 256))
+    return mlstm_parallel(q, k, v, logi, logf)
+
+
+def mlstm_apply(params, x, cfg) -> Array:
+    d = xlstm_dims(cfg)
+    q, k, v, logi, logf, z = _mlstm_qkvif(params, x, d)
+    h = _mlstm_core(q, k, v, logi, logf, cfg)
+    h = h.reshape(*x.shape[:2], d.d_inner)
+    h = rms_norm(h, params["norm"], getattr(cfg, "norm_eps", 1e-6))
+    return (h * jax.nn.silu(z)) @ params["down"].astype(x.dtype)
+
+
+def mlstm_prefill(params, x, cfg):
+    """Parallel forward + exact final recurrent state (== decode recurrence).
+
+    State weights: w_s = exp(cum_f[L-1] - cum_f[s] + logi_s - m_state) with
+    m_state = max_s(...) — identical to the stabilised recurrence's (C, n, m).
+    """
+    d = xlstm_dims(cfg)
+    q, k, v, logi, logf, z = _mlstm_qkvif(params, x, d)
+    if getattr(cfg, "mlstm_impl", "quadratic") == "chunked":
+        h, (C, n, m_state) = mlstm_chunked(
+            q, k, v, logi, logf, chunk=getattr(cfg, "scan_chunk", 256),
+            return_state=True)
+    else:
+        h = mlstm_parallel(q, k, v, logi, logf)
+        lf = jnp.moveaxis(logf, -1, 1)           # (B,H,L)
+        li = jnp.moveaxis(logi, -1, 1)
+        cum = jnp.cumsum(lf, axis=-1)
+        w_log = cum[..., -1:] - cum + li         # (B,H,L)
+        m_state = jnp.max(w_log, axis=-1)        # (B,H)
+        w = jnp.exp(w_log - m_state[..., None])
+        kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+        C = jnp.einsum("bhl,blhd,blhe->bhde", w, kf, vf)
+        n = jnp.einsum("bhl,blhd->bhd", w, kf)
+    h = h.reshape(*x.shape[:2], d.d_inner)
+    h = rms_norm(h, params["norm"], getattr(cfg, "norm_eps", 1e-6))
+    out = (h * jax.nn.silu(z)) @ params["down"].astype(x.dtype)
+    # conv rolling buffer: only the last W-1 steps' pre-conv activations are
+    # needed -> slice BEFORE the up matmul (§Perf iteration 3: avoids
+    # recomputing + re-writing the full (B, L, 2*d_inner) tensor)
+    up_tail = x[:, x.shape[1] - (CONV_WIDTH - 1):, :] @ params["up"].astype(x.dtype)
+    buf = jnp.split(up_tail, 2, axis=-1)[0].astype(jnp.float32)
+    return out, (C, n, m_state), buf
+
+
+def mlstm_decode(params, x, cfg, state, conv_buf):
+    """x: (B,1,d_model). state: (C (B,H,D,D), n (B,H,D), m (B,H))."""
+    d = xlstm_dims(cfg)
+    up = x[:, 0, :] @ params["up"].astype(x.dtype)
+    xb, z = jnp.split(up, 2, axis=-1)
+    w = params["conv_w"].astype(x.dtype)
+    hist = jnp.concatenate([conv_buf.astype(x.dtype), xb[:, None, :]], axis=1)
+    conv = sum(hist[:, i, :] * w[i] for i in range(CONV_WIDTH))
+    xc = jax.nn.silu(conv + params["conv_b"].astype(conv.dtype))
+    B = x.shape[0]
+    q = (xc @ params["wq"].astype(x.dtype)).reshape(B, d.n_heads, d.dk)
+    k = (xc @ params["wk"].astype(x.dtype)).reshape(B, d.n_heads, d.dk)
+    v = (xb @ params["wv"].astype(x.dtype)).reshape(B, d.n_heads, d.dk)
+    gif = (xb @ params["w_if"].astype(x.dtype)).astype(jnp.float32) + params["b_if"]
+    logi, fraw = jnp.split(gif, 2, axis=-1)
+    h, state = mlstm_step(q, k, v, logi, jax.nn.log_sigmoid(fraw), state)
+    h = h.reshape(B, d.d_inner)
+    h = rms_norm(h, params["norm"], getattr(cfg, "norm_eps", 1e-6))
+    out = ((h * jax.nn.silu(z)) @ params["down"].astype(x.dtype))[:, None, :]
+    return out, state, hist[:, 1:, :]
+
+
+def mlstm_state_shapes(cfg, batch: int):
+    d = xlstm_dims(cfg)
+    return (
+        (batch, d.n_heads, d.dk, d.dk),   # C
+        (batch, d.n_heads, d.dk),         # n
+        (batch, d.n_heads),               # m
+        (batch, CONV_WIDTH - 1, d.d_inner),  # conv buffer
+    )
+
+
+# ======================================================================= sLSTM
+def slstm_init(key, cfg) -> dict:
+    d = xlstm_dims(cfg)
+    ks = jax.random.split(key, 5)
+    ffd = int(cfg.d_model * 4 / 3)
+    return {
+        "conv_w": jax.random.normal(ks[0], (CONV_WIDTH, d.d_model), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((d.d_model,), jnp.float32),
+        "wx": dense_init(ks[1], d.d_model, 4 * d.d_model),     # z,i,f,o
+        "r": jax.random.normal(ks[2], (d.n_heads, d.dh, 4 * d.dh), jnp.float32)
+        / np.sqrt(d.dh),
+        "b": jnp.concatenate(
+            [jnp.zeros((2 * d.d_model,)), 3.0 * jnp.ones((d.d_model,)),
+             jnp.zeros((d.d_model,))]
+        ),
+        "norm": jnp.zeros((d.d_model,), jnp.float32),
+        "ff_wi": dense_init(ks[3], d.d_model, 2 * ffd),
+        "ff_wo": dense_init(ks[4], ffd, d.d_model),
+    }
+
+
+def slstm_scan(params, x, cfg, state=None):
+    """x: (B, L, d_model) -> (h_seq, final_state). Sequential lax.scan."""
+    d = xlstm_dims(cfg)
+    B, L, _ = x.shape
+    xc = _causal_conv(x, params["conv_w"].astype(x.dtype), params["conv_b"])
+    gx = (xc @ params["wx"].astype(x.dtype)).astype(jnp.float32) + params["b"]  # (B,L,4dm)
+    r = params["r"]
+
+    if state is None:
+        z = jnp.zeros((B, d.n_heads, d.dh), jnp.float32)
+        state = (z, z, z, jnp.zeros((B, d.n_heads), jnp.float32) - 10.0)
+
+    def step(carry, g_t):
+        h, c, n, m = carry
+        rec = jnp.einsum("bhd,hde->bhe", h, r)                  # (B,H,4dh)
+        g = g_t.reshape(B, d.n_heads, 4 * d.dh) + rec
+        zr, ir, fr, orr = jnp.split(g, 4, axis=-1)              # (B,H,dh)
+        zt = jnp.tanh(zr)
+        ot = jax.nn.sigmoid(orr)
+        li, lf = ir, jax.nn.log_sigmoid(fr)
+        m_new = jnp.maximum(lf + m[..., None], li)
+        ip = jnp.exp(li - m_new)
+        fp = jnp.exp(lf + m[..., None] - m_new)
+        c_new = fp * c + ip * zt
+        n_new = fp * n + ip
+        h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, jnp.max(m_new, axis=-1)), h_new
+
+    final, hs = jax.lax.scan(step, state, jnp.moveaxis(gx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, L, d.d_model).astype(x.dtype)
+    return hs, final
+
+
+def slstm_apply(params, x, cfg) -> Array:
+    hs, _ = slstm_scan(params, x, cfg)
+    hs = rms_norm(hs, params["norm"], getattr(cfg, "norm_eps", 1e-6))
+    gate_up = hs @ params["ff_wi"].astype(x.dtype)
+    g, u = jnp.split(gate_up, 2, axis=-1)
+    return (jax.nn.gelu(g) * u) @ params["ff_wo"].astype(x.dtype)
+
+
+def slstm_prefill(params, x, cfg):
+    """Forward + final recurrent state + conv rolling buffer."""
+    hs, final = slstm_scan(params, x, cfg)
+    hs = rms_norm(hs, params["norm"], getattr(cfg, "norm_eps", 1e-6))
+    gate_up = hs @ params["ff_wi"].astype(x.dtype)
+    g, u = jnp.split(gate_up, 2, axis=-1)
+    out = (jax.nn.gelu(g) * u) @ params["ff_wo"].astype(x.dtype)
+    buf = x[:, x.shape[1] - (CONV_WIDTH - 1):, :].astype(jnp.float32)
+    return out, final, buf
+
+
+def slstm_decode(params, x, cfg, state, conv_buf):
+    d = xlstm_dims(cfg)
+    B = x.shape[0]
+    w = params["conv_w"].astype(x.dtype)
+    hist = jnp.concatenate([conv_buf.astype(x.dtype), x[:, 0:1, :]], axis=1)
+    conv = sum(hist[:, i, :] * w[i] for i in range(CONV_WIDTH))
+    xc = jax.nn.silu(conv + params["conv_b"].astype(conv.dtype))
+    gx = (xc @ params["wx"].astype(x.dtype)).astype(jnp.float32) + params["b"]
+    h, c, n, m = state
+    rec = jnp.einsum("bhd,hde->bhe", h, params["r"])
+    g = gx.reshape(B, d.n_heads, 4 * d.dh) + rec
+    zr, ir, fr, orr = jnp.split(g, 4, axis=-1)
+    zt, ot = jnp.tanh(zr), jax.nn.sigmoid(orr)
+    li, lf = ir, jax.nn.log_sigmoid(fr)
+    m_new = jnp.maximum(lf + m[..., None], li)
+    ip, fp = jnp.exp(li - m_new), jnp.exp(lf + m[..., None] - m_new)
+    c_new = fp * c + ip * zt
+    n_new = fp * n + ip
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    hs = h_new.reshape(B, 1, d.d_model).astype(x.dtype)
+    hs = rms_norm(hs, params["norm"], getattr(cfg, "norm_eps", 1e-6))
+    gate_up = hs @ params["ff_wi"].astype(x.dtype)
+    gg, u = jnp.split(gate_up, 2, axis=-1)
+    out = (jax.nn.gelu(gg) * u) @ params["ff_wo"].astype(x.dtype)
+    return out, (h_new, c_new, n_new, jnp.max(m_new, axis=-1)), hist[:, 1:, :]
+
+
+def slstm_state_shapes(cfg, batch: int):
+    d = xlstm_dims(cfg)
+    return (
+        (batch, d.n_heads, d.dh),  # h
+        (batch, d.n_heads, d.dh),  # c
+        (batch, d.n_heads, d.dh),  # n
+        (batch, d.n_heads),        # m
+        (batch, CONV_WIDTH - 1, d.d_model),  # conv buffer
+    )

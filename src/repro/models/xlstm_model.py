@@ -1,0 +1,206 @@
+"""xLSTM language model (xlstm-125m): mLSTM blocks with periodic sLSTM.
+
+Blocks are organised in groups of ``slstm_every``: (slstm_every - 1) mLSTM
+blocks followed by one sLSTM block; the model scans over groups.  Recurrent
+state replaces the KV cache, so decode cost and state are O(1) in context
+length — ``long_500k`` is native for this arch (DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import cast, embed_apply, embed_init, rms_norm
+from .partitioning import shard
+from .transformer import _remat
+from .xlstm import (
+    mlstm_apply,
+    mlstm_decode,
+    mlstm_init,
+    mlstm_state_shapes,
+    slstm_apply,
+    slstm_decode,
+    slstm_init,
+    slstm_state_shapes,
+    xlstm_dims,
+)
+
+Array = jax.Array
+
+
+class XLSTMModel:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.period = cfg.slstm_every or cfg.n_layers
+        assert cfg.n_layers % self.period == 0
+        self.n_groups = cfg.n_layers // self.period
+        self.n_mlstm = self.period - 1 if cfg.slstm_every else self.period
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        mkeys = jax.random.split(ks[0], self.n_groups * self.n_mlstm).reshape(
+            self.n_groups, self.n_mlstm, 2)
+        params = {
+            "embed": embed_init(ks[1], cfg.vocab_size, cfg.d_model),
+            "mlstm": jax.vmap(jax.vmap(
+                lambda k: {"ln": jnp.zeros((cfg.d_model,), jnp.float32),
+                           "blk": mlstm_init(k, cfg)}))(mkeys),
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if cfg.slstm_every:
+            skeys = jax.random.split(ks[2], self.n_groups)
+            params["slstm"] = jax.vmap(
+                lambda k: {"ln": jnp.zeros((cfg.d_model,), jnp.float32),
+                           "blk": slstm_init(k, cfg)})(skeys)
+        return params
+
+    # --------------------------------------------------------------- forward
+    def hidden_states(self, params, batch) -> Array:
+        cfg = self.cfg
+        x = embed_apply(cast(params["embed"], cfg), batch["tokens"], False, cfg.d_model)
+        x = shard(x, "batch", "seq", "embed")
+
+        def mlstm_body(x, p):
+            y = mlstm_apply(p["blk"], rms_norm(x, p["ln"], cfg.norm_eps), cfg)
+            return shard(x + y, "batch", "seq", "embed"), None
+
+        def group_body(x, gp):
+            x, _ = jax.lax.scan(mlstm_body, x, gp["m"])
+            if cfg.slstm_every:
+                p = gp["s"]
+                x = x + slstm_apply(p["blk"], rms_norm(x, p["ln"], cfg.norm_eps), cfg)
+            return x, None
+
+        xs = {"m": params["mlstm"]}
+        if cfg.slstm_every:
+            xs["s"] = params["slstm"]
+        x, _ = jax.lax.scan(_remat(group_body, cfg), x, xs)
+        return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    def loss(self, params, batch) -> Tuple[Array, Dict[str, Array]]:
+        cfg = self.cfg
+        hidden = self.hidden_states(params, batch)
+        labels = batch["labels"]
+        w = cast(params["embed"], cfg)  # tied
+        logits = shard((hidden @ w.T).astype(jnp.float32), "batch", "seq", "vocab")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], -1)[..., 0]
+        valid = (labels >= 0).astype(jnp.float32)
+        nll = jnp.sum((logz - gold) * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+        return nll, {"nll": nll, "tokens": jnp.sum(valid)}
+
+    # --------------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_len: int = 0, dtype=jnp.bfloat16) -> dict:
+        """Recurrent state; max_len is ignored (O(1) in context!)."""
+        cfg = self.cfg
+        mC, mn, mm, mbuf = mlstm_state_shapes(cfg, batch)
+        g, nm = self.n_groups, self.n_mlstm
+        cache = {
+            "mC": jnp.zeros((g, nm) + mC, jnp.float32),
+            "mn": jnp.zeros((g, nm) + mn, jnp.float32),
+            "mm": jnp.full((g, nm) + mm, -1e30, jnp.float32),
+            "mbuf": jnp.zeros((g, nm) + mbuf, jnp.float32),
+        }
+        if cfg.slstm_every:
+            sh, sc, sn, sm, sbuf = slstm_state_shapes(cfg, batch)
+            cache.update({
+                "sh": jnp.zeros((g,) + sh, jnp.float32),
+                "sc": jnp.zeros((g,) + sc, jnp.float32),
+                "sn": jnp.zeros((g,) + sn, jnp.float32),
+                "sm": jnp.full((g,) + sm, -10.0, jnp.float32),
+                "sbuf": jnp.zeros((g,) + sbuf, jnp.float32),
+            })
+        return cache
+
+    def cache_specs(self, batch: int, max_len: int = 0, dtype=jnp.bfloat16) -> dict:
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len, dtype))
+
+    def prefill(self, params, batch, max_len: int = 0, cache_dtype=jnp.bfloat16):
+        """Parallel prefill: run the quadratic mLSTM / scan sLSTM forms and
+        emit the exact final recurrent states (validated == decode replay)."""
+        from .xlstm import mlstm_prefill, slstm_prefill
+
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed_apply(cast(params["embed"], cfg), tokens, False, cfg.d_model)
+
+        def mlstm_body(x, p):
+            y, (C, n, m), buf = mlstm_prefill(
+                p["blk"], rms_norm(x, p["ln"], cfg.norm_eps), cfg)
+            return shard(x + y, "batch", "seq", "embed"), (C, n, m, buf)
+
+        def group_body(x, gp):
+            x, (C, n, m, buf) = jax.lax.scan(mlstm_body, x, gp["m"])
+            ys = {"mC": C, "mn": n, "mm": m, "mbuf": buf}
+            if cfg.slstm_every:
+                p = gp["s"]
+                y, st, sbuf = slstm_prefill(
+                    p["blk"], rms_norm(x, p["ln"], cfg.norm_eps), cfg)
+                x = shard(x + y, "batch", "seq", "embed")
+                ys.update({"sh": st[0], "sc": st[1], "sn": st[2], "sm": st[3],
+                           "sbuf": sbuf})
+            return x, ys
+
+        xs = {"m": params["mlstm"]}
+        if cfg.slstm_every:
+            xs["s"] = params["slstm"]
+        x, cache = jax.lax.scan(group_body, x, xs)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        w = cast(params["embed"], cfg)
+        logits = shard((x[:, -1:, :] @ w.T).astype(jnp.float32),
+                       "batch", "seq", "vocab")
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache, pos=None):
+        return self.decode_step_at(params, tokens, cache)
+
+    def decode_step_at(self, params, tokens, cache):
+        cfg = self.cfg
+        x = embed_apply(cast(params["embed"], cfg), tokens, False, cfg.d_model)
+
+        def mlstm_step_body(x, inp):
+            p, C, n, m, buf = inp
+            y, (C, n, m), buf = mlstm_decode(
+                p["blk"], rms_norm(x, p["ln"], cfg.norm_eps), cfg, (C, n, m), buf)
+            return x + y, (C, n, m, buf)
+
+        def group_body(x, inp):
+            gp = inp
+            x, (C, n, m, buf) = jax.lax.scan(
+                mlstm_step_body, x,
+                (gp["m"], gp["mC"], gp["mn"], gp["mm"], gp["mbuf"]))
+            out = {"mC": C, "mn": n, "mm": m, "mbuf": buf}
+            if cfg.slstm_every:
+                p = gp["s"]
+                y, st, sbuf = slstm_decode(
+                    p["blk"], rms_norm(x, p["ln"], cfg.norm_eps), cfg,
+                    (gp["sh"], gp["sc"], gp["sn"], gp["sm"]), gp["sbuf"])
+                x = x + y
+                out.update({"sh": st[0], "sc": st[1], "sn": st[2], "sm": st[3],
+                            "sbuf": sbuf})
+            return x, out
+
+        xs = {"m": params["mlstm"], "mC": cache["mC"], "mn": cache["mn"],
+              "mm": cache["mm"], "mbuf": cache["mbuf"]}
+        if cfg.slstm_every:
+            xs.update({"s": params["slstm"], "sh": cache["sh"], "sc": cache["sc"],
+                       "sn": cache["sn"], "sm": cache["sm"], "sbuf": cache["sbuf"]})
+        x, new_cache = jax.lax.scan(group_body, x, xs)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        w = cast(params["embed"], cfg)
+        logits = shard((x @ w.T).astype(jnp.float32), "batch", "seq", "vocab")
+        return logits, new_cache
+
+    # ----------------------------------------------------------------- specs
+    def input_specs(self, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            return specs
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}

@@ -1,0 +1,2 @@
+from .batcher import Batcher  # noqa: F401
+from .engine import ReplicaEngine, ReuseRouter, ServeRequest, ServeResult, ServingFleet  # noqa: F401

@@ -1,0 +1,60 @@
+"""Request batcher: deadline-aware micro-batching for the serve path.
+
+Groups compatible requests (same service, same phase) into model-sized
+batches; flush triggers on size or the earliest TTC-derived deadline.  The
+paper's TTC estimates (§IV-C) provide the per-service latency model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from .engine import ServeRequest
+
+
+@dataclasses.dataclass
+class PendingEntry:
+    req: ServeRequest
+    arrival_s: float
+
+
+class Batcher:
+    def __init__(self, max_batch: int = 8, max_wait_s: float = 0.005):
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.queues: Dict[str, List[PendingEntry]] = {}
+        self.flushes = 0
+        self.batched_total = 0
+
+    def add(self, req: ServeRequest, now: float) -> Optional[List[ServeRequest]]:
+        q = self.queues.setdefault(req.service, [])
+        q.append(PendingEntry(req, now))
+        if len(q) >= self.max_batch:
+            return self.flush(req.service, now)
+        return None
+
+    def due(self, service: str, now: float) -> bool:
+        q = self.queues.get(service, [])
+        if not q:
+            return False
+        head_wait = now - q[0].arrival_s
+        deadline_pressure = any(
+            e.req.deadline_s is not None and
+            now + self.max_wait_s > e.arrival_s + e.req.deadline_s * 0.5
+            for e in q)
+        return head_wait >= self.max_wait_s or deadline_pressure
+
+    def flush(self, service: str, now: float) -> List[ServeRequest]:
+        q = self.queues.get(service, [])
+        batch, rest = q[: self.max_batch], q[self.max_batch:]
+        self.queues[service] = rest
+        self.flushes += 1
+        self.batched_total += len(batch)
+        return [e.req for e in batch]
+
+    def flush_due(self, now: float) -> Dict[str, List[ServeRequest]]:
+        out = {}
+        for svc in list(self.queues):
+            if self.due(svc, now):
+                out[svc] = self.flush(svc, now)
+        return out

@@ -1,0 +1,187 @@
+"""Reuse-aware serving engine: Reservoir semantics in front of real models.
+
+This is the TPU-incarnation of the paper's EN + forwarder stack (DESIGN.md
+§2): a request's input embedding is LSH-hashed (Pallas ``lsh_hash`` on TPU);
+the resulting *task name* drives, in order:
+
+  1. exact-name result cache   == NDN Content Store (CS) hit,
+  2. in-flight coalescing      == PIT aggregation,
+  3. semantic reuse            == EN nearest-neighbour + threshold,
+  4. bucket-range routing      == rFIB: which replica serves the request,
+  5. execution from scratch    == the model's prefill/decode serve path,
+     result stored for future reuse, TTC statistics updated.
+
+The engine is replica-local (one per DP shard group); the bucket->replica
+partition is the same consecutive-range scheme as core.rfib and re-splits on
+elastic events (training/elastic.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.content_store import ContentStore
+from repro.core.edge_node import TTCEstimator
+from repro.core.lsh import LSHParams, get_lsh, normalize
+from repro.core.namespace import make_task_name
+from repro.core.packets import Data
+from repro.core.reuse_store import ReuseStore
+from repro.training.elastic import BackupPolicy
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    request_id: int
+    service: str
+    embedding: np.ndarray          # input embedding (LSH key space)
+    payload: Any = None            # model inputs (tokens, ...)
+    threshold: float = 0.9
+    deadline_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class ServeResult:
+    request_id: int
+    result: Any
+    reuse: Optional[str]           # 'cs' | 'en' | None
+    similarity: float
+    latency_s: float
+    replica: int
+
+
+class ReplicaEngine:
+    """One serving replica: semantic cache + model executor."""
+
+    def __init__(self, replica_id: int, lsh_params: LSHParams,
+                 execute_fn: Callable[[List[ServeRequest]], List[Any]],
+                 cs_capacity: int = 4096, store_capacity: int = 100_000):
+        self.replica_id = replica_id
+        self.lsh = get_lsh(lsh_params)
+        self.params = lsh_params
+        self.execute_fn = execute_fn
+        self.cs = ContentStore(cs_capacity)
+        self.stores: Dict[str, ReuseStore] = {}
+        self.ttc = TTCEstimator()
+        self.lsh_params = lsh_params
+        self.inflight: Dict[str, List[ServeRequest]] = {}
+        self.stats = {"cs": 0, "en": 0, "executed": 0, "aggregated": 0}
+
+    def _store(self, service: str) -> ReuseStore:
+        if service not in self.stores:
+            self.stores[service] = ReuseStore(self.params, capacity=100_000)
+        return self.stores[service]
+
+    def handle(self, req: ServeRequest, now: Optional[float] = None) -> Optional[ServeResult]:
+        """Serve one request; returns None if coalesced behind an identical
+        in-flight task (resolved when the executing request completes)."""
+        t0 = time.perf_counter() if now is None else now
+        emb = normalize(np.asarray(req.embedding, np.float32).reshape(-1))
+        buckets = self.lsh.hash_one(emb)
+        name = make_task_name(req.service, buckets, self.params.index_size_bytes)
+
+        # 1. Content Store (exact LSH-name reuse)
+        hit = self.cs.lookup(name, t0)
+        if hit is not None:
+            self.stats["cs"] += 1
+            return ServeResult(req.request_id, hit.content, "cs", 1.0,
+                               time.perf_counter() - t0, self.replica_id)
+        # 2. PIT-style aggregation of identical in-flight names
+        if name in self.inflight:
+            self.inflight[name].append(req)
+            self.stats["aggregated"] += 1
+            return None
+        # 3. EN semantic reuse
+        store = self._store(req.service)
+        result, sim, idx = store.query(emb, req.threshold)
+        if idx is not None:
+            self.stats["en"] += 1
+            self.cs.insert(Data(name, content=result), t0)
+            return ServeResult(req.request_id, result, "en", sim,
+                               time.perf_counter() - t0, self.replica_id)
+        # 4. execute from scratch
+        self.inflight[name] = [req]
+        t_exec = time.perf_counter()
+        result = self.execute_fn([req])[0]
+        exec_time = time.perf_counter() - t_exec
+        self.ttc.observe(req.service, exec_time)
+        store.insert(emb, result)
+        self.cs.insert(Data(name, content=result), t0)
+        self.stats["executed"] += 1
+        self.inflight.pop(name, None)
+        return ServeResult(req.request_id, result, None, sim,
+                           time.perf_counter() - t0, self.replica_id)
+
+
+class ReuseRouter:
+    """rFIB-equivalent: consecutive LSH bucket ranges -> replica ids."""
+
+    def __init__(self, lsh_params: LSHParams, n_replicas: int):
+        self.params = lsh_params
+        self.lsh = get_lsh(lsh_params)
+        self.n_replicas = n_replicas
+        self._bounds = self._make_bounds(n_replicas)
+
+    def _make_bounds(self, n: int) -> List[int]:
+        nb = self.params.effective_buckets
+        return [round(i * nb / n) for i in range(n + 1)]
+
+    def rescale(self, n_replicas: int) -> None:
+        """Elastic event: re-partition ranges (consistent, consecutive)."""
+        self.n_replicas = n_replicas
+        self._bounds = self._make_bounds(n_replicas)
+
+    def _owner(self, bucket: int) -> int:
+        for i in range(self.n_replicas):
+            if self._bounds[i] <= bucket < self._bounds[i + 1]:
+                return i
+        return self.n_replicas - 1
+
+    def route(self, embedding: np.ndarray) -> Tuple[int, np.ndarray]:
+        """Majority vote over per-table bucket owners (paper §IV-D)."""
+        emb = normalize(np.asarray(embedding, np.float32).reshape(-1))
+        buckets = self.lsh.hash_one(emb)
+        votes: Dict[int, int] = {}
+        for b in buckets:
+            o = self._owner(int(b))
+            votes[o] = votes.get(o, 0) + 1
+        return max(votes.items(), key=lambda kv: (kv[1], -kv[0]))[0], buckets
+
+
+class ServingFleet:
+    """Router + replicas + straggler mitigation (backup requests)."""
+
+    def __init__(self, lsh_params: LSHParams, replicas: List[ReplicaEngine],
+                 backup: Optional[BackupPolicy] = None):
+        self.router = ReuseRouter(lsh_params, len(replicas))
+        self.replicas = replicas
+        self.backup = backup or BackupPolicy()
+
+    def submit(self, req: ServeRequest) -> ServeResult:
+        rid, _ = self.router.route(req.embedding)
+        res = self.replicas[rid].handle(req)
+        if res is None:  # aggregated; poll the owner (sync model: re-handle)
+            res = self.replicas[rid].handle(req)
+        ttc = self.replicas[rid].ttc.estimate(req.service)
+        if (req.deadline_s is not None and res is None):
+            pass  # unreachable in sync mode; async engines use BackupPolicy
+        return res
+
+    def maybe_backup(self, elapsed_s: float, service: str, primary: int,
+                     backups_sent: int = 0) -> Optional[int]:
+        """Straggler mitigation: pick a backup replica when TTC is exceeded."""
+        ttc = self.replicas[primary].ttc.estimate(service)
+        if self.backup.should_backup(elapsed_s, ttc, backups_sent):
+            return (primary + 1) % len(self.replicas)
+        return None
+
+    def stats(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for r in self.replicas:
+            for k, v in r.stats.items():
+                out[k] = out.get(k, 0) + v
+        return out

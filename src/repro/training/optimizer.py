@@ -1,0 +1,149 @@
+"""AdamW with memory-efficient moment storage + gradient compression.
+
+Distributed-optimization substrate (DESIGN.md §4):
+
+* **Quantised moments** — m/v stored in bf16 or int8 (per-row absmax scales).
+  int8 moments cut optimizer state 4x: that is what fits llama4-maverick's
+  optimizer state on one 256-chip pod (see EXPERIMENTS.md §Dry-run).
+* **Gradient compression with error feedback** — int8-quantised gradients
+  with a residual accumulator, modelling compressed DP all-reduce numerics.
+* **Global-norm clipping**, decoupled weight decay, cosine/linear schedules.
+
+Everything is a pure pytree function: optimizer state shards exactly like
+the parameters (the quantised payload keeps the parameter's shape; scales
+drop the last axis), so FSDP-style sharding of parameters automatically
+shards optimizer state too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"        # float32 | bfloat16 | int8
+    compress_grads: bool = False         # int8 + error feedback
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"             # cosine | linear | constant
+
+
+# ------------------------------------------------------- int8 (de)quantisers
+def _quantize(x: Array) -> Dict[str, Array]:
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dequantize(d: Dict[str, Array]) -> Array:
+    return d["q"].astype(jnp.float32) * d["scale"]
+
+
+def _store(x: Array, dtype: str):
+    if dtype == "int8":
+        return _quantize(x)
+    return x.astype(jnp.dtype(dtype))
+
+
+def _load(x, dtype: str) -> Array:
+    if dtype == "int8":
+        return _dequantize(x)
+    return x.astype(jnp.float32)
+
+
+# ------------------------------------------------------------------ schedule
+def lr_at(cfg: OptimizerConfig, step: Array) -> Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - frac
+    else:
+        decay = jnp.float32(1.0)
+    return cfg.lr * warm * decay
+
+
+# ------------------------------------------------------------------ optimizer
+def adamw_init(params, cfg: OptimizerConfig) -> Dict[str, Any]:
+    zeros = jax.tree.map(lambda p: _store(jnp.zeros_like(p, jnp.float32),
+                                          cfg.moment_dtype), params)
+    zeros2 = jax.tree.map(lambda p: _store(jnp.zeros_like(p, jnp.float32),
+                                           cfg.moment_dtype), params)
+    state = {"step": jnp.zeros((), jnp.int32), "m": zeros, "v": zeros2}
+    if cfg.compress_grads:
+        state["error"] = jax.tree.map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return state
+
+
+def _is_moment_leaf(x) -> bool:
+    return isinstance(x, dict) and set(x) == {"q", "scale"}
+
+
+def adamw_update(params, grads, state, cfg: OptimizerConfig):
+    """One AdamW step -> (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+
+    # --- gradient compression (error feedback) before the global reduce
+    if cfg.compress_grads:
+        def comp(g, e):
+            gq = _dequantize(_quantize(g.astype(jnp.float32) + e))
+            return gq, (g.astype(jnp.float32) + e) - gq
+        pairs = jax.tree.map(comp, grads, state["error"])
+        grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_error = jax.tree.map(lambda p: p[1], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    else:
+        new_error = None
+
+    # --- global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = _load(m, cfg.moment_dtype)
+        vf = _load(v, cfg.moment_dtype)
+        mf = b1 * mf + (1 - b1) * g
+        vf = b2 * vf + (1 - b2) * jnp.square(g)
+        update = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        newp = p.astype(jnp.float32) * (1 - lr * cfg.weight_decay) - lr * update
+        return (newp.astype(p.dtype), _store(mf, cfg.moment_dtype),
+                _store(vf, cfg.moment_dtype))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    outs = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in outs])
+    new_m = treedef.unflatten([o[1] for o in outs])
+    new_v = treedef.unflatten([o[2] for o in outs])
+
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    if new_error is not None:
+        new_state["error"] = new_error
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,100 @@
+"""Training step construction: microbatched grad accumulation + AdamW.
+
+``make_train_step(model, ocfg, microbatches)`` returns a pure
+``train_step(state, batch) -> (state, metrics)`` suitable for jit with
+donated state.  Microbatching splits the global batch along axis 0 and
+accumulates gradients with a lax.scan — activation memory scales with the
+microbatch, not the global batch (the knob the §Perf hillclimb turns).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import OptimizerConfig, adamw_init, adamw_update
+
+Array = jax.Array
+TrainState = Dict[str, Any]  # {params, opt, step}
+
+
+def init_state(model, key, ocfg: OptimizerConfig) -> TrainState:
+    params = model.init(key)
+    return {"params": params, "opt": adamw_init(params, ocfg)}
+
+
+def make_train_step(model, ocfg: OptimizerConfig, microbatches: int = 1,
+                    grad_shardings=None, compute_dtype=None):
+    """``grad_shardings``: optional pytree of NamedSharding matching params.
+    Constraining per-microbatch gradients to the parameter (FSDP) sharding
+    makes XLA reduce-scatter each microbatch's gradients instead of
+    all-reducing the full tensors (§Perf llama4 iteration 2 — the gradient
+    accumulator then lives sharded, 1/data_shards the bytes).
+
+    ``compute_dtype='bfloat16'``: cast the f32 master parameters to a bf16
+    working copy ONCE per step, *before* the microbatch loop — FSDP weight
+    all-gathers then move half the bytes (§Perf llama4 iteration 3)."""
+
+    def cast_params(params):
+        if compute_dtype is None:
+            return params
+        dt = jnp.dtype(compute_dtype)
+        return jax.tree.map(
+            lambda p: p.astype(dt)
+            if p.dtype == jnp.float32 and p.ndim >= 2 else p, params)
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(
+            lambda t, s: jax.lax.with_sharding_constraint(t, s) if s is not None else t,
+            g, grad_shardings)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, Array]]:
+        master = state["params"]
+        params = cast_params(master)  # bf16 working copy (see docstring)
+        if microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = constrain(grads)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, microbatch):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, microbatch)
+                g_acc = jax.tree.map(jnp.add, g_acc, constrain(g))
+                return (constrain(g_acc), l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc_body, (g0, jnp.float32(0)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {}
+        new_params, new_opt, opt_metrics = adamw_update(
+            master, grads, state["opt"], ocfg)
+        out_metrics = {"loss": loss, **opt_metrics}
+        for k, v in metrics.items():
+            out_metrics[k] = v
+        return {"params": new_params, "opt": new_opt}, out_metrics
+
+    return train_step
+
+
+def make_eval_step(model):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return {"loss": loss, **metrics}
+
+    return eval_step

@@ -1,0 +1,196 @@
+"""Behaviour tests for the NDN data structures + the extended pipeline."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    FIB,
+    ContentStore,
+    Data,
+    Forwarder,
+    Interest,
+    LSHParams,
+    PendingInterestTable,
+    RFIB,
+    decode_task_hash,
+    encode_task_hash,
+    is_task_name,
+    make_exact_name,
+    make_task_name,
+    parse_task_name,
+    partition,
+)
+from repro.core.rfib import RFibEntry
+
+
+class TestNamespace:
+    def test_roundtrip(self):
+        name = make_task_name("/OpenPose", [0x6E, 0x81, 0x0F], 1)
+        assert name == "/OpenPose/task/6E810F"  # the paper's own example
+        svc, kw, h = parse_task_name(name)
+        assert svc == "/OpenPose" and kw == "task"
+        assert decode_task_hash(h, 1) == [0x6E, 0x81, 0x0F]
+
+    def test_multibyte_index(self):
+        buckets = [300, 70000, 5]
+        comp = encode_task_hash(buckets, 4)
+        assert decode_task_hash(comp, 4) == buckets
+
+    def test_is_task_name(self):
+        assert is_task_name("/svc/task/AB")
+        assert not is_task_name("/svc/other/AB")
+        assert not is_task_name("/en/prefix/svc/task/AB")  # result fetch, FIB path
+
+    def test_exact_optout(self):
+        n = make_exact_name("/svc", b"payload")
+        assert "/exact/" in n and not is_task_name(n)
+
+    def test_bucket_overflow_raises(self):
+        with pytest.raises(ValueError):
+            encode_task_hash([256], 1)
+
+
+class TestContentStore:
+    def test_lru_eviction(self):
+        cs = ContentStore(capacity=2)
+        for i in range(3):
+            cs.insert(Data(f"/n/{i}", content=i), now=0.0)
+        assert cs.lookup("/n/0", 0.0) is None  # evicted
+        assert cs.lookup("/n/2", 0.0).content == 2
+        assert cs.evictions == 1
+
+    def test_lru_refresh_on_hit(self):
+        cs = ContentStore(capacity=2)
+        cs.insert(Data("/a", content=1), 0.0)
+        cs.insert(Data("/b", content=2), 0.0)
+        cs.lookup("/a", 0.0)            # refresh /a
+        cs.insert(Data("/c", content=3), 0.0)
+        assert cs.lookup("/b", 0.0) is None and cs.lookup("/a", 0.0) is not None
+
+    def test_freshness_expiry(self):
+        cs = ContentStore(4)
+        cs.insert(Data("/a", content=1, freshness_s=1.0), now=0.0)
+        assert cs.lookup("/a", 0.5) is not None
+        assert cs.lookup("/a", 2.0) is None
+
+
+class TestPIT:
+    def test_aggregation(self):
+        pit = PendingInterestTable()
+        i1, i2 = Interest("/x"), Interest("/x")
+        assert pit.insert(i1, in_face=1, now=0.0) is True
+        assert pit.insert(i2, in_face=2, now=0.0) is False  # aggregated
+        assert pit.aggregations == 1
+        faces = pit.satisfy("/x")
+        assert faces == [1, 2]
+        assert pit.satisfy("/x") is None
+
+    def test_expiry(self):
+        pit = PendingInterestTable(lifetime_s=1.0)
+        pit.insert(Interest("/x"), 1, now=0.0)
+        assert pit.insert(Interest("/x"), 2, now=5.0) is True  # stale, new entry
+
+
+class TestFIB:
+    def test_longest_prefix(self):
+        fib = FIB()
+        fib.insert("/a", 1)
+        fib.insert("/a/b", 2)
+        assert fib.next_hop("/a/b/c") == 2
+        assert fib.next_hop("/a/x") == 1
+        assert fib.next_hop("/z") is None
+        fib.insert("/", 9)
+        assert fib.next_hop("/z") == 9
+
+
+class TestRFIB:
+    def _rfib(self):
+        rfib = RFIB()
+        for e in partition("/OpenPose", ["/EN1", "/EN2"], {"/EN1": [1], "/EN2": [2]},
+                           num_tables=3, num_buckets=256):
+            rfib.insert(e)
+        return rfib
+
+    def test_majority_vote_matches_paper_example(self):
+        """Fig. 4: hash 6E810F -> buckets 110,129,15; EN1 handles [0,127]
+        (tables 1,3) and EN2 [128,255] (table 2) -> majority EN1."""
+        rfib = self._rfib()
+        entry = rfib.lookup("/OpenPose", "6E810F")
+        assert entry is not None and entry.en_prefix == "/EN1"
+        assert entry.faces == [1]
+
+    def test_all_tables_agree(self):
+        rfib = self._rfib()
+        assert rfib.lookup("/OpenPose", encode_task_hash([200, 210, 250], 1)).en_prefix == "/EN2"
+
+    def test_unknown_service(self):
+        assert self._rfib().lookup("/Unknown", "00") is None
+
+    def test_consecutive_ranges_cover_everything(self):
+        entries = partition("/s", [f"/EN{i}" for i in range(7)], {}, 2, 256)
+        covered = sorted(
+            (lo, hi) for e in entries for t, (lo, hi) in e.ranges.items() if t == 0
+        )
+        assert covered[0][0] == 0 and covered[-1][1] == 255
+        for (l1, h1), (l2, h2) in zip(covered, covered[1:]):
+            assert l2 == h1 + 1  # consecutive, non-overlapping
+
+    def test_size_bytes_positive(self):
+        assert self._rfib().size_bytes() > 0
+
+
+class TestForwarderPipeline:
+    def _forwarder(self):
+        fwd = Forwarder("/fwd", cs_capacity=8)
+        fwd.fib.insert("/EN1", 5)
+        fwd.fib.insert("/EN2", 6)
+        for e in partition("/svc", ["/EN1", "/EN2"], {"/EN1": [5], "/EN2": [6]},
+                           num_tables=1, num_buckets=256):
+            fwd.rfib.insert(e)
+        return fwd
+
+    def test_task_gets_forwarding_hint_via_rfib(self):
+        fwd = self._forwarder()
+        t = Interest(make_task_name("/svc", [10], 1))
+        acts = fwd.on_interest(t, in_face=1, now=0.0)
+        assert len(acts) == 1 and acts[0].face == 5
+        assert acts[0].packet.forwarding_hint == "/EN1"
+        assert fwd.stats.rfib_routed == 1
+
+    def test_hinted_task_skips_rfib(self):
+        fwd = self._forwarder()
+        t = Interest(make_task_name("/svc", [10], 1), forwarding_hint="/EN2")
+        acts = fwd.on_interest(t, in_face=1, now=0.0)
+        assert acts[0].face == 6
+        assert fwd.stats.rfib_routed == 0 and fwd.stats.fib_routed == 1
+
+    def test_non_task_uses_fib(self):
+        fwd = self._forwarder()
+        acts = fwd.on_interest(Interest("/EN1/results/1"), 1, now=0.0)
+        assert acts[0].face == 5 and fwd.stats.fib_routed == 1
+
+    def test_cs_hit_short_circuits(self):
+        fwd = self._forwarder()
+        name = make_task_name("/svc", [10], 1)
+        fwd.on_interest(Interest(name), 1, 0.0)
+        acts = fwd.on_data(Data(name, content=42), in_face=5, now=0.1)
+        assert [a.face for a in acts] == [1]
+        acts2 = fwd.on_interest(Interest(name), 2, 0.2)
+        assert acts2[0].face == 2 and acts2[0].packet.content == 42
+        assert acts2[0].packet.meta["reuse"] == "cs"
+
+    def test_pit_aggregation_forwards_once(self):
+        fwd = self._forwarder()
+        name = make_task_name("/svc", [10], 1)
+        a1 = fwd.on_interest(Interest(name), 1, 0.0)
+        a2 = fwd.on_interest(Interest(name), 2, 0.0)
+        assert len(a1) == 1 and a2 == []
+        acts = fwd.on_data(Data(name, content=1), 5, 0.1)
+        assert sorted(a.face for a in acts) == [1, 2]
+
+    def test_corrupted_data_dropped(self):
+        fwd = self._forwarder()
+        name = make_task_name("/svc", [10], 1)
+        fwd.on_interest(Interest(name), 1, 0.0)
+        bad = Data(name, content=1)
+        bad.signature ^= 0xFF
+        assert fwd.on_data(bad, 5, 0.1) == []

@@ -1,0 +1,39 @@
+"""Dry-run launcher integration: one real cell through the CLI (subprocess,
+because the 512-device XLA flag must be set before jax initialises)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_dryrun_cell_compiles(tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "xlstm-125m", "--shape", "decode_32k",
+         "--out", str(tmp_path)],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    art = tmp_path / "xlstm-125m__decode_32k__16x16.json"
+    assert art.exists()
+    res = json.loads(art.read_text())
+    assert res["chips"] == 256
+    assert res["hlo_flops"] > 0 and res["hlo_bytes"] > 0
+    assert "roofline" in res and res["roofline"]["dominant"] in (
+        "compute", "memory", "collective")
+    # memory_analysis fields recorded (the "fits" evidence)
+    assert res["temp_size_in_bytes"] > 0
+
+
+def test_roofline_reader():
+    from benchmarks import roofline
+
+    rows = roofline.run()
+    assert rows
+    if not rows[0][0].endswith("missing"):
+        assert any("dominant=" in r[2] for r in rows)

@@ -1,0 +1,121 @@
+"""Unit + property tests for the LSH layer (paper §II / §IV)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lsh import LSH, LSHParams, get_lsh, normalize
+
+
+@pytest.fixture(scope="module")
+def cp_lsh():
+    return get_lsh(LSHParams(dim=32, num_tables=3, num_probes=6, seed=7))
+
+
+@pytest.fixture(scope="module")
+def hp_lsh():
+    return get_lsh(LSHParams(dim=32, num_tables=3, num_buckets=256,
+                             num_probes=6, family="hyperplane", seed=7))
+
+
+def _rand(n, d, seed=0):
+    return normalize(np.random.default_rng(seed).standard_normal((n, d)))
+
+
+class TestHashing:
+    def test_shapes_and_range(self, cp_lsh):
+        x = _rand(10, 32)
+        h = np.asarray(cp_lsh.hash_batch(x))
+        assert h.shape == (10, 3)
+        assert h.dtype == np.int32
+        assert (h >= 0).all() and (h < 256).all()
+
+    def test_deterministic(self, cp_lsh):
+        x = _rand(5, 32, seed=3)
+        assert (np.asarray(cp_lsh.hash_batch(x)) == np.asarray(cp_lsh.hash_batch(x))).all()
+
+    def test_scale_invariant(self, cp_lsh):
+        """Cross-polytope hashing must be invariant to positive scaling."""
+        x = _rand(5, 32, seed=4)
+        assert (
+            np.asarray(cp_lsh.hash_batch(x)) == np.asarray(cp_lsh.hash_batch(x * 7.5))
+        ).all()
+
+    def test_similar_inputs_collide_more(self, cp_lsh):
+        rng = np.random.default_rng(0)
+        base = _rand(50, 32, seed=1)
+        near = normalize(base + 0.05 * rng.standard_normal(base.shape) / np.sqrt(32))
+        far = _rand(50, 32, seed=2)
+        hb = np.asarray(cp_lsh.hash_batch(base))
+        hn = np.asarray(cp_lsh.hash_batch(near))
+        hf = np.asarray(cp_lsh.hash_batch(far))
+        assert (hb == hn).mean() > 0.9
+        assert (hb == hn).mean() > (hb == hf).mean() + 0.5
+
+    def test_hyperplane_family(self, hp_lsh):
+        x = _rand(10, 32)
+        h = np.asarray(hp_lsh.hash_batch(x))
+        assert h.shape == (10, 3) and (h >= 0).all() and (h < 256).all()
+        near = normalize(x + 0.03 * _rand(10, 32, seed=9) / 10)
+        assert (h == np.asarray(hp_lsh.hash_batch(near))).mean() > 0.8
+
+
+class TestMultiProbe:
+    def test_probe_zero_is_hash(self, cp_lsh, hp_lsh):
+        x = _rand(8, 32, seed=5)
+        for lsh in (cp_lsh, hp_lsh):
+            h = np.asarray(lsh.hash_batch(x))
+            p = np.asarray(lsh.probe_batch(x))
+            assert p.shape == (8, 3, 6)
+            assert (p[:, :, 0] == h).all()
+
+    def test_probes_in_range_and_ranked(self, cp_lsh):
+        x = _rand(8, 32, seed=6)
+        buckets, losses = map(np.asarray, cp_lsh._probe_jit(x))
+        assert (buckets >= 0).all() and (buckets < 256).all()
+        assert (np.diff(losses, axis=-1) >= -1e-5).all(), "losses must be non-decreasing"
+
+    def test_probes_catch_perturbed_neighbours(self, cp_lsh):
+        """Multi-probe recall: a near-duplicate's true bucket should appear in
+        the probe list far more often than chance."""
+        rng = np.random.default_rng(2)
+        base = _rand(100, 32, seed=7)
+        near = normalize(base + 0.15 * rng.standard_normal(base.shape) / np.sqrt(32))
+        hb = np.asarray(cp_lsh.hash_batch(base))        # (N,T)
+        pn = np.asarray(cp_lsh.probe_batch(near))       # (N,T,P)
+        hit = (pn == hb[:, :, None]).any(-1).mean()
+        miss_direct = (np.asarray(cp_lsh.hash_batch(near)) != hb).mean()
+        assert hit > 0.95
+        assert miss_direct > 0.0  # the probes must be doing real work
+
+
+class TestProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_bucket_range_property(self, seed):
+        lsh = get_lsh(LSHParams(dim=16, num_tables=2, num_buckets=64, num_probes=4, seed=3))
+        x = _rand(4, 16, seed=seed)
+        h = np.asarray(lsh.hash_batch(x))
+        assert ((h >= 0) & (h < 64)).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.floats(0.0, 0.5))
+    def test_collision_monotonic_in_noise(self, noise):
+        """Property: collision probability decreases (weakly) with distance."""
+        lsh = get_lsh(LSHParams(dim=32, num_tables=8, num_probes=2, seed=11))
+        rng = np.random.default_rng(17)
+        base = _rand(30, 32, seed=13)
+        n1 = normalize(base + noise * rng.standard_normal(base.shape) / np.sqrt(32))
+        n2 = normalize(base + (noise + 0.5) * rng.standard_normal(base.shape) / np.sqrt(32))
+        hb = np.asarray(lsh.hash_batch(base))
+        c1 = (np.asarray(lsh.hash_batch(n1)) == hb).mean()
+        c2 = (np.asarray(lsh.hash_batch(n2)) == hb).mean()
+        assert c1 >= c2 - 0.12  # allow sampling slack
+
+
+def test_index_size_bytes():
+    assert LSHParams(dim=8, num_buckets=256).index_size_bytes == 1
+    assert LSHParams(dim=8, num_buckets=257).index_size_bytes == 2
+    assert LSHParams(dim=8, num_buckets=1 << 16).index_size_bytes == 2
+    assert LSHParams(dim=8, num_buckets=(1 << 16) + 1).index_size_bytes == 3
+    with pytest.raises(ValueError):
+        _ = LSHParams(dim=8, num_buckets=1 << 33).index_size_bytes

@@ -1,0 +1,88 @@
+"""Offloading-protocol tests: TTC exchange (Fig. 3b) + large-input pull
+(Fig. 3c) + opt-out naming (§IV-E)."""
+import numpy as np
+
+from repro.core import LSHParams, ReservoirNetwork, make_exact_name
+from repro.core.topology import testbed_topology
+from repro.data import DATASETS, dataset_service, make_stream
+
+P = LSHParams(dim=64, num_tables=5, num_probes=8)
+
+
+def _net(**kw):
+    g, ens = testbed_topology()
+    net = ReservoirNetwork(g, ens, P, seed=0, **kw)
+    spec = DATASETS["stanford_ar"]
+    net.register_service(dataset_service(spec))
+    net.add_user("u1", "fwd1")
+    net.add_user("u2", "fwd1")
+    return net, spec
+
+
+def _drive(net, spec, n=80, **submit_kw):
+    X, _ = make_stream(spec, n, seed=2)
+    t = 0.0
+    for i, x in enumerate(X):
+        net.submit_task("u1" if i % 2 else "u2", spec.name, x, 0.9,
+                        at_time=t, **submit_kw)
+        t += 0.05
+    net.run()
+    return net.metrics
+
+
+class TestTTCProtocol:
+    def test_all_tasks_complete(self):
+        net, spec = _net(protocol="ttc")
+        m = _drive(net, spec)
+        assert all(r.t_complete >= 0 for r in m.records)
+
+    def test_ttc_costs_one_extra_roundtrip_on_scratch(self):
+        net_d, spec = _net(protocol="direct")
+        md = _drive(net_d, spec)
+        net_t, _ = _net(protocol="ttc")
+        mt = _drive(net_t, spec)
+        d = md.mean_completion(kind=(None,))
+        t = mt.mean_completion(kind=(None,))
+        assert t > d  # deferred fetch adds >= 1 RTT to scratch tasks
+        assert t < d + 0.1  # ... but only a bounded protocol overhead
+
+    def test_reuse_path_unaffected_by_ttc(self):
+        net_t, spec = _net(protocol="ttc")
+        mt = _drive(net_t, spec)
+        # EN reuse answers directly (Fig. 3a) regardless of protocol
+        assert mt.mean_completion(kind="en") < mt.mean_completion(kind=(None,))
+
+    def test_results_correct_under_ttc(self):
+        net, spec = _net(protocol="ttc")
+        m = _drive(net, spec)
+        for r in m.records:
+            assert r.result == r.true_result or r.reuse is not None
+
+
+class TestLargeInputPull:
+    def test_pull_adds_latency_only_to_scratch(self):
+        net_s, spec = _net(large_input_bytes=4096)
+        ms = _drive(net_s, spec, input_size=100_000)   # 13 chunks pulled
+        net_0, _ = _net(large_input_bytes=4096)
+        m0 = _drive(net_0, spec, input_size=0)         # inline input
+        assert ms.mean_completion(kind=(None,)) > m0.mean_completion(kind=(None,))
+        # reuse path never pulls: identical completion profile
+        en_s, en_0 = ms.mean_completion("en"), m0.mean_completion("en")
+        if np.isfinite(en_s) and np.isfinite(en_0):
+            assert abs(en_s - en_0) < 0.01
+
+
+class TestOptOut:
+    def test_exact_names_skip_rfib(self):
+        name = make_exact_name("/svc", b"payload-bytes")
+        assert "/exact/" in name
+        from repro.core import Forwarder, Interest
+        from repro.core.rfib import partition
+
+        fwd = Forwarder("/f")
+        fwd.fib.insert("/svc", 3)
+        for e in partition("/svc", ["/EN1"], {"/EN1": [4]}, 1, 256):
+            fwd.rfib.insert(e)
+        acts = fwd.on_interest(Interest(name), 1, 0.0)
+        assert acts[0].face == 3          # FIB route, not the rFIB EN face
+        assert fwd.stats.rfib_routed == 0  # no reuse-aware processing

@@ -1,0 +1,180 @@
+"""Reuse-store, edge-node, and end-to-end network reuse behaviour."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Interest,
+    LSHParams,
+    ReservoirNetwork,
+    ReuseStore,
+    Service,
+    make_task_name,
+    normalize,
+)
+from repro.core.topology import testbed_topology as _testbed
+from repro.core.edge_node import EdgeNode
+from repro.data import DATASETS, dataset_service, make_stream
+
+P = LSHParams(dim=32, num_tables=3, num_probes=6, seed=5)
+
+
+def _vec(seed, d=32):
+    return normalize(np.random.default_rng(seed).standard_normal(d))
+
+
+class TestReuseStore:
+    def test_insert_query_exact(self):
+        store = ReuseStore(P, capacity=16)
+        v = _vec(1)
+        store.insert(v, "result-1")
+        res, sim, idx = store.query(v, threshold=0.99)
+        assert res == "result-1" and sim > 0.999 and idx is not None
+
+    def test_threshold_rejects(self):
+        store = ReuseStore(P, capacity=16)
+        store.insert(_vec(1), "r")
+        res, sim, idx = store.query(_vec(2), threshold=0.95)
+        assert res is None and idx is None
+
+    def test_near_duplicate_reuse(self):
+        store = ReuseStore(P, capacity=64)
+        rng = np.random.default_rng(0)
+        base = _vec(3)
+        store.insert(base, "r")
+        near = normalize(base + 0.05 * rng.standard_normal(32) / np.sqrt(32))
+        res, sim, _ = store.query(near, threshold=0.9)
+        assert res == "r" and sim > 0.99
+
+    def test_lru_eviction_bounded(self):
+        store = ReuseStore(P, capacity=8)
+        for i in range(32):
+            store.insert(_vec(i + 100), i)
+        assert len(store) == 8
+        # oldest must be gone: querying it exactly either misses or returns a
+        # different stored entry
+        res, sim, idx = store.query(_vec(100), threshold=0.999)
+        assert res is None
+
+    def test_nearest_of_several(self):
+        store = ReuseStore(P, capacity=64)
+        rng = np.random.default_rng(4)
+        base = _vec(9)
+        far = normalize(base + 0.5 * rng.standard_normal(32) / np.sqrt(32))
+        near = normalize(base + 0.02 * rng.standard_normal(32) / np.sqrt(32))
+        store.insert(far, "far")
+        store.insert(near, "near")
+        res, _, _ = store.query(base, threshold=0.0)
+        assert res == "near"
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_property_query_never_exceeds_capacity(self, seed):
+        store = ReuseStore(P, capacity=4)
+        rng = np.random.default_rng(seed)
+        for _ in range(10):
+            store.insert(rng.standard_normal(32), "x")
+        assert len(store) <= 4
+
+
+class TestEdgeNode:
+    def _en(self):
+        en = EdgeNode("/en/test", P, store_capacity=128)
+        en.register(Service("/svc", execute=lambda x: float(np.sum(x) > 0),
+                            exec_time_s=0.05, input_dim=32))
+        return en
+
+    def _task(self, v, thr=0.9):
+        from repro.core import get_lsh
+        buckets = get_lsh(P).hash_one(normalize(v))
+        return Interest(make_task_name("/svc", buckets, P.index_size_bytes),
+                        app_params={"input": normalize(v), "threshold": thr})
+
+    def test_execute_then_reuse(self):
+        en = self._en()
+        v = _vec(11)
+        out1 = en.handle_task(self._task(v))
+        assert not out1.reused and out1.exec_time_s > 0
+        out2 = en.handle_task(self._task(v))
+        assert out2.reused and out2.exec_time_s == 0.0
+        assert out2.data.content == out1.data.content
+
+    def test_ttc_estimation_tracks_exec(self):
+        en = self._en()
+        for i in range(5):
+            en.handle_task(self._task(_vec(50 + i), thr=1.1))  # force execute
+        assert 0.02 < en.estimate_ttc("/svc") < 0.2
+
+    def test_ttc_response_and_result_name(self):
+        en = self._en()
+        t = self._task(_vec(1))
+        resp = en.make_ttc_response(t)
+        assert resp.meta["control"] == "ttc" and resp.content["en_prefix"] == "/en/test"
+        assert en.result_name(t) == "/en/test" + t.name
+
+    def test_unknown_service_raises(self):
+        en = self._en()
+        t = Interest("/other/task/00", app_params={"input": _vec(1)})
+        with pytest.raises(KeyError):
+            en.handle_task(t)
+
+    def test_input_pull_chunks(self):
+        en = self._en()
+        t = self._task(_vec(1))
+        t.app_params["input_size"] = 20_000
+        t.app_params["user_prefix"] = "/user/9"
+        pulls = en.input_pull_interests(t, chunk_bytes=8192)
+        assert len(pulls) == 3 and all(p.name.startswith("/user/9/input/") for p in pulls)
+
+
+class TestEndToEnd:
+    def _run(self, mode="reservoir", n=120, threshold=0.85):
+        g, ens = _testbed()
+        net = ReservoirNetwork(g, ens, P, mode=mode, seed=0)
+        spec = DatasetSpec32(DATASETS["cctv1"])
+        net.register_service(dataset_service(spec, exec_time_s=(0.07, 0.1)))
+        net.add_user("u1", "fwd1")
+        net.add_user("u2", "fwd1")
+        X, _ = make_stream(spec, n, seed=3)
+        t = 0.0
+        for i, x in enumerate(X):
+            net.submit_task("u1" if i % 2 else "u2", spec.name, x, threshold, at_time=t)
+            t += 0.04
+        net.run()
+        return net
+
+    def test_all_tasks_complete(self):
+        net = self._run()
+        assert all(r.t_complete >= 0 for r in net.metrics.records)
+
+    def test_reuse_is_faster_than_scratch(self):
+        net = self._run()
+        m = net.metrics
+        scratch = m.mean_completion(kind=(None,))
+        en = m.mean_completion(kind="en")
+        assert en < scratch, (en, scratch)
+        if m.by_reuse(("cs", "user")):
+            assert m.mean_completion(("cs", "user")) < en
+
+    def test_reuse_accuracy_high_for_high_threshold(self):
+        net = self._run(threshold=0.95)
+        assert net.metrics.accuracy() > 0.9
+
+    def test_icedge_mode_runs_and_is_slower(self):
+        res = self._run(mode="reservoir")
+        ice = self._run(mode="icedge")
+        assert ice.metrics.mean_completion() > res.metrics.mean_completion() * 0.8
+
+    def test_executions_bounded_by_tasks(self):
+        net = self._run()
+        executed = sum(en.stats["executed"] for en in net.edge_nodes.values())
+        reused = sum(en.stats["reused"] for en in net.edge_nodes.values())
+        assert executed + reused <= len(net.metrics.records)
+        assert executed >= 1
+
+
+def DatasetSpec32(spec):
+    """Shrink a dataset spec to dim=32 to match the module-wide LSH params."""
+    import dataclasses
+
+    return dataclasses.replace(spec, dim=32)

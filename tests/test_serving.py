@@ -1,0 +1,125 @@
+"""Serving fleet: semantic cache, rFIB routing, batcher, straggler policy."""
+import numpy as np
+import pytest
+
+from repro.core.lsh import LSHParams, normalize
+from repro.serving import Batcher, ReplicaEngine, ReuseRouter, ServeRequest, ServingFleet
+
+P = LSHParams(dim=32, num_tables=3, num_probes=6, seed=5)
+
+
+def _vec(seed):
+    return normalize(np.random.default_rng(seed).standard_normal(32))
+
+
+def _exec_counter():
+    calls = {"n": 0}
+
+    def execute(reqs):
+        calls["n"] += len(reqs)
+        return [f"result-{r.request_id}" for r in reqs]
+
+    return execute, calls
+
+
+class TestReplicaEngine:
+    def test_execute_then_semantic_reuse(self):
+        execute, calls = _exec_counter()
+        eng = ReplicaEngine(0, P, execute)
+        v = _vec(1)
+        r1 = eng.handle(ServeRequest(0, "svc", v, threshold=0.9))
+        assert r1.reuse is None and calls["n"] == 1
+        near = normalize(v + 0.02 * np.random.default_rng(2).standard_normal(32)
+                         / np.sqrt(32))
+        r2 = eng.handle(ServeRequest(1, "svc", near, threshold=0.9))
+        assert r2.reuse in ("cs", "en") and calls["n"] == 1  # no re-execution
+        assert r2.result == r1.result
+
+    def test_cs_hit_on_exact_name(self):
+        execute, calls = _exec_counter()
+        eng = ReplicaEngine(0, P, execute)
+        v = _vec(3)
+        eng.handle(ServeRequest(0, "svc", v, threshold=0.9))
+        r = eng.handle(ServeRequest(1, "svc", v, threshold=0.9))
+        assert r.reuse == "cs" and calls["n"] == 1
+
+    def test_low_threshold_never_blocks_execution(self):
+        execute, calls = _exec_counter()
+        eng = ReplicaEngine(0, P, execute)
+        for i in range(5):
+            eng.handle(ServeRequest(i, "svc", _vec(100 + i), threshold=1.1))
+        assert calls["n"] == 5  # threshold > 1: nothing reusable
+
+
+class TestReuseRouter:
+    def test_similar_requests_same_replica(self):
+        router = ReuseRouter(P, n_replicas=4)
+        base = _vec(7)
+        rid0, _ = router.route(base)
+        agree = 0
+        for i in range(20):
+            near = normalize(base + 0.03 * np.random.default_rng(i)
+                             .standard_normal(32) / np.sqrt(32))
+            rid, _ = router.route(near)
+            agree += int(rid == rid0)
+        assert agree >= 17  # paper Fig. 10: forwarding errors < 9%
+
+    def test_rescale_repartitions(self):
+        router = ReuseRouter(P, n_replicas=4)
+        before = [router.route(_vec(i))[0] for i in range(50)]
+        router.rescale(3)
+        after = [router.route(_vec(i))[0] for i in range(50)]
+        assert max(after) <= 2
+        # consistent ranges: most assignments survive a 4->3 shrink
+        same = sum(int(b == a) for b, a in zip(before, after) if b < 3)
+        assert same >= 15
+
+    def test_all_replicas_reachable(self):
+        router = ReuseRouter(P, n_replicas=4)
+        seen = {router.route(_vec(i))[0] for i in range(200)}
+        assert seen == {0, 1, 2, 3}
+
+
+class TestFleet:
+    def test_fleet_end_to_end(self):
+        execute, calls = _exec_counter()
+        fleet = ServingFleet(P, [ReplicaEngine(i, P, execute) for i in range(2)])
+        base = _vec(11)
+        rng = np.random.default_rng(0)
+        for i in range(30):
+            emb = normalize(base + 0.03 * rng.standard_normal(32) / np.sqrt(32))
+            res = fleet.submit(ServeRequest(i, "svc", emb, threshold=0.9))
+            assert res is not None
+        s = fleet.stats()
+        assert s["executed"] < 10  # most requests reused
+        assert s["cs"] + s["en"] + s["executed"] == 30
+
+    def test_backup_policy_triggers(self):
+        execute, _ = _exec_counter()
+        fleet = ServingFleet(P, [ReplicaEngine(i, P, execute) for i in range(3)])
+        fleet.replicas[0].ttc.observe("svc", 0.1)
+        assert fleet.maybe_backup(0.05, "svc", primary=0) is None
+        backup = fleet.maybe_backup(0.5, "svc", primary=0)
+        assert backup is not None and backup != 0
+
+
+class TestBatcher:
+    def test_size_trigger(self):
+        b = Batcher(max_batch=3, max_wait_s=1.0)
+        out = None
+        for i in range(3):
+            out = b.add(ServeRequest(i, "svc", _vec(i)), now=0.0)
+        assert out is not None and len(out) == 3
+
+    def test_time_trigger(self):
+        b = Batcher(max_batch=10, max_wait_s=0.01)
+        b.add(ServeRequest(0, "svc", _vec(0)), now=0.0)
+        assert not b.due("svc", 0.005)
+        assert b.due("svc", 0.02)
+        flushed = b.flush_due(0.02)
+        assert len(flushed["svc"]) == 1
+
+    def test_deadline_pressure(self):
+        b = Batcher(max_batch=10, max_wait_s=10.0)
+        b.add(ServeRequest(0, "svc", _vec(0), deadline_s=0.02), now=0.0)
+        assert b.due("svc", 0.015)

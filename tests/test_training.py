@@ -1,0 +1,231 @@
+"""Optimizer, train loop, checkpoint, elastic: unit + integration tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ShapeSpec, get_arch
+from repro.models import build_model
+from repro.training import (
+    AsyncCheckpointer,
+    BackupPolicy,
+    HealthTracker,
+    OptimizerConfig,
+    adamw_init,
+    adamw_update,
+    choose_mesh_shape,
+    latest_step,
+    lr_at,
+    make_train_step,
+    plan_rescale,
+    restore,
+    save,
+)
+from repro.training.optimizer import _dequantize, _quantize
+
+
+def _toy_params(key=0):
+    rng = np.random.default_rng(key)
+    return {
+        "w": jnp.asarray(rng.standard_normal((8, 16)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((16,)), jnp.float32),
+    }
+
+
+def _toy_grads(params, x, y):
+    def loss(p):
+        pred = x @ p["w"] + p["b"]
+        return jnp.mean((pred - y) ** 2)
+
+    return jax.value_and_grad(loss)(params)
+
+
+class TestOptimizer:
+    def _train(self, cfg, steps=150):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+        w_true = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+        y = x @ w_true
+        params = _toy_params()
+        state = adamw_init(params, cfg)
+        losses = []
+        for _ in range(steps):
+            loss, grads = _toy_grads(params, x, y)
+            params, state, m = adamw_update(params, grads, state, cfg)
+            losses.append(float(loss))
+        return losses, m
+
+    def test_adamw_converges(self):
+        cfg = OptimizerConfig(lr=1e-1, weight_decay=0.0, warmup_steps=5,
+                              grad_clip=10.0, schedule="constant")
+        losses, m = self._train(cfg)
+        assert losses[-1] < 0.05 * losses[0], (losses[0], losses[-1])
+        assert float(m["grad_norm"]) >= 0
+
+    @pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+    def test_quantized_moments_still_converge(self, dtype):
+        cfg = OptimizerConfig(lr=1e-1, weight_decay=0.0, warmup_steps=5,
+                              grad_clip=10.0, schedule="constant",
+                              moment_dtype=dtype)
+        losses, _ = self._train(cfg)
+        assert losses[-1] < 0.2 * losses[0], losses[-1]
+
+    def test_grad_compression_error_feedback(self):
+        cfg = OptimizerConfig(lr=1e-1, weight_decay=0.0, warmup_steps=5,
+                              grad_clip=10.0, schedule="constant",
+                              compress_grads=True)
+        losses, _ = self._train(cfg)
+        assert losses[-1] < 0.2 * losses[0]
+
+    def test_schedule_shapes(self):
+        cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100)
+        assert float(lr_at(cfg, jnp.int32(0))) == 0.0
+        assert abs(float(lr_at(cfg, jnp.int32(10))) - 1.0) < 1e-6
+        assert float(lr_at(cfg, jnp.int32(100))) < 1e-3
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_quantize_roundtrip_property(self, seed):
+        x = jnp.asarray(np.random.default_rng(seed).standard_normal((4, 64)),
+                        jnp.float32)
+        err = jnp.max(jnp.abs(_dequantize(_quantize(x)) - x))
+        scale = jnp.max(jnp.abs(x), axis=-1).max()
+        assert float(err) <= float(scale) / 127 + 1e-6
+
+
+class TestTrainStep:
+    def _setup(self, microbatches=1):
+        cfg = get_arch("qwen3-1.7b").reduced()
+        model = build_model(cfg)
+        ocfg = OptimizerConfig(lr=1e-3, total_steps=10)
+        params = model.init(jax.random.PRNGKey(0))
+        state = {"params": params, "opt": adamw_init(params, ocfg)}
+        step = make_train_step(model, ocfg, microbatches=microbatches)
+        shape = ShapeSpec("t", 32, 4, "train")
+        rng = np.random.default_rng(1)
+        batch = {k: jnp.asarray(rng.integers(0, cfg.vocab_size, s.shape), s.dtype)
+                 for k, s in model.input_specs(shape).items()}
+        return state, step, batch
+
+    def test_loss_decreases_on_repeated_batch(self):
+        state, step, batch = self._setup()
+        jit_step = jax.jit(step)
+        first = None
+        for i in range(8):
+            state, metrics = jit_step(state, batch)
+            if first is None:
+                first = float(metrics["loss"])
+        assert float(metrics["loss"]) < first
+
+    def test_microbatching_matches_full_batch(self):
+        state1, step1, batch = self._setup(microbatches=1)
+        _, step4, _ = self._setup(microbatches=4)
+        s1, m1 = jax.jit(step1)(state1, batch)
+        state2, _, _ = self._setup(microbatches=4)
+        s2, m2 = jax.jit(step4)(state2, batch)
+        for (p1, p2) in zip(jax.tree.leaves(s1["params"]),
+                            jax.tree.leaves(s2["params"])):
+            np.testing.assert_allclose(np.asarray(p1, np.float32),
+                                       np.asarray(p2, np.float32),
+                                       rtol=2e-3, atol=2e-4)
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                "nested": {"b": jnp.ones((5,), jnp.bfloat16)},
+                "q": {"q": jnp.zeros((4, 4), jnp.int8),
+                      "scale": jnp.ones((4, 1), jnp.float32)}}
+        save(tree, str(tmp_path), step=7)
+        assert latest_step(str(tmp_path)) == 7
+        target = jax.eval_shape(lambda: tree)
+        out = restore(str(tmp_path), target)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_corruption_detected(self, tmp_path):
+        tree = {"a": jnp.arange(1024, dtype=jnp.float32)}
+        path = save(tree, str(tmp_path), step=1)
+        shard = os.path.join(path, "shard-000.bin.zst")
+        raw = open(shard, "rb").read()
+        with open(shard, "wb") as f:  # flip bytes in the compressed payload
+            f.write(raw[:50] + bytes([raw[50] ^ 0xFF]) + raw[51:])
+        with pytest.raises(Exception):
+            restore(str(tmp_path), jax.eval_shape(lambda: tree))
+
+    def test_gc_keeps_newest(self, tmp_path):
+        tree = {"a": jnp.zeros((4,))}
+        for s in (1, 2, 3, 4, 5):
+            save(tree, str(tmp_path), step=s, keep=2)
+        assert latest_step(str(tmp_path)) == 5
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+        assert steps == [4, 5]
+
+    def test_async_checkpointer(self, tmp_path):
+        tree = {"a": jnp.full((128,), 3.0)}
+        ck = AsyncCheckpointer()
+        ck.save(tree, str(tmp_path), step=3)
+        ck.wait()
+        out = restore(str(tmp_path), jax.eval_shape(lambda: tree))
+        np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+
+    def test_restart_resumes_training(self, tmp_path):
+        """Full checkpoint/restart: train, save, 'crash', restore, continue."""
+        cfg = OptimizerConfig(lr=1e-2, total_steps=20)
+        params = _toy_params()
+        state = {"params": params, "opt": adamw_init(params, cfg)}
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+        y = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+        for _ in range(3):
+            _, grads = _toy_grads(state["params"], x, y)
+            p, o, _ = adamw_update(state["params"], grads, state["opt"], cfg)
+            state = {"params": p, "opt": o}
+        save(state, str(tmp_path), step=3)
+        restored = restore(str(tmp_path), jax.eval_shape(lambda: state))
+        assert int(np.asarray(restored["opt"]["step"])) == 3
+        _, grads = _toy_grads(restored["params"], x, y)
+        p2, _, _ = adamw_update(restored["params"], grads, restored["opt"], cfg)
+        assert np.isfinite(np.asarray(p2["w"])).all()
+
+
+class TestElastic:
+    def test_health_tracker_failure_and_straggler(self):
+        ht = HealthTracker(timeout_s=10, straggler_factor=2.0)
+        for host in ("h0", "h1", "h2", "h3"):
+            ht.heartbeat(host, now=0.0, step_time=1.0)
+        ht.heartbeat("h3", now=0.0, step_time=5.0)
+        ht.heartbeat("h3", now=0.0, step_time=5.0)
+        for host in ("h0", "h1", "h2"):
+            ht.heartbeat(host, now=20.0, step_time=1.0)
+        assert ht.failed(25.0) == ["h3"]
+        assert ht.alive_hosts(25.0) == ["h0", "h1", "h2"]
+        ht2 = HealthTracker(straggler_factor=2.0)
+        for host, t in (("a", 1.0), ("b", 1.0), ("c", 3.5)):
+            for _ in range(4):
+                ht2.heartbeat(host, 0.0, t)
+        assert ht2.stragglers() == ["c"]
+
+    def test_choose_mesh_shape(self):
+        assert choose_mesh_shape(512) == (2, 16, 16)
+        assert choose_mesh_shape(256) == (16, 16)
+        assert choose_mesh_shape(240) == (15, 16)
+        with pytest.raises(ValueError):
+            choose_mesh_shape(8)
+
+    def test_plan_rescale_moves_boundary_ranges_only(self):
+        plan = plan_rescale((16, 16), 240)
+        assert plan.new_shape == (15, 16)
+        assert plan.replicas_before == 16 and plan.replicas_after == 15
+        assert 0 < len(plan.moved_ranges) <= 15
+
+    def test_backup_policy(self):
+        bp = BackupPolicy(factor=1.5, max_backups=1)
+        assert not bp.should_backup(0.1, 0.1, 0)
+        assert bp.should_backup(0.2, 0.1, 0)
+        assert not bp.should_backup(0.2, 0.1, 1)
