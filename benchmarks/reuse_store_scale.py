@@ -1,0 +1,85 @@
+"""Reuse-store scaling: per-task scalar loop vs batched array-native path.
+
+The measurement behind the batched pipeline (DESIGN.md §Array-native store):
+sweep batch size x store size and compare
+
+  * ``scalar`` — the seed hot path: one ``probe_one`` device dispatch plus a
+    numpy candidate scoring per task (``ReuseStore.query`` in a loop), and
+  * ``batch``  — one ``probe_batch`` dispatch + one fused gather/score kernel
+    call for the whole batch (``ReuseStore.query_batch``).
+
+Derived column reports the speedup of batch over scalar at the same store
+size.  Acceptance target (ISSUE 1): >= 10x at batch >= 256 on a >= 50k store.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import time
+
+from benchmarks.common import Row
+from repro.core import LSHParams, ReuseStore, normalize
+
+STORE_SIZES = (10_000, 50_000)
+BATCH_SIZES = (64, 256, 1024, 2048)
+SCALAR_SAMPLE = 48  # tasks measured for the per-task scalar baseline
+DIM = 64
+
+
+def _time_us(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return (time.perf_counter() - t0) * 1e6
+
+
+def _make_store(n_store: int, seed: int = 0) -> ReuseStore:
+    # num_buckets sized to the store (FALCONN convention: ~N buckets) so the
+    # multi-probe candidate set stays a small fraction of the store.
+    p = LSHParams(dim=DIM, num_tables=5, num_probes=8, num_buckets=16384,
+                  family="hyperplane", seed=11)
+    store = ReuseStore(p, capacity=n_store + 1)
+    rng = np.random.default_rng(seed)
+    X = normalize(rng.standard_normal((n_store, DIM)).astype(np.float32))
+    for lo in range(0, n_store, 8192):  # chunked bulk insert
+        store.insert_batch(X[lo:lo + 8192], list(range(lo, min(lo + 8192, n_store))))
+    return store, X
+
+
+def run(n_reps: int = 7) -> list:
+    rows: list[Row] = []
+    rng = np.random.default_rng(1)
+    for n_store in STORE_SIZES:
+        store, X = _make_store(n_store)
+        queries = normalize(
+            X[:max(BATCH_SIZES)]
+            + 0.05 * rng.standard_normal((max(BATCH_SIZES), DIM)).astype(np.float32)
+            / np.sqrt(DIM))
+        q_scal = queries[:SCALAR_SAMPLE]
+        scalar_fn = lambda: [store.query(q, 0.8) for q in q_scal]  # noqa: E731
+        batch_fns = {b: (lambda qb=queries[:b]: store.query_batch(qb, 0.8))
+                     for b in BATCH_SIZES}
+        # Warmup (jit compiles), then interleave scalar/batch reps so bursty
+        # CPU contention hits both sides of the ratio; OS noise is strictly
+        # additive, so best-of-reps is the stable capability measure.
+        scalar_fn()
+        for fn in batch_fns.values():
+            fn()
+        best_scalar = float("inf")
+        best_batch = {b: float("inf") for b in BATCH_SIZES}
+        for _ in range(n_reps):
+            best_scalar = min(best_scalar, _time_us(scalar_fn))
+            for b, fn in batch_fns.items():
+                best_batch[b] = min(best_batch[b], _time_us(fn))
+        us_scalar = best_scalar / len(q_scal)
+        rows.append((f"reuse_scale/scalar/store{n_store}", us_scalar,
+                     f"per-task best-of-{n_reps}, probe_one+numpy loop"))
+        for b in BATCH_SIZES:
+            us = best_batch[b] / b
+            rows.append((f"reuse_scale/batch{b}/store{n_store}", us,
+                         f"per-task best-of-{n_reps}, speedup {us_scalar / us:.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.2f},{derived}")

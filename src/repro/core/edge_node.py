@@ -15,7 +15,8 @@ from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Any, Callable, Dict, Optional, Tuple
+from collections import defaultdict
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -100,8 +101,7 @@ class EdgeNode:
         )
 
     # ------------------------------------------------------------- task path
-    def handle_task(self, interest: Interest, now: float = 0.0) -> TaskOutcome:
-        """Full task treatment (reuse check -> execute if needed)."""
+    def _parse_task(self, interest: Interest) -> Tuple[Service, str, np.ndarray, float]:
         service_name, kw, _ = parse_task_name(interest.name)
         svc = self.services.get(service_name.strip("/"))
         if svc is None:
@@ -109,32 +109,101 @@ class EdgeNode:
             raise KeyError(f"EN {self.prefix} does not offer {service_name}")
         emb = np.asarray(interest.app_params["input"], np.float32)
         threshold = float(interest.app_params.get("threshold", 0.0))
-        store = self.stores[svc.name.strip("/")]
-        if kw == "task":  # reuse-eligible (opt-out tasks use 'exact')
-            result, sim, idx = store.query(emb, threshold)
-            if idx is not None:
-                self.stats["reused"] += 1
-                data = Data(
-                    interest.name,
-                    content=result,
-                    meta={"reuse": "en", "similarity": sim, "en": self.prefix},
-                )
-                return TaskOutcome(data, True, sim, 0.0, len(store))
-        else:
-            sim = -1.0
-        # Execute from scratch, record, store for future reuse.
+        return svc, kw, emb, threshold
+
+    def _hit_outcome(self, interest: Interest, svc: Service, result: Any,
+                     sim: float) -> TaskOutcome:
+        self.stats["reused"] += 1
+        data = Data(
+            interest.name,
+            content=result,
+            meta={"reuse": "en", "similarity": sim, "en": self.prefix},
+        )
+        return TaskOutcome(data, True, sim, 0.0, len(self.stores[svc.name.strip("/")]))
+
+    def _exec_outcome(
+        self, interest: Interest, svc: Service, kw: str, emb: np.ndarray,
+        sim: float, defer_inserts: Optional[List[Tuple[np.ndarray, Any]]] = None,
+    ) -> TaskOutcome:
+        """Execute from scratch, record stats/TTC, store for future reuse.
+
+        ``defer_inserts`` (batch path): accumulate (emb, result) for one
+        ``insert_batch`` by the caller instead of inserting immediately.
+        """
+        key = svc.name.strip("/")
         exec_time = svc.sample_exec_time(self._rng)
         result = svc.execute(emb)
-        self.ttc.observe(svc.name.strip("/"), exec_time)
+        self.ttc.observe(key, exec_time)
         if kw == "task":
-            store.insert(emb, result)
+            if defer_inserts is None:
+                self.stores[key].insert(emb, result)
+            else:
+                defer_inserts.append((emb, result))
         self.stats["executed"] += 1
         data = Data(
             interest.name,
             content=result,
             meta={"reuse": None, "en": self.prefix},
         )
-        return TaskOutcome(data, False, sim, exec_time, len(store))
+        return TaskOutcome(data, False, sim, exec_time, len(self.stores[key]))
+
+    def handle_task(self, interest: Interest, now: float = 0.0) -> TaskOutcome:
+        """Full task treatment (reuse check -> execute if needed)."""
+        svc, kw, emb, threshold = self._parse_task(interest)
+        store = self.stores[svc.name.strip("/")]
+        if kw == "task":  # reuse-eligible (opt-out tasks use 'exact')
+            result, sim, idx = store.query(emb, threshold)
+            if idx is not None:
+                return self._hit_outcome(interest, svc, result, sim)
+        else:
+            sim = -1.0
+        return self._exec_outcome(interest, svc, kw, emb, sim)
+
+    def handle_task_batch(self, interests: List[Interest], now: float = 0.0) -> List[TaskOutcome]:
+        """Batched task treatment: one ``query_batch`` per service.
+
+        Per-item semantics match ``handle_task`` (shared outcome helpers),
+        with two batch-specific rules: (1) every query is matched against the
+        store state at batch start — an executed result is only reusable by
+        *later* batches; (2) the whole batch is validated up front, so an
+        unknown service raises before any task is queried or executed.
+        Misses are executed from scratch and bulk-inserted per service.
+        """
+        outcomes: List[Optional[TaskOutcome]] = [None] * len(interests)
+        parsed = [self._parse_task(interest) for interest in interests]
+        by_service: Dict[str, List[int]] = defaultdict(list)
+        for i, (svc, kw, _, _) in enumerate(parsed):
+            if kw == "task":
+                by_service[svc.name.strip("/")].append(i)
+
+        # --- one batched reuse query per service
+        qres: Dict[int, Tuple[Any, float, Optional[int]]] = {}
+        for svc_name, idxs in by_service.items():
+            store = self.stores[svc_name]
+            embs = np.stack([parsed[i][2] for i in idxs])
+            thrs = np.asarray([parsed[i][3] for i in idxs], np.float32)
+            for i, res in zip(idxs, store.query_batch(embs, thrs)):
+                qres[i] = res
+
+        # --- hits return stored results; misses execute + bulk-insert
+        to_insert: Dict[str, List[Tuple[np.ndarray, Any]]] = defaultdict(list)
+        for i, interest in enumerate(interests):
+            svc, kw, emb, _thr = parsed[i]
+            result, sim, idx = qres.get(i, (None, -1.0, None))
+            if idx is not None:
+                outcomes[i] = self._hit_outcome(interest, svc, result, sim)
+            else:
+                outcomes[i] = self._exec_outcome(
+                    interest, svc, kw, emb, sim,
+                    defer_inserts=to_insert[svc.name.strip("/")])
+        for svc_name, items in to_insert.items():
+            if items:
+                self.stores[svc_name].insert_batch(
+                    np.stack([e for e, _ in items]), [r for _, r in items])
+        for i, (svc, kw, _, _) in enumerate(parsed):  # post-insert sizes
+            if kw == "task" and not outcomes[i].reused:
+                outcomes[i].store_size = len(self.stores[svc.name.strip("/")])
+        return outcomes
 
     def estimate_ttc(self, service: str) -> float:
         return self.ttc.estimate(service.strip("/"), self.queue_len)

@@ -164,6 +164,7 @@ class ReservoirNetwork:
         cs_capacity: int = 512,
         user_cs_capacity: int = 32,
         en_store_capacity: int = 100_000,
+        en_batch_window_s: float = 0.0,  # >0: EN-side batch window (reservoir)
         delay_model: Optional[PaperDelayModel] = None,
         icedge_tag_bits: int = 4,
         measure_fwd_errors: bool = False,
@@ -199,6 +200,7 @@ class ReservoirNetwork:
         # --- build forwarders + faces
         self.forwarders: Dict[Any, Forwarder] = {}
         self.links: Dict[Tuple[Any, int], Tuple[Any, int, float]] = {}
+        self._adjacency: Dict[Tuple[Any, Any], int] = {}  # (a, b) -> face at a
         self._face_count: Dict[Any, int] = {}
         for node in graph.nodes:
             self.forwarders[node] = Forwarder(
@@ -222,6 +224,8 @@ class ReservoirNetwork:
             node: {} for node in self.en_nodes
         }
         self._en_busy_until: Dict[Any, float] = {n: 0.0 for n in self.en_nodes}
+        self.en_batch_window_s = float(en_batch_window_s)
+        self._en_pending: Dict[Any, List[Interest]] = {n: [] for n in self.en_nodes}
 
         # --- users
         self.users: Dict[str, Tuple[Any, Forwarder]] = {}
@@ -236,6 +240,8 @@ class ReservoirNetwork:
         self._face_count[b] += 1
         self.links[(a, fa)] = (b, fb, delay)
         self.links[(b, fb)] = (a, fa, delay)
+        self._adjacency[(a, b)] = fa
+        self._adjacency[(b, a)] = fb
 
     def _install_routes(self) -> None:
         """Shortest-path FIB routes for every EN prefix from every node."""
@@ -251,10 +257,10 @@ class ReservoirNetwork:
                 self.forwarders[node].fib.insert(prefix, face, cost=len(path))
 
     def _face_between(self, a: Any, b: Any) -> int:
-        for (node, face), (peer, _, _) in self.links.items():
-            if node == a and peer == b:
-                return face
-        raise KeyError(f"no link {a}->{b}")
+        try:
+            return self._adjacency[(a, b)]
+        except KeyError:
+            raise KeyError(f"no link {a}->{b}") from None
 
     # -------------------------------------------------------------- services
     def register_service(self, service: Service, num_buckets: int = None) -> None:
@@ -367,6 +373,15 @@ class ReservoirNetwork:
             # deferred result fetch (paper Fig. 3b): /<EN-prefix>/<svc>/task/<h>
             self._en_fetch(node, interest)
             return
+        if self.mode == "reservoir" and self.en_batch_window_s > 0:
+            # batch window (DESIGN.md §Array-native store): buffer tasks
+            # arriving at this EN; one query_batch services the whole window.
+            pending = self._en_pending[node]
+            pending.append(interest)
+            if len(pending) == 1:
+                self.at(self._now + self.en_batch_window_s,
+                        self._flush_en_batch, node)
+            return
         svc_name = interest.app_params["service"]
         svc = self.services[svc_name]
         store = en.stores[svc_name]
@@ -374,52 +389,9 @@ class ReservoirNetwork:
         if self.mode == "reservoir":
             emb = np.asarray(interest.app_params["input"], np.float32)
             threshold = float(interest.app_params.get("threshold", 0.0))
-            result, sim, idx = store.query(emb, threshold)
-            if idx is not None:
-                en.stats["reused"] += 1
-                data = Data(interest.name, content=result,
-                            meta={"reuse": "en", "similarity": sim, "en": en.prefix})
-                self._send_from_en(node, data, search_t)
-                return
-            # miss -> execute from scratch (charge queueing on the EN)
-            fwd_err = (
-                self._oracle_other_en_hit(node, svc_name, emb, threshold)
-                if self.measure_fwd_errors else False
-            )
-            # Fig. 3c: large inputs are pulled from the user in chunks,
-            # but ONLY now that reuse proved impossible
-            pull_delay = 0.0
-            input_size = int(interest.app_params.get("input_size", 0))
-            if self.large_input_bytes and input_size > self.large_input_bytes:
-                nchunks = -(-input_size // self.input_chunk_bytes)
-                rtt_est = 2 * (self.user_link_delay_s + 2 * self.link_delay_s)
-                # pipelined chunk fetches: one RTT + serialisation tail
-                pull_delay = rtt_est + (nchunks - 1) * 0.2e-3
-            exec_t = svc.sample_exec_time(self._rng)
-            result = svc.execute(emb)
-            store.insert(emb, result)
-            en.stats["executed"] += 1
-            en.ttc.observe(svc_name, exec_t)
-            start = max(self._now + search_t + pull_delay,
-                        self._en_busy_until[node])
-            done = start + exec_t
-            self._en_busy_until[node] = done
-            if self.protocol == "ttc":
-                # Fig. 3b: answer the task Interest with a TTC estimate; the
-                # user fetches the result at /<EN-prefix>/<name> after TTC-RTT
-                self._en_ready[(node, interest.name)] = (
-                    done, result, {"reuse": None, "en": en.prefix,
-                                   "fwd_error": fwd_err})
-                ttc_data = Data(
-                    interest.name,
-                    content={"ttc": done - self._now, "en_prefix": en.prefix},
-                    meta={"control": "ttc", "cacheable": False, "en": en.prefix})
-                self._send_from_en(node, ttc_data, search_t)
-            else:
-                data = Data(interest.name, content=result,
-                            meta={"reuse": None, "en": en.prefix,
-                                  "fwd_error": fwd_err})
-                self._send_from_en(node, data, done - self._now)
+            qres = store.query(emb, threshold)
+            self._process_reservoir_task(node, interest, emb, threshold, qres,
+                                         search_t)
         else:  # icedge
             emb = np.asarray(interest.app_params["input"], np.float32)
             tag = icedge_tag(emb, self.icedge_tag_bits)
@@ -439,6 +411,107 @@ class ReservoirNetwork:
             data = Data(interest.name, content=result,
                         meta={"reuse": None, "en": en.prefix, "cacheable": False})
             self._send_from_en(node, data, done - self._now)
+
+    def _process_reservoir_task(
+        self,
+        node: Any,
+        interest: Interest,
+        emb: np.ndarray,
+        threshold: float,
+        qres: Tuple[Any, float, Optional[int]],
+        search_t: float,
+        defer_inserts: Optional[List[Tuple[np.ndarray, Any]]] = None,
+    ) -> None:
+        """Treat one reservoir task given its (result, sim, idx) query result.
+
+        ``defer_inserts`` (batch path): executed results are accumulated for a
+        single ``insert_batch`` by the caller instead of inserted one-by-one.
+        """
+        en = self.edge_nodes[node]
+        svc_name = interest.app_params["service"]
+        svc = self.services[svc_name]
+        store = en.stores[svc_name]
+        result, sim, idx = qres
+        if idx is not None:
+            en.stats["reused"] += 1
+            data = Data(interest.name, content=result,
+                        meta={"reuse": "en", "similarity": sim, "en": en.prefix})
+            self._send_from_en(node, data, search_t)
+            return
+        # miss -> execute from scratch (charge queueing on the EN)
+        fwd_err = (
+            self._oracle_other_en_hit(node, svc_name, emb, threshold)
+            if self.measure_fwd_errors else False
+        )
+        # Fig. 3c: large inputs are pulled from the user in chunks,
+        # but ONLY now that reuse proved impossible
+        pull_delay = 0.0
+        input_size = int(interest.app_params.get("input_size", 0))
+        if self.large_input_bytes and input_size > self.large_input_bytes:
+            nchunks = -(-input_size // self.input_chunk_bytes)
+            rtt_est = 2 * (self.user_link_delay_s + 2 * self.link_delay_s)
+            # pipelined chunk fetches: one RTT + serialisation tail
+            pull_delay = rtt_est + (nchunks - 1) * 0.2e-3
+        exec_t = svc.sample_exec_time(self._rng)
+        result = svc.execute(emb)
+        if defer_inserts is None:
+            store.insert(emb, result)
+        else:
+            defer_inserts.append((emb, result))
+        en.stats["executed"] += 1
+        en.ttc.observe(svc_name, exec_t)
+        start = max(self._now + search_t + pull_delay,
+                    self._en_busy_until[node])
+        done = start + exec_t
+        self._en_busy_until[node] = done
+        if self.protocol == "ttc":
+            # Fig. 3b: answer the task Interest with a TTC estimate; the
+            # user fetches the result at /<EN-prefix>/<name> after TTC-RTT
+            self._en_ready[(node, interest.name)] = (
+                done, result, {"reuse": None, "en": en.prefix,
+                               "fwd_error": fwd_err})
+            ttc_data = Data(
+                interest.name,
+                content={"ttc": done - self._now, "en_prefix": en.prefix},
+                meta={"control": "ttc", "cacheable": False, "en": en.prefix})
+            self._send_from_en(node, ttc_data, search_t)
+        else:
+            data = Data(interest.name, content=result,
+                        meta={"reuse": None, "en": en.prefix,
+                              "fwd_error": fwd_err})
+            self._send_from_en(node, data, done - self._now)
+
+    def _flush_en_batch(self, node: Any) -> None:
+        """Service all tasks buffered at an EN with one query_batch/service.
+
+        The per-task search delay is the batched search amortised over the
+        window (the measured speedup lives in benchmarks/reuse_store_scale).
+        """
+        pending = self._en_pending[node]
+        if not pending:
+            return
+        self._en_pending[node] = []
+        en = self.edge_nodes[node]
+        by_svc: Dict[str, List[Interest]] = {}
+        for interest in pending:
+            by_svc.setdefault(interest.app_params["service"], []).append(interest)
+        for svc_name, interests in by_svc.items():
+            store = en.stores[svc_name]
+            search_t = self.delays.search_time_s(
+                self.lsh_params.num_tables, max(len(store), 1)) / len(interests)
+            embs = np.stack([np.asarray(i.app_params["input"], np.float32)
+                             for i in interests])
+            thrs = np.asarray([float(i.app_params.get("threshold", 0.0))
+                               for i in interests], np.float32)
+            qres = store.query_batch(embs, thrs)
+            to_insert: List[Tuple[np.ndarray, Any]] = []
+            for interest, emb, thr, qr in zip(interests, embs, thrs, qres):
+                self._process_reservoir_task(node, interest, emb, float(thr),
+                                             qr, search_t,
+                                             defer_inserts=to_insert)
+            if to_insert:
+                store.insert_batch(np.stack([e for e, _ in to_insert]),
+                                   [r for _, r in to_insert])
 
     def _en_fetch(self, node: Any, interest: Interest) -> None:
         """Deferred result fetch at an EN (paper Fig. 3b, second exchange)."""

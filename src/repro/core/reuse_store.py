@@ -6,19 +6,45 @@ gathers candidate previous tasks, and returns the nearest neighbour by the
 configured similarity.  The EN reuses that result iff the similarity exceeds
 the task-carried threshold.
 
+Array-native index (DESIGN.md §Array-native store): each LSH table is a
+fixed-capacity contiguous bucket array — ``(T, num_buckets, bucket_cap)``
+int32 slot ids plus ``(T, num_buckets)`` fill counts — instead of a Python
+dict of lists.  Probe -> candidate-gather is then pure vectorized indexing,
+and the batched ``query_batch`` path services a whole batch of tasks with one
+``probe_batch`` dispatch plus one fused gather/score kernel call
+(``kernels.sim_topk.gather_top1``).  Buckets that exceed ``bucket_cap``
+overwrite their oldest slot ring-buffer style (the displaced entry stays
+reachable through its other tables; ``overflows`` counts occurrences).
+
 Capacity-bounded with LRU eviction (the paper's §V-C cache-size study applies
-the same policy at user devices, forwarders, and ENs).  For large stores the
-candidate-scoring matmul is offloaded to the ``sim_topk`` Pallas kernel.
+the same policy at user devices, forwarders, and ENs).  For large scalar-path
+candidate sets the scoring matmul is offloaded to the ``sim_topk`` kernel.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Any, List, Optional, Tuple
+from typing import Any, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from .lsh import LSH, LSHParams, get_lsh, normalize
 from .similarity import get_similarity
+
+# Hard ceiling on total bucket-table slots (int32 entries) per store.
+_MAX_TABLE_SLOTS = 1 << 25
+
+
+def _auto_bucket_cap(params: LSHParams, capacity: int) -> int:
+    """Slots per bucket: ~4x the uniform fill at capacity, clamped to [8, 512]."""
+    nb = max(params.num_buckets, 1)
+    est = -(-4 * max(capacity, 1) // nb)
+    cap = max(8, min(512, est))
+    per_bucket_budget = _MAX_TABLE_SLOTS // max(params.num_tables * nb, 1)
+    if per_bucket_budget < 4:
+        raise ValueError(
+            f"num_tables*num_buckets={params.num_tables * nb} too large for "
+            "array-native bucket tables; reduce num_buckets or num_tables")
+    return min(cap, max(per_bucket_budget, 4))
 
 
 class ReuseStore:
@@ -28,6 +54,7 @@ class ReuseStore:
         capacity: int = 100_000,
         similarity: str = "cosine",
         use_kernel_threshold: int = 4096,
+        bucket_cap: Optional[int] = None,
     ):
         self.lsh: LSH = get_lsh(lsh_params)
         self.params = lsh_params
@@ -38,16 +65,79 @@ class ReuseStore:
         d = lsh_params.dim
         self._emb = np.zeros((0, d), np.float32)
         self._results: List[Any] = []
-        self._buckets_of: List[np.ndarray] = []  # per slot: (T,) bucket ids
+        self._buckets_of: List[Optional[np.ndarray]] = []  # per slot: (T,) ids
         self._free: List[int] = []
         self._lru: "OrderedDict[int, None]" = OrderedDict()
-        self._tables: List[dict] = [dict() for _ in range(lsh_params.num_tables)]
+        # --- array-native LSH tables
+        t, nb = lsh_params.num_tables, lsh_params.num_buckets
+        self.bucket_cap = (int(bucket_cap) if bucket_cap is not None
+                           else _auto_bucket_cap(lsh_params, self.capacity))
+        self._slots = np.full((t, nb, self.bucket_cap), -1, np.int32)
+        self._fill = np.zeros((t, nb), np.int32)
+        self._cursor = np.zeros((t, nb), np.int32)  # ring position when full
+        self.overflows = 0
+        # device-resident embedding matrix for the batched kernel, refreshed
+        # lazily when inserts dirty it (one upload per batch window, not per
+        # query)
+        self._emb_version = 0
+        self._emb_dev: Any = None
+        self._emb_dev_version = -1
         self.inserts = 0
         self.queries = 0
         self.candidate_counts: List[int] = []
 
     def __len__(self) -> int:
         return len(self._lru)
+
+    # ---------------------------------------------------------------- tables
+    def _table_add(self, idx: int, buckets: np.ndarray) -> None:
+        cap = self.bucket_cap
+        for t in range(self.params.num_tables):
+            b = int(buckets[t])
+            f = int(self._fill[t, b])
+            if f < cap:
+                self._slots[t, b, f] = idx
+                self._fill[t, b] = f + 1
+            else:  # full bucket: ring-overwrite the oldest slot
+                c = int(self._cursor[t, b])
+                self._slots[t, b, c] = idx
+                self._cursor[t, b] = (c + 1) % cap
+                self.overflows += 1
+
+    def _table_remove(self, idx: int, buckets: np.ndarray) -> None:
+        """Remove idx from its buckets (swap-with-last keeps slots compact)."""
+        for t in range(self.params.num_tables):
+            b = int(buckets[t])
+            row = self._slots[t, b]
+            f = int(self._fill[t, b])
+            pos = np.nonzero(row[:f] == idx)[0]
+            if pos.size:  # absent if ring-overflow already displaced it
+                p = int(pos[0])
+                row[p] = row[f - 1]
+                row[f - 1] = -1
+                self._fill[t, b] = f - 1
+
+    def _candidate_matrix(self, probes: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(B, T, P) probe buckets -> ((B, C) slot ids, (B,) counts).
+
+        Rows are front-packed valid store ids (slot order) with -1 padding; C
+        is trimmed to the densest query's candidate count.  Ids hit through
+        several tables appear once per table — dedup is the caller's concern
+        (``query_batch`` sorts + compacts, ``candidates`` uses np.unique), so
+        this stays a branch-free O(candidates) gather.
+        """
+        b = probes.shape[0]
+        t_idx = np.arange(self.params.num_tables)[None, :, None]
+        raw = self._slots[t_idx, probes].reshape(b, -1)
+        valid = raw >= 0
+        counts = valid.sum(axis=1).astype(np.int64)
+        width = max(int(counts.max()) if b else 0, 1)
+        out = np.full((b, width), -1, np.int32)
+        rows, cols = np.nonzero(valid)
+        starts = np.zeros(b + 1, np.int64)
+        np.cumsum(counts, out=starts[1:])
+        out[rows, np.arange(rows.size) - starts[rows]] = raw[rows, cols]
+        return out, counts
 
     # ---------------------------------------------------------------- insert
     def _alloc(self) -> int:
@@ -63,61 +153,41 @@ class ReuseStore:
 
     def _evict_lru(self) -> None:
         idx, _ = self._lru.popitem(last=False)
-        for t, b in enumerate(self._buckets_of[idx]):
-            lst = self._tables[t].get(int(b))
-            if lst is not None:
-                try:
-                    lst.remove(idx)
-                except ValueError:
-                    pass
-                if not lst:
-                    del self._tables[t][int(b)]
+        self._table_remove(idx, self._buckets_of[idx])
         self._results[idx] = None
         self._buckets_of[idx] = None
         self._free.append(idx)
 
-    def insert(self, embedding: np.ndarray, result: Any) -> int:
-        emb = normalize(np.asarray(embedding, np.float32).reshape(-1))
+    def _insert_hashed(self, emb: np.ndarray, result: Any, buckets: np.ndarray) -> int:
         while len(self._lru) >= self.capacity > 0:
             self._evict_lru()
         idx = self._alloc()
         self._emb[idx] = emb
+        self._emb_version += 1
         self._results[idx] = result
-        buckets = self.lsh.hash_one(emb)
         self._buckets_of[idx] = buckets
-        for t, b in enumerate(buckets):
-            self._tables[t].setdefault(int(b), []).append(idx)
+        self._table_add(idx, buckets)
         self._lru[idx] = None
         self.inserts += 1
         return idx
 
-    def insert_batch(self, embeddings: np.ndarray, results: List[Any]) -> None:
+    def insert(self, embedding: np.ndarray, result: Any) -> int:
+        emb = normalize(np.asarray(embedding, np.float32).reshape(-1))
+        return self._insert_hashed(emb, result, self.lsh.hash_one(emb))
+
+    def insert_batch(self, embeddings: np.ndarray, results: Sequence[Any]) -> List[int]:
         """Bulk insert: one batched LSH hash, then table updates."""
-        embs = normalize(np.asarray(embeddings, np.float32))
+        embs = normalize(np.atleast_2d(np.asarray(embeddings, np.float32)))
         buckets = np.asarray(self.lsh.hash_batch(embs))  # (N, T)
-        for emb, res, bks in zip(embs, results, buckets):
-            while len(self._lru) >= self.capacity > 0:
-                self._evict_lru()
-            idx = self._alloc()
-            self._emb[idx] = emb
-            self._results[idx] = res
-            self._buckets_of[idx] = bks
-            for t, b in enumerate(bks):
-                self._tables[t].setdefault(int(b), []).append(idx)
-            self._lru[idx] = None
-            self.inserts += 1
+        return [self._insert_hashed(emb, res, bks)
+                for emb, res, bks in zip(embs, results, buckets)]
 
     # ----------------------------------------------------------------- query
     def candidates(self, embedding: np.ndarray) -> List[int]:
         emb = normalize(np.asarray(embedding, np.float32).reshape(-1))
         probes = self.lsh.probe_one(emb)  # (T, P)
-        seen: "OrderedDict[int, None]" = OrderedDict()
-        for t in range(probes.shape[0]):
-            tab = self._tables[t]
-            for b in probes[t]:
-                for idx in tab.get(int(b), ()):
-                    seen.setdefault(idx, None)
-        return list(seen)
+        cand, counts = self._candidate_matrix(probes[None])
+        return [int(i) for i in np.unique(cand[0, : counts[0]])]
 
     def query(
         self, embedding: np.ndarray, threshold: float = 0.0
@@ -145,9 +215,103 @@ class ReuseStore:
         self._lru.move_to_end(idx)  # reuse refreshes LRU position
         return self._results[idx], sim, idx
 
+    def query_batch(
+        self,
+        embeddings: np.ndarray,
+        thresholds: Union[float, Sequence[float], np.ndarray] = 0.0,
+    ) -> List[Tuple[Optional[Any], float, Optional[int]]]:
+        """Batched ``query``: one probe dispatch + one fused gather/score call.
+
+        ``thresholds`` is a scalar or per-query sequence.  Returns one
+        (result, similarity, idx) triple per query with the same hit/miss
+        semantics as the scalar path; every query is scored against the store
+        state at call time (a batch cannot reuse results inserted for earlier
+        queries of the same batch).
+        """
+        embs = normalize(np.atleast_2d(np.asarray(embeddings, np.float32)))
+        n = embs.shape[0]
+        self.queries += n
+        thr = np.asarray(thresholds, np.float32)
+        if thr.ndim == 0:
+            thr = np.full(n, float(thr), np.float32)
+        elif thr.shape != (n,):
+            raise ValueError("thresholds must be scalar or length-B")
+        if not self._lru:
+            self.candidate_counts.extend([0] * n)
+            return [(None, -1.0, None)] * n
+        probes = np.asarray(self.lsh.probe_batch(embs))  # (B, T, P)
+        cand, counts = self._candidate_matrix(probes)
+        # Dedup per-table duplicates: sort each row, keep first occurrences,
+        # re-compact.  This matches the scalar path both in candidate_counts
+        # stats and in argmax tie-breaking (candidates() returns ascending
+        # unique ids), and shrinks the kernel's candidate dimension.
+        srt = np.sort(cand, axis=1)
+        uniq = np.ones(srt.shape, bool)
+        uniq[:, 1:] = srt[:, 1:] != srt[:, :-1]
+        uniq &= srt >= 0
+        counts = uniq.sum(axis=1).astype(np.int64)
+        self.candidate_counts.extend(int(c) for c in counts)
+        if counts.max() == 0:
+            return [(None, -1.0, None)] * n
+        width = max(int(counts.max()), 1)
+        dedup = np.full((n, width), -1, np.int32)
+        rows, cols = np.nonzero(uniq)
+        starts = np.zeros(n + 1, np.int64)
+        np.cumsum(counts, out=starts[1:])
+        dedup[rows, np.arange(rows.size) - starts[rows]] = srt[rows, cols]
+        val, idx = self._score_batch(embs, dedup, counts)
+        out: List[Tuple[Optional[Any], float, Optional[int]]] = []
+        for i in range(n):
+            if counts[i] == 0 or idx[i] < 0:
+                out.append((None, -1.0, None))
+                continue
+            sim = float(val[i])
+            if sim < thr[i]:
+                out.append((None, sim, None))
+                continue
+            j = int(idx[i])
+            self._lru.move_to_end(j)
+            out.append((self._results[j], sim, j))
+        return out
+
+    def _score_batch(
+        self, embs: np.ndarray, cand: np.ndarray, counts: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Score the (B, C) candidate matrix -> ((B,) best sim, (B,) best id).
+
+        Rows of ``cand`` are ascending unique ids, front-packed, -1 padded.
+        Cosine stores use the fused gather/score kernel; other similarity
+        measures score per query with the configured function (same math as
+        the scalar path, still one probe dispatch for the batch).
+        """
+        if self.similarity_name == "cosine":
+            from repro.kernels import ops as _kops
+
+            if self._emb_dev_version != self._emb_version:
+                import jax.numpy as jnp
+
+                self._emb_dev = jnp.asarray(self._emb)
+                self._emb_dev_version = self._emb_version
+            val, idx = _kops.gathered_top1(embs, self._emb_dev, cand)
+            return np.asarray(val), np.asarray(idx)
+        val = np.full(embs.shape[0], -np.inf, np.float32)
+        idx = np.full(embs.shape[0], -1, np.int64)
+        for i in range(embs.shape[0]):
+            ids = cand[i, : counts[i]]
+            if ids.size == 0:
+                continue
+            sims = self.similarity(embs[i], self._emb[ids])
+            best = int(np.argmax(sims))
+            val[i], idx[i] = sims[best], int(ids[best])
+        return val, idx
+
     # ------------------------------------------------------------ inspection
     def embedding_of(self, idx: int) -> np.ndarray:
         return self._emb[idx]
 
     def result_of(self, idx: int) -> Any:
         return self._results[idx]
+
+    def live_ids(self) -> List[int]:
+        """Slot ids currently resident (LRU order, oldest first)."""
+        return list(self._lru)

@@ -18,6 +18,7 @@ from . import ref
 from .decode_attention import decode_attention as _decode_kernel
 from .flash_attention import flash_attention as _flash_kernel
 from .lsh_hash import lsh_hash as _lsh_kernel
+from .sim_topk import gather_top1 as _gather_kernel
 from .sim_topk import sim_top1 as _sim_kernel
 
 
@@ -71,6 +72,43 @@ def nearest_neighbor(q: jax.Array, store: jax.Array,
     sp, ns = _pad_to(store, 0, 8)
     nv = jnp.asarray(ns if n_valid is None else n_valid, jnp.int32)
     val, idx = _sim_kernel(qp, sp, nv, interpret=_interpret())
+    return val[:nq], idx[:nq]
+
+
+def _pad_ids(ids: jax.Array, axis: int, mult: int) -> jax.Array:
+    """Pad a candidate-id array with -1 (invalid) up to a multiple of mult."""
+    n = ids.shape[axis]
+    target = max(-(-n // mult) * mult, mult)
+    if target == n:
+        return ids
+    pad = [(0, 0)] * ids.ndim
+    pad[axis] = (0, target - n)
+    return jnp.pad(ids, pad, constant_values=-1)
+
+
+def gathered_top1(q: jax.Array, store: jax.Array, cand_ids: jax.Array):
+    """Fused multi-probe gather + masked cosine top-1 (batched reuse query).
+
+    q: (Q, D) unit rows; store: (N, D) unit rows; cand_ids: (Q, C) int32 store
+    row ids, -1 = unused slot.  Returns (best (Q,) f32, idx (Q,) int32) where
+    idx is a store row id and -1/-inf mark queries without candidates.
+
+    Candidate width is padded to a multiple of 64 (queries to 8) so repeated
+    calls with drifting candidate counts reuse a small set of compilations.
+    """
+    q = jnp.atleast_2d(q)
+    nq = q.shape[0]
+    if store.shape[0] == 0 or cand_ids.shape[1] == 0:
+        return (jnp.full((nq,), -jnp.inf, jnp.float32),
+                jnp.full((nq,), -1, jnp.int32))
+    qp, _ = _pad_to(q, 0, 8)
+    ids = _pad_ids(jnp.asarray(cand_ids, jnp.int32), 1, 64)
+    ids = _pad_ids(ids, 0, 8)
+    sp, _ = _pad_to(store, 0, 8)
+    # Small blocks keep the gathered (bQ, bC, D) tile cache-resident on CPU;
+    # the TPU path prefers the kernel's larger MXU-aligned defaults.
+    blocks = {"block_q": 128, "block_c": 512} if _interpret() else {}
+    val, idx = _gather_kernel(qp, sp, ids, interpret=_interpret(), **blocks)
     return val[:nq], idx[:nq]
 
 

@@ -43,6 +43,30 @@ def sim_top1_ref(q: jax.Array, store: jax.Array, valid_n: Optional[int] = None):
     return jnp.max(s, axis=-1), jnp.argmax(s, axis=-1).astype(jnp.int32)
 
 
+def gather_top1_ref(q: jax.Array, store: jax.Array, cand_ids: jax.Array):
+    """Candidate-gather cosine top-1 (the multi-probe batch path).
+
+    q: (Q, D); store: (N, D); cand_ids: (Q, C) int32 store row ids, -1 = pad.
+    Returns (best (Q,), idx (Q,)) with idx a store row id, -1 when a query has
+    no valid candidate (best is -inf there).
+    """
+    ids = cand_ids.astype(jnp.int32)
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    qf = q.astype(jnp.float32)
+    qn = qf / jnp.maximum(jnp.linalg.norm(qf, axis=-1, keepdims=True), 1e-12)
+    sf = store.astype(jnp.float32)
+    sn = sf / jnp.maximum(jnp.linalg.norm(sf, axis=-1, keepdims=True), 1e-12)
+    cand = jnp.take(sn, safe, axis=0)                   # (Q, C, D)
+    scores = jnp.einsum("qd,qcd->qc", qn, cand)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    best = jnp.max(scores, axis=-1)
+    pos = jnp.argmax(scores, axis=-1)
+    idx = jnp.take_along_axis(safe, pos[:, None], axis=-1)[:, 0]
+    idx = jnp.where(jnp.isfinite(best), idx, -1).astype(jnp.int32)
+    return best, idx
+
+
 # ------------------------------------------------------------ flash attention
 def flash_attention_ref(
     q: jax.Array,                  # (B, S, H, D)

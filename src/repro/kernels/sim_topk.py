@@ -1,12 +1,23 @@
-"""Pallas TPU kernel: streaming nearest-neighbour search (cosine top-1).
+"""Pallas TPU kernels: streaming nearest-neighbour search (cosine top-1).
 
 The EN-side reuse query (paper Table IVb: 0.09-4.4 ms per search on CPU).
 Inputs are L2-normalised (the reuse store normalises on insert), so cosine
-similarity is a plain matmul.  Grid: (Q / bQ, N / bN) with N innermost —
-TPU grids execute sequentially, so a VMEM scratch carries the running
-(best value, best index) across N tiles and the result is written once at
-the last tile.  This streams an arbitrarily large store through VMEM with
-O(bQ) state — the kernel analogue of multi-probe "search only what's needed".
+similarity is a plain matmul.  Two kernels:
+
+* ``sim_top1`` — brute-force streaming top-1 over the whole store.
+  Grid: (Q / bQ, N / bN) with N innermost — TPU grids execute sequentially,
+  so a VMEM scratch carries the running (best value, best index) across N
+  tiles and the result is written once at the last tile.  This streams an
+  arbitrarily large store through VMEM with O(bQ) state.
+
+* ``gather_top1`` — the multi-probe batch path (DESIGN.md §Array-native
+  store).  Each query carries its own LSH candidate list (store row ids,
+  ``-1`` padded); the kernel gathers candidate embeddings by slot id and
+  computes the masked cosine top-1 in the same pass.  Grid: (Q / bQ, C / bC)
+  with candidates innermost and the same running-best scratch scheme, so
+  work is O(B * C * D) — the candidate set, not the store size.  The gather
+  lowers to a Mosaic dynamic row gather on TPU; on CPU the kernels run in
+  interpret mode (see ops.py).
 """
 from __future__ import annotations
 
@@ -84,4 +95,76 @@ def sim_top1(q: jax.Array, store: jax.Array, n_valid: jax.Array | None = None,
         ],
         interpret=interpret,
     )(q, store, nv)
+    return val, idx
+
+
+def _gather_top1_kernel(q_ref, ids_ref, store_ref, val_ref, idx_ref,
+                        best_val, best_idx):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_val[...] = jnp.full_like(best_val, -jnp.inf)
+        best_idx[...] = jnp.full_like(best_idx, -1)
+
+    q = q_ref[...].astype(jnp.float32)                 # (bQ, D)
+    ids = ids_ref[...]                                 # (bQ, bC) int32, -1 pad
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    store = store_ref[...]                             # (N, D)
+    cand = jnp.take(store, safe.reshape(-1), axis=0, mode="clip")
+    cand = cand.reshape(safe.shape + (q.shape[-1],)).astype(jnp.float32)
+    scores = jnp.einsum("qd,qcd->qc", q, cand)         # (bQ, bC) on the VPU
+    scores = jnp.where(valid, scores, -jnp.inf)
+    tile_val = jnp.max(scores, axis=-1)                # (bQ,)
+    pos = jnp.argmax(scores, axis=-1)
+    tile_idx = jnp.take_along_axis(safe, pos[:, None], axis=-1)[:, 0]
+    tile_idx = jnp.where(tile_val > -jnp.inf, tile_idx, -1).astype(jnp.int32)
+    better = tile_val > best_val[...]
+    best_val[...] = jnp.where(better, tile_val, best_val[...])
+    best_idx[...] = jnp.where(better, tile_idx, best_idx[...])
+
+    @pl.when(j == nj - 1)
+    def _done():
+        val_ref[...] = best_val[...]
+        idx_ref[...] = best_idx[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_c", "interpret"))
+def gather_top1(q: jax.Array, store: jax.Array, cand_ids: jax.Array,
+                *, block_q: int = 128, block_c: int = 1024,
+                interpret: bool = True):
+    """Fused candidate-gather + masked cosine top-1.
+
+    q: (Q, D) unit rows; store: (N, D) unit rows; cand_ids: (Q, C) int32 store
+    row ids with -1 marking unused slots.  Returns (best (Q,), idx (Q,)) where
+    idx is a *store row id* (-1 and best=-inf when a query has no candidates).
+    """
+    Q, D = q.shape
+    C = cand_ids.shape[1]
+    bQ, bC = min(block_q, Q), min(block_c, C)
+    grid = (pl.cdiv(Q, bQ), pl.cdiv(C, bC))
+    val, idx = pl.pallas_call(
+        _gather_top1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bQ, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((bQ, bC), lambda i, j: (i, j)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((bQ,), lambda i, j: (i,)),
+            pl.BlockSpec((bQ,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q,), jnp.float32),
+            jax.ShapeDtypeStruct((Q,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bQ,), jnp.float32),
+            pltpu.VMEM((bQ,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, cand_ids.astype(jnp.int32), store)
     return val, idx

@@ -165,6 +165,8 @@ def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
             if v is not None:
                 result[attr] = int(v)
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+            cost = cost[0] if cost else {}
         print({k: v for k, v in cost.items() if k in ("flops", "bytes accessed")})
         # XLA counts while bodies once; keep raw numbers for reference but
         # use the trip-count-aware walk (hlo_analysis) for the roofline.

@@ -116,6 +116,90 @@ class ReplicaEngine:
         return ServeResult(req.request_id, result, None, sim,
                            time.perf_counter() - t0, self.replica_id)
 
+    def handle_batch(self, reqs: List[ServeRequest],
+                     now: Optional[float] = None) -> List[ServeResult]:
+        """Batched ``handle``: one LSH hash dispatch + one semantic-reuse
+        query per service for the whole batch.
+
+        Stage order per request matches the scalar path (CS -> aggregation ->
+        EN reuse -> execute), with within-batch PIT aggregation resolved
+        synchronously: followers of an identical in-flight name receive the
+        leader's executed result.  Misses are executed in one ``execute_fn``
+        call per service and bulk-inserted.
+        """
+        t0 = time.perf_counter() if now is None else now
+        if not reqs:
+            return []
+        embs = normalize(np.stack(
+            [np.asarray(r.embedding, np.float32).reshape(-1) for r in reqs]))
+        buckets = np.asarray(self.lsh.hash_batch(embs))  # (B, T)
+        names = [make_task_name(r.service, b, self.params.index_size_bytes)
+                 for r, b in zip(reqs, buckets)]
+        results: List[Optional[ServeResult]] = [None] * len(reqs)
+
+        def _done(i: int, result: Any, reuse: Optional[str], sim: float):
+            results[i] = ServeResult(reqs[i].request_id, result, reuse, sim,
+                                     time.perf_counter() - t0, self.replica_id)
+
+        # --- CS hits + within-batch coalescing
+        leaders: Dict[str, int] = {}
+        followers: Dict[int, int] = {}  # follower index -> leader index
+        pending: List[int] = []
+        for i, name in enumerate(names):
+            hit = self.cs.lookup(name, t0)
+            if hit is not None:
+                self.stats["cs"] += 1
+                _done(i, hit.content, "cs", 1.0)
+                continue
+            if name in leaders:
+                self.stats["aggregated"] += 1
+                followers[i] = leaders[name]
+                continue
+            leaders[name] = i
+            pending.append(i)
+
+        # --- one batched semantic-reuse query per service
+        by_service: Dict[str, List[int]] = {}
+        for i in pending:
+            by_service.setdefault(reqs[i].service, []).append(i)
+        missed: Dict[str, List[int]] = {}
+        for service, idxs in by_service.items():
+            store = self._store(service)
+            out = store.query_batch(
+                embs[idxs], np.asarray([reqs[i].threshold for i in idxs],
+                                       np.float32))
+            for i, (result, sim, idx) in zip(idxs, out):
+                if idx is not None:
+                    self.stats["en"] += 1
+                    self.cs.insert(Data(names[i], content=result), t0)
+                    _done(i, result, "en", sim)
+                else:
+                    missed.setdefault(service, []).append(i)
+
+        # --- execute misses (one model batch per service) + bulk insert
+        for service, idxs in missed.items():
+            t_exec = time.perf_counter()
+            outs = self.execute_fn([reqs[i] for i in idxs])
+            exec_time = time.perf_counter() - t_exec
+            store = self._store(service)
+            store.insert_batch(embs[idxs], outs)
+            # amortized per-request time, matching the scalar path's
+            # batch-of-1 observations (maybe_backup compares a *single*
+            # request's elapsed time against this EWMA)
+            self.ttc.observe(service, exec_time / len(idxs))
+            for i, result in zip(idxs, outs):
+                self.cs.insert(Data(names[i], content=result), t0)
+                self.stats["executed"] += 1
+                _done(i, result, None, -1.0)
+
+        # --- resolve within-batch aggregated followers: identical task name
+        # == exact reuse, and the leader (executed or en-hit) has inserted the
+        # name into the CS by now, so the scalar-equivalent re-handle is
+        # always a CS hit at sim 1.0
+        for i, leader in followers.items():
+            _done(i, results[leader].result, "cs", 1.0)
+        return results
+
 
 class ReuseRouter:
     """rFIB-equivalent: consecutive LSH bucket ranges -> replica ids."""
@@ -151,6 +235,22 @@ class ReuseRouter:
             votes[o] = votes.get(o, 0) + 1
         return max(votes.items(), key=lambda kv: (kv[1], -kv[0]))[0], buckets
 
+    def route_batch(self, embeddings: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Vectorized ``route``: one hash dispatch, (B,) owners + (B, T) buckets.
+
+        Owner lookup is a searchsorted over the consecutive range bounds; the
+        majority vote is a one-hot count with ties broken toward the smallest
+        replica id (same as the scalar path).
+        """
+        embs = normalize(np.atleast_2d(np.asarray(embeddings, np.float32)))
+        buckets = np.asarray(self.lsh.hash_batch(embs))            # (B, T)
+        bounds = np.asarray(self._bounds[1:-1])
+        owners = np.searchsorted(bounds, buckets, side="right")    # (B, T)
+        owners = np.minimum(owners, self.n_replicas - 1)
+        votes = (owners[:, :, None] == np.arange(self.n_replicas)[None, None, :]
+                 ).sum(axis=1)                                     # (B, R)
+        return votes.argmax(axis=1), buckets
+
 
 class ServingFleet:
     """Router + replicas + straggler mitigation (backup requests)."""
@@ -170,6 +270,22 @@ class ServingFleet:
         if (req.deadline_s is not None and res is None):
             pass  # unreachable in sync mode; async engines use BackupPolicy
         return res
+
+    def submit_batch(self, reqs: List[ServeRequest]) -> List[ServeResult]:
+        """Route a whole batch (one hash dispatch), then one ``handle_batch``
+        per replica; results come back in submission order."""
+        if not reqs:
+            return []
+        owners, _ = self.router.route_batch(
+            np.stack([np.asarray(r.embedding, np.float32).reshape(-1)
+                      for r in reqs]))
+        results: List[Optional[ServeResult]] = [None] * len(reqs)
+        for rid in sorted(set(int(o) for o in owners)):
+            idxs = [i for i, o in enumerate(owners) if int(o) == rid]
+            for i, res in zip(idxs, self.replicas[rid].handle_batch(
+                    [reqs[i] for i in idxs])):
+                results[i] = res
+        return results
 
     def maybe_backup(self, elapsed_s: float, service: str, primary: int,
                      backups_sent: int = 0) -> Optional[int]:

@@ -26,7 +26,11 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional dep: fall back to stdlib zlib compression
+    zstandard = None
 
 SHARD_BYTES = 256 * 1024 * 1024
 
@@ -62,11 +66,15 @@ def save(tree, directory: str, step: int, keep: int = 3) -> str:
         if not buf:
             return
         raw = b"".join(buf)
-        comp = zstandard.ZstdCompressor(level=3).compress(raw)
-        fname = f"shard-{shard_idx:03d}.bin.zst"
+        if zstandard is not None:
+            comp, codec = zstandard.ZstdCompressor(level=3).compress(raw), "zst"
+        else:
+            comp, codec = zlib.compress(raw, 6), "zlib"
+        fname = f"shard-{shard_idx:03d}.bin.{codec}"
         with open(os.path.join(tmp, fname), "wb") as f:
             f.write(comp)
         manifest["shards"].append({"file": fname, "raw_bytes": len(raw),
+                                   "codec": codec,
                                    "crc": zlib.crc32(raw) & 0xFFFFFFFF})
         shard_idx += 1
         buf, buf_names = [], []
@@ -142,8 +150,15 @@ def restore(directory: str, target_tree, step: Optional[int] = None,
     shards: Dict[int, bytes] = {}
     for i, sh in enumerate(manifest["shards"]):
         with open(os.path.join(ckpt, sh["file"]), "rb") as f:
+            blob = f.read()
+        if sh.get("codec", "zst") == "zst":
+            if zstandard is None:
+                raise ImportError(
+                    "checkpoint was written with zstandard, which is not installed")
             raw = zstandard.ZstdDecompressor().decompress(
-                f.read(), max_output_size=sh["raw_bytes"])
+                blob, max_output_size=sh["raw_bytes"])
+        else:
+            raw = zlib.decompress(blob)
         if (zlib.crc32(raw) & 0xFFFFFFFF) != sh["crc"]:
             raise IOError(f"checkpoint shard {sh['file']} failed integrity check")
         shards[i] = raw

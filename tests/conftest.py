@@ -1,0 +1,45 @@
+"""Shared test configuration.
+
+``hypothesis`` is an optional dependency: several test modules import it at
+module scope for property tests.  On environments without it, installing a
+minimal stand-in here (conftest is imported before collection) keeps the rest
+of the suite runnable — only ``@given``-decorated tests are skipped.
+"""
+from __future__ import annotations
+
+import sys
+import types
+
+try:  # pragma: no cover - exercised implicitly by the import below
+    import hypothesis  # noqa: F401
+except ImportError:
+    import pytest
+
+    def _given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def _settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def _strategy(*_args, **_kwargs):
+        return None
+
+    _st = types.ModuleType("hypothesis.strategies")
+    for _name in (
+        "integers", "floats", "booleans", "text", "lists", "tuples",
+        "sampled_from", "composite", "just", "one_of", "none",
+    ):
+        setattr(_st, _name, _strategy)
+
+    _mod = types.ModuleType("hypothesis")
+    _mod.given = _given
+    _mod.settings = _settings
+    _mod.strategies = _st
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _st

@@ -12,7 +12,7 @@ from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.lsh_hash import lsh_hash
-from repro.kernels.sim_topk import sim_top1
+from repro.kernels.sim_topk import gather_top1, sim_top1
 
 RNG = np.random.default_rng(42)
 
@@ -89,6 +89,56 @@ class TestSimTop1:
         v2, i2 = sim_top1(q, s, block_q=32, block_n=512)
         np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-6)
         assert (np.asarray(i1) == np.asarray(i2)).all()
+
+
+# ------------------------------------------------------------- gather_top1
+class TestGatherTop1:
+    def _unit(self, *shape):
+        x = randn(*shape)
+        return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+    @pytest.mark.parametrize("Q,N,C,D", [(8, 64, 16, 32), (33, 1000, 200, 64),
+                                         (128, 4096, 700, 128), (5, 50, 7, 256)])
+    def test_matches_ref(self, Q, N, C, D):
+        q = self._unit(Q, D)
+        s = self._unit(N, D)
+        ids = jnp.asarray(RNG.integers(-1, N, (Q, C)), jnp.int32)
+        val, idx = ops.gathered_top1(q, s, ids)
+        wv, wi = ref.gather_top1_ref(q, s, ids)
+        fin = np.isfinite(np.asarray(wv))
+        np.testing.assert_allclose(np.asarray(val)[fin], np.asarray(wv)[fin],
+                                   atol=1e-5)
+        assert (np.asarray(idx) == np.asarray(wi)).all()
+
+    def test_no_candidates_row(self):
+        q, s = self._unit(4, 32), self._unit(64, 32)
+        ids = jnp.full((4, 10), -1, jnp.int32)
+        val, idx = ops.gathered_top1(q, s, ids)
+        assert (np.asarray(idx) == -1).all()
+        assert np.isneginf(np.asarray(val)).all()
+
+    def test_empty_store(self):
+        q = self._unit(3, 32)
+        val, idx = ops.gathered_top1(q, jnp.zeros((0, 32), jnp.float32),
+                                     jnp.zeros((3, 4), jnp.int32))
+        assert (np.asarray(idx) == -1).all()
+
+    def test_block_invariance(self):
+        q, s = self._unit(40, 64), self._unit(500, 64)
+        ids = jnp.asarray(RNG.integers(-1, 500, (40, 130)), jnp.int32)
+        v1, i1 = gather_top1(q, s, ids, block_q=8, block_c=32)
+        v2, i2 = gather_top1(q, s, ids, block_q=64, block_c=256)
+        np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-6)
+        assert (np.asarray(i1) == np.asarray(i2)).all()
+
+    def test_agrees_with_sim_top1_when_all_candidates(self):
+        """Full candidate list == brute-force streaming top-1."""
+        q, s = self._unit(16, 64), self._unit(256, 64)
+        ids = jnp.broadcast_to(jnp.arange(256, dtype=jnp.int32), (16, 256))
+        gv, gi = ops.gathered_top1(q, s, ids)
+        bv, bi = ops.nearest_neighbor(q, s)
+        np.testing.assert_allclose(np.asarray(gv), np.asarray(bv), atol=1e-5)
+        assert (np.asarray(gi) == np.asarray(bi)).all()
 
 
 # --------------------------------------------------------- flash attention

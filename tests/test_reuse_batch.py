@@ -1,0 +1,292 @@
+"""Batched reuse pipeline: array-native tables, query_batch, batch windows.
+
+Covers ISSUE 1's tentpole guarantees: batched-vs-scalar parity (same hit/miss
+decisions, same similarities), LRU eviction keeping the bucket arrays
+consistent, ring-buffer bucket overflow, and the batch paths threaded through
+EdgeNode / ReservoirNetwork / serving.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Interest,
+    LSHParams,
+    ReservoirNetwork,
+    ReuseStore,
+    Service,
+    get_lsh,
+    make_task_name,
+    normalize,
+)
+from repro.core.edge_node import EdgeNode
+from repro.core.topology import testbed_topology as _testbed
+
+P = LSHParams(dim=32, num_tables=3, num_probes=6, seed=5)
+
+
+def _vecs(n, seed=0, d=32):
+    return normalize(np.random.default_rng(seed).standard_normal((n, d)))
+
+
+def _filled_store(n=200, capacity=256, seed=1, **kw):
+    store = ReuseStore(P, capacity=capacity, **kw)
+    X = _vecs(n, seed=seed)
+    store.insert_batch(X, [f"r{i}" for i in range(n)])
+    return store, X
+
+
+class TestBatchScalarParity:
+    def _queries(self, X, noise, seed=2):
+        rng = np.random.default_rng(seed)
+        return normalize(X + noise * rng.standard_normal(X.shape) / np.sqrt(X.shape[1]))
+
+    @pytest.mark.parametrize("noise", [0.02, 0.3, 1.5])
+    def test_same_hits_and_similarities(self, noise):
+        store, X = _filled_store(150)
+        q = self._queries(X[:64], noise)
+        scal = [store.query(v, 0.9) for v in q]
+        bat = store.query_batch(q, 0.9)
+        for (rs, ss, is_), (rb, sb, ib) in zip(scal, bat):
+            assert (is_ is None) == (ib is None)          # same hit/miss
+            assert abs(ss - sb) < 1e-5                    # same similarity
+            if is_ is not None:
+                assert is_ == ib and rs == rb
+
+    def test_per_query_thresholds(self):
+        store, X = _filled_store(100)
+        q = self._queries(X[:10], 0.25)
+        thrs = np.linspace(0.0, 1.0, 10).astype(np.float32)
+        bat = store.query_batch(q, thrs)
+        for t, v, (r, sim, idx) in zip(thrs, q, bat):
+            rs, ss, is_ = store.query(v, float(t))
+            assert (is_ is None) == (idx is None)
+            assert abs(ss - sim) < 1e-5
+
+    def test_non_cosine_similarity_parity(self):
+        store = ReuseStore(P, capacity=256, similarity="structural")
+        X = _vecs(100, seed=21)
+        store.insert_batch(X, list(range(100)))
+        q = self._queries(X[:32], 0.1, seed=22)
+        for v, (r, sim, idx) in zip(q, store.query_batch(q, 0.95)):
+            rs, ss, is_ = store.query(v, 0.95)
+            assert (is_ is None) == (idx is None) and abs(ss - sim) < 1e-6
+
+    def test_candidate_count_stats_parity(self):
+        store, X = _filled_store(120)
+        q = self._queries(X[:16], 0.1, seed=23)
+        for v in q:
+            store.query(v, 0.9)
+        scalar_counts = store.candidate_counts[-16:]
+        store.query_batch(q, 0.9)
+        assert store.candidate_counts[-16:] == scalar_counts
+
+    def test_empty_store_all_miss(self):
+        store = ReuseStore(P, capacity=16)
+        out = store.query_batch(_vecs(5), 0.5)
+        assert out == [(None, -1.0, None)] * 5
+
+    def test_batch_refreshes_lru(self):
+        store, X = _filled_store(20, capacity=32)
+        oldest = store.live_ids()[0]
+        store.query_batch(store.embedding_of(oldest)[None], 0.99)
+        assert store.live_ids()[-1] == oldest  # hit moved to MRU position
+
+
+class TestEvictionConsistency:
+    def test_evicted_slots_never_candidates(self):
+        store = ReuseStore(P, capacity=16)
+        rng = np.random.default_rng(3)
+        X = normalize(rng.standard_normal((128, 32)))
+        for i, v in enumerate(X):
+            store.insert(v, i)
+            live = set(store.live_ids())
+            in_tables = set(store._slots[store._slots >= 0].tolist())
+            assert in_tables <= live
+        assert len(store) == 16
+
+    def test_evicted_never_returned_by_query_batch(self):
+        store = ReuseStore(P, capacity=8)
+        X = _vecs(64, seed=4)
+        store.insert_batch(X, list(range(64)))
+        live = set(store.live_ids())
+        out = store.query_batch(X, -1.0)  # threshold -1: any candidate hits
+        for r, sim, idx in out:
+            assert idx is None or idx in live
+
+    def test_fill_counts_match_slots(self):
+        store = ReuseStore(P, capacity=32)
+        for i, v in enumerate(_vecs(100, seed=5)):
+            store.insert(v, i)
+        valid = (store._slots >= 0).sum(axis=2)
+        assert (valid == store._fill).all()
+
+
+class TestBucketOverflow:
+    def test_ring_overflow_keeps_store_consistent(self):
+        store = ReuseStore(P, capacity=512, bucket_cap=2)
+        X = _vecs(200, seed=6)
+        store.insert_batch(X, list(range(200)))
+        assert store.overflows > 0
+        assert (store._fill <= store.bucket_cap).all()
+        live = set(store.live_ids())
+        assert set(store._slots[store._slots >= 0].tolist()) <= live
+        # displaced items are only unreachable via that one bucket; queries
+        # still return live ids and exact self-queries still mostly hit
+        out = store.query_batch(X[-50:], -1.0)
+        assert all(idx in live for _, _, idx in out if idx is not None)
+        hits = sum(idx is not None for _, _, idx in out)
+        assert hits == 50
+
+    def test_overflowed_eviction_is_silent(self):
+        store = ReuseStore(P, capacity=512, bucket_cap=1)
+        for i, v in enumerate(_vecs(120, seed=7)):
+            store.insert(v, i)
+        # evicting items whose table pointers were displaced must not corrupt
+        store.capacity = 4
+        while len(store) > 4:
+            store._evict_lru()
+        assert (store._fill >= 0).all()
+        assert set(store._slots[store._slots >= 0].tolist()) <= set(store.live_ids())
+
+
+class TestEdgeNodeBatch:
+    def _en(self):
+        en = EdgeNode("/en/test", P, store_capacity=256)
+        en.register(Service("/svc", execute=lambda x: round(float(np.sum(x)), 4),
+                            exec_time_s=0.05, input_dim=32))
+        return en
+
+    def _task(self, v, thr=0.9):
+        buckets = get_lsh(P).hash_one(normalize(v))
+        return Interest(make_task_name("/svc", buckets, P.index_size_bytes),
+                        app_params={"input": normalize(v), "threshold": thr})
+
+    def test_batch_executes_then_reuses(self):
+        en = self._en()
+        X = _vecs(16, seed=8)
+        out1 = en.handle_task_batch([self._task(v) for v in X])
+        assert all(not o.reused for o in out1)
+        out2 = en.handle_task_batch([self._task(v) for v in X])
+        assert all(o.reused and o.exec_time_s == 0.0 for o in out2)
+        for a, b in zip(out1, out2):
+            assert a.data.content == b.data.content
+
+    def test_batch_matches_scalar_handling(self):
+        en_s, en_b = self._en(), self._en()
+        X = _vecs(24, seed=9)
+        for v in X[:12]:
+            en_s.handle_task(self._task(v))
+        en_b.handle_task_batch([self._task(v) for v in X[:12]])
+        rng = np.random.default_rng(10)
+        q = normalize(X[:12] + 0.02 * rng.standard_normal((12, 32)) / np.sqrt(32))
+        outs_s = [en_s.handle_task(self._task(v)) for v in q]
+        outs_b = en_b.handle_task_batch([self._task(v) for v in q])
+        for a, b in zip(outs_s, outs_b):
+            assert a.reused == b.reused
+            if a.reused:
+                assert abs(a.similarity - b.similarity) < 1e-5
+
+    def test_unknown_service_raises(self):
+        en = self._en()
+        bad = Interest("/other/task/00", app_params={"input": _vecs(1)[0]})
+        with pytest.raises(KeyError):
+            en.handle_task_batch([bad])
+
+
+class TestNetworkBatchWindow:
+    def _run(self, window, n=120, threshold=0.9):
+        g, ens = _testbed()
+        net = ReservoirNetwork(g, ens, P, seed=0, en_batch_window_s=window,
+                               cs_capacity=0, user_cs_capacity=0)
+        net.register_service(Service("/svc", execute=lambda x: float(np.sum(x) > 0),
+                                     exec_time_s=(0.07, 0.1), input_dim=32))
+        net.add_user("u1", "fwd1")
+        net.add_user("u2", "fwd2")
+        rng = np.random.default_rng(11)
+        base = _vecs(12, seed=12)
+        t = 0.0
+        for i in range(n):
+            x = normalize(base[i % 12] + 0.05 * rng.standard_normal(32) / np.sqrt(32))
+            net.submit_task("u1" if i % 2 else "u2", "/svc", x, threshold, at_time=t)
+            t += 0.01
+        net.run()
+        return net
+
+    def test_all_complete_with_window(self):
+        net = self._run(window=0.02)
+        assert all(r.t_complete >= 0 for r in net.metrics.records)
+
+    def test_en_reuse_happens_under_window(self):
+        net = self._run(window=0.02)
+        assert net.metrics.reuse_fraction("en") > 0.3
+
+    def test_window_comparable_to_scalar(self):
+        scalar = self._run(window=0.0)
+        batched = self._run(window=0.02)
+        rs, rb = (n.metrics.reuse_fraction("en") for n in (scalar, batched))
+        assert abs(rs - rb) < 0.35
+        assert batched.metrics.accuracy() > 0.9
+
+
+class TestServingBatch:
+    def test_submit_batch_roundtrip(self):
+        from repro.serving import ReplicaEngine, ServeRequest, ServingFleet
+
+        def execute(reqs):
+            return [f"res-{r.request_id}" for r in reqs]
+
+        fleet = ServingFleet(P, [ReplicaEngine(i, P, execute) for i in range(2)])
+        rng = np.random.default_rng(13)
+        base = _vecs(6, seed=14)
+        reqs = [ServeRequest(i, "svc", normalize(
+            base[i % 6] + 0.03 * rng.standard_normal(32) / np.sqrt(32)),
+            threshold=0.9) for i in range(48)]
+        out = fleet.submit_batch(reqs)
+        assert [r.request_id for r in out] == list(range(48))
+        s = fleet.stats()
+        assert s["cs"] + s["en"] + s["executed"] + s["aggregated"] == 48
+        out2 = fleet.submit_batch(reqs)
+        assert all(r.reuse is not None for r in out2)
+
+    def test_within_batch_follower_is_exact_cs_reuse(self):
+        from repro.serving import ReplicaEngine, ServeRequest
+
+        eng = ReplicaEngine(0, P, lambda rs: [f"r{r.request_id}" for r in rs])
+        v = _vecs(1, seed=16)[0]
+        out = eng.handle_batch([ServeRequest(0, "svc", v),
+                                ServeRequest(1, "svc", v)])
+        assert out[0].reuse is None                      # leader executed
+        assert out[1].reuse == "cs" and out[1].similarity == 1.0
+        assert out[1].result == out[0].result
+        # follower of an EN-hit leader: also exact CS reuse at sim 1.0
+        rng = np.random.default_rng(17)
+        near = normalize(v + 0.02 * rng.standard_normal(32) / np.sqrt(32))
+        out2 = eng.handle_batch([ServeRequest(2, "svc", near),
+                                 ServeRequest(3, "svc", near)])
+        if out2[0].reuse == "en":
+            assert out2[1].reuse == "cs" and out2[1].similarity == 1.0
+
+    def test_batch_ttc_observation_amortized(self):
+        import time as _time
+        from repro.serving import ReplicaEngine, ServeRequest
+
+        def slow_execute(rs):
+            _time.sleep(0.01 * len(rs))  # per-item cost model
+            return [f"r{r.request_id}" for r in rs]
+
+        eng = ReplicaEngine(0, P, slow_execute)
+        X = _vecs(16, seed=18)
+        eng.handle_batch([ServeRequest(i, "svc", X[i], threshold=1.1)
+                          for i in range(16)])
+        # EWMA must reflect per-request time (~10ms), not the batch (~160ms)
+        assert eng.ttc.estimate("svc") < 0.05
+
+    def test_route_batch_matches_scalar(self):
+        from repro.serving import ReuseRouter
+
+        router = ReuseRouter(P, n_replicas=5)
+        embs = _vecs(128, seed=15)
+        scal = np.asarray([router.route(e)[0] for e in embs])
+        bat, buckets = router.route_batch(embs)
+        assert (scal == bat).all()
+        assert buckets.shape == (128, P.num_tables)

@@ -149,9 +149,13 @@ class TestCheckpoint:
                                           np.asarray(b, np.float32))
 
     def test_corruption_detected(self, tmp_path):
+        import json
+
         tree = {"a": jnp.arange(1024, dtype=jnp.float32)}
         path = save(tree, str(tmp_path), step=1)
-        shard = os.path.join(path, "shard-000.bin.zst")
+        with open(os.path.join(path, "manifest.json")) as f:
+            shard_file = json.load(f)["shards"][0]["file"]
+        shard = os.path.join(path, shard_file)
         raw = open(shard, "rb").read()
         with open(shard, "wb") as f:  # flip bytes in the compressed payload
             f.write(raw[:50] + bytes([raw[50] ^ 0xFF]) + raw[51:])
