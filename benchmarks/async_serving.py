@@ -1,0 +1,144 @@
+"""Async serving sweep: offered load x batch window x straggler rate.
+
+Drives the event-driven ``AsyncServingEngine`` on its virtual clock with
+Poisson arrivals and measures, per configuration:
+
+  * wall-clock processing throughput (requests / wall second — the batching
+    win: one ``query_batch`` + one model batch per flush window), and
+  * virtual-clock latency vs the per-request deadline (p99, miss fraction)
+    with TTC-driven straggler re-dispatch repairing the injected tail.
+
+The ``sync/submit_loop`` baseline runs the same trace one blocking
+``ServingFleet.submit`` at a time (batches of 1 through the same pipeline).
+Acceptance (ISSUE 2): async throughput >= the sync submit loop at batch
+window >= 8 on the same trace.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core.lsh import LSHParams, normalize
+from repro.serving import AsyncServingEngine, ReplicaEngine, ServeRequest, ServingFleet
+from repro.training.elastic import BackupPolicy
+
+DIM = 32
+N_REQUESTS = 600
+N_REPLICAS = 3
+DEADLINE_S = 0.25
+BASE_EXEC_S = 0.08          # per-request execution cost (paper: 70-100 ms)
+STRAGGLER_FACTOR = 8.0      # a straggling dispatch takes 8x the base time
+LOADS_HZ = (200.0, 1000.0)
+BATCH_SIZES = (1, 8, 32)
+STRAGGLER_RATES = (0.0, 0.1)
+
+
+def _max_wait_s(max_batch: int, load_hz: float) -> float:
+    """Flush window sized to actually gather ~max_batch arrivals at the
+    offered load, capped at a quarter of the deadline budget."""
+    if max_batch == 1:
+        return 0.001
+    return min(DEADLINE_S / 4, max_batch / load_hz)
+
+
+def _trace(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    base = normalize(rng.standard_normal((24, DIM)).astype(np.float32))
+    embs = normalize(base[rng.integers(0, 24, n)]
+                     + 0.04 * rng.standard_normal((n, DIM)).astype(np.float32)
+                     / np.sqrt(DIM))
+    return [ServeRequest(i, "svc", embs[i], threshold=0.9,
+                         deadline_s=DEADLINE_S) for i in range(n)]
+
+
+def _execute(reqs):
+    return [round(float(np.sum(np.asarray(r.embedding))), 5) for r in reqs]
+
+
+def _exec_time_fn(straggler_rate: float, seed: int):
+    rng = np.random.default_rng(seed)
+
+    def fn(rid, service, reqs):
+        per_req = BASE_EXEC_S * (1 + 0.2 * rng.random())
+        if straggler_rate > 0 and rng.random() < straggler_rate:
+            per_req *= STRAGGLER_FACTOR
+        # sub-linear batch scaling: the model batch amortizes
+        return per_req * max(1.0, len(reqs)) ** 0.5
+
+    return fn
+
+
+def _replicas(params):
+    """Warm fleet: replicas carry TTC statistics (production steady state),
+    so straggler backup timers are armed from the first dispatch."""
+    reps = [ReplicaEngine(i, params, _execute) for i in range(N_REPLICAS)]
+    for r in reps:
+        r.ttc.observe("svc", BASE_EXEC_S)
+    return reps
+
+
+N_REPS = 3  # best-of wall times: the box is noisy, virtual metrics are
+            # deterministic per seed, so only the wall measure needs reps
+
+
+def run() -> list:
+    rows: list[Row] = []
+    params = LSHParams(dim=DIM, num_tables=5, num_probes=8, seed=7)
+    reqs = _trace(N_REQUESTS)
+
+    # --- sync baseline: one blocking submit per request (batches of 1)
+    sync_wall = float("inf")
+    for _ in range(N_REPS):
+        fleet = ServingFleet(params, _replicas(params))
+        fleet.engine.exec_time_fn = _exec_time_fn(0.0, seed=1)
+        t0 = time.perf_counter()
+        for r in reqs:
+            fleet.submit(r)
+        sync_wall = min(sync_wall, time.perf_counter() - t0)
+    sync_tput = N_REQUESTS / sync_wall
+    rows.append(("async_serving/sync/submit_loop", sync_wall / N_REQUESTS * 1e6,
+                 f"best-of-{N_REPS}, throughput={sync_tput:.0f}req/s_wall"))
+
+    # --- async sweep
+    for load in LOADS_HZ:
+        for max_batch in BATCH_SIZES:
+            for srate in STRAGGLER_RATES:
+                wall = float("inf")
+                for _ in range(N_REPS):
+                    eng = AsyncServingEngine(
+                        params, _replicas(params),
+                        backup=BackupPolicy(factor=1.5, max_backups=1),
+                        max_batch=max_batch,
+                        max_wait_s=_max_wait_s(max_batch, load),
+                        exec_time_fn=_exec_time_fn(srate, seed=2))
+                    rng = np.random.default_rng(3)
+                    arrivals = np.cumsum(
+                        rng.exponential(1.0 / load, N_REQUESTS))
+                    futs = [eng.submit_at(t, r)
+                            for t, r in zip(arrivals, reqs)]
+                    t0 = time.perf_counter()
+                    makespan = eng.drain()
+                    wall = min(wall, time.perf_counter() - t0)
+                lats = np.asarray([f.result.latency_s for f in futs])
+                miss = float(np.mean(lats > DEADLINE_S))
+                p99 = float(np.percentile(lats, 99))
+                s = eng.stats()
+                tput = N_REQUESTS / wall
+                rows.append((
+                    f"async_serving/load{load:.0f}/batch{max_batch}/strag{srate}",
+                    wall / N_REQUESTS * 1e6,
+                    f"best-of-{N_REPS}, throughput={tput:.0f}req/s_wall;"
+                    f"speedup_vs_sync={tput / sync_tput:.2f}x;"
+                    f"makespan_s={makespan:.2f};"
+                    f"p99_ms={p99 * 1e3:.1f};deadline_miss_pct={miss * 100:.1f};"
+                    f"backups={s['backups']};backup_wins={s['backup_wins']};"
+                    f"executed={s['executed']};en={s['en']};cs={s['cs']};"
+                    f"aggregated={s['aggregated']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.2f},{derived}")

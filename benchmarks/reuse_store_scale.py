@@ -45,6 +45,32 @@ def _make_store(n_store: int, seed: int = 0) -> ReuseStore:
     return store, X
 
 
+def _insert_rows(n_reps: int = 5) -> list:
+    """Insert-side sweep: per-item ``insert`` loop vs the grouped-scatter
+    ``insert_batch`` (one hash dispatch + one (table, bucket) scatter)."""
+    rows: list[Row] = []
+    p = LSHParams(dim=DIM, num_tables=5, num_probes=8, num_buckets=16384,
+                  family="hyperplane", seed=11)
+    rng = np.random.default_rng(2)
+    for n_items in (1024, 8192):
+        X = normalize(rng.standard_normal((n_items, DIM)).astype(np.float32))
+        res = list(range(n_items))
+        best_scalar = best_batch = float("inf")
+        for _ in range(n_reps):
+            s1 = ReuseStore(p, capacity=n_items + 1)
+            best_scalar = min(best_scalar, _time_us(
+                lambda: [s1.insert(v, r) for v, r in zip(X, res)]))
+            s2 = ReuseStore(p, capacity=n_items + 1)
+            best_batch = min(best_batch, _time_us(
+                lambda: s2.insert_batch(X, res)))
+        us_s, us_b = best_scalar / n_items, best_batch / n_items
+        rows.append((f"reuse_scale/insert_scalar/n{n_items}", us_s,
+                     f"per-item best-of-{n_reps}, hash_one+_table_add loop"))
+        rows.append((f"reuse_scale/insert_batch/n{n_items}", us_b,
+                     f"per-item best-of-{n_reps}, speedup {us_s / us_b:.1f}x"))
+    return rows
+
+
 def run(n_reps: int = 7) -> list:
     rows: list[Row] = []
     rng = np.random.default_rng(1)
@@ -77,6 +103,7 @@ def run(n_reps: int = 7) -> list:
             us = best_batch[b] / b
             rows.append((f"reuse_scale/batch{b}/store{n_store}", us,
                          f"per-task best-of-{n_reps}, speedup {us_scalar / us:.1f}x"))
+    rows.extend(_insert_rows())
     return rows
 
 

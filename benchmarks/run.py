@@ -25,6 +25,7 @@ BENCHES = (
     "serving_reuse",      # beyond-paper: reuse-aware LM serving
     "multiprobe",         # beyond-paper: probe depth vs recall vs cost
     "reuse_store_scale",  # beyond-paper: batched vs scalar reuse pipeline
+    "async_serving",      # beyond-paper: event-driven serving core sweep
     "roofline",           # §Roofline (reads dry-run artifacts)
 )
 

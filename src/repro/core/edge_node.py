@@ -59,6 +59,10 @@ class TTCEstimator:
         prev = self.ewma.get(service, exec_time)
         self.ewma[service] = (1 - self.alpha) * prev + self.alpha * exec_time
 
+    def informed(self, service: str) -> bool:
+        """True once real executions back the estimate (vs the prior)."""
+        return service in self.ewma
+
     def estimate(self, service: str, queue_len: int = 0) -> float:
         base = self.ewma.get(service, self.initial)
         return base * (1 + queue_len)

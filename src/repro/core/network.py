@@ -21,7 +21,6 @@ The simulator supports two modes:
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import itertools
 import random
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -35,6 +34,7 @@ from .lsh import LSHParams, get_lsh, normalize
 from .namespace import make_task_name
 from .packets import Data, Interest
 from .rfib import partition
+from .sim_clock import EventLoop, Timer
 
 APP_FACE = 0  # face id reserved for the local application on every node
 
@@ -190,9 +190,7 @@ class ReservoirNetwork:
         self.user_link_delay_s = user_link_delay_s
         self.icedge_tag_bits = icedge_tag_bits
         self._rng = random.Random(seed)
-        self._now = 0.0
-        self._events: List[Tuple[float, int, Callable, tuple]] = []
-        self._seq = itertools.count()
+        self.loop = EventLoop()
         self.metrics = Metrics()
         self._task_ids = itertools.count()
         self.services: Dict[str, Service] = {}
@@ -317,19 +315,15 @@ class ReservoirNetwork:
         self.users[user_id] = (node, self.forwarders[node])
 
     # ------------------------------------------------------------ event loop
-    def at(self, t: float, fn: Callable, *args) -> None:
-        heapq.heappush(self._events, (t, next(self._seq), fn, args))
+    @property
+    def _now(self) -> float:
+        return self.loop.now
+
+    def at(self, t: float, fn: Callable, *args) -> Timer:
+        return self.loop.at(t, fn, *args)
 
     def run(self, until: float = float("inf"), max_events: int = 5_000_000) -> float:
-        n = 0
-        while self._events and n < max_events:
-            t, _, fn, args = heapq.heappop(self._events)
-            if t > until:
-                break
-            self._now = t
-            fn(*args)
-            n += 1
-        return self._now
+        return self.loop.run(until, max_events)
 
     def _emit(self, node: Any, actions, now: float) -> None:
         for act in actions:
@@ -544,20 +538,18 @@ class ReservoirNetwork:
     def _oracle_other_en_hit(self, node: Any, svc: str, emb, threshold: float) -> bool:
         """Forwarding-error oracle (Fig. 10): could another EN have reused?
 
-        Pure peek — reads candidates + similarity without touching LRU state.
+        One batched ``query_batch`` peek per other EN — pure read: no LRU
+        refresh, no query/candidate statistics (``peek=True``).
         """
-        from .lsh import normalize as _norm
-
-        q = _norm(np.asarray(emb, np.float32).reshape(-1))
+        q = normalize(np.asarray(emb, np.float32).reshape(-1))[None]
         for other, en in self.edge_nodes.items():
             if other == node:
                 continue
             store = en.stores[svc]
-            cand = store.candidates(q)  # pure peek: touches no stats/LRU
-            if not cand:
+            if not len(store):
                 continue
-            sims = store.similarity(q, store._emb[np.asarray(cand, np.int64)])
-            if float(np.max(sims)) >= threshold:
+            (_, _, idx), = store.query_batch(q, threshold, peek=True)
+            if idx is not None:
                 return True
         return False
 
@@ -655,7 +647,7 @@ class ReservoirNetwork:
 
     # --------------------------------------------------------------- helpers
     def flush_events(self) -> None:
-        self._events.clear()
+        self.loop.clear()
 
 
 def results_match(a: Any, b: Any) -> bool:

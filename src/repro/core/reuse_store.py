@@ -175,12 +175,76 @@ class ReuseStore:
         emb = normalize(np.asarray(embedding, np.float32).reshape(-1))
         return self._insert_hashed(emb, result, self.lsh.hash_one(emb))
 
-    def insert_batch(self, embeddings: np.ndarray, results: Sequence[Any]) -> List[int]:
-        """Bulk insert: one batched LSH hash, then table updates."""
+    def insert_batch(self, embeddings: np.ndarray, results: Sequence[Any],
+                     buckets: Optional[np.ndarray] = None) -> List[int]:
+        """Bulk insert: one batched LSH hash + one grouped table scatter.
+
+        Bucket writes are vectorized per table with a conflict-free grouped
+        scatter: items are stably grouped by destination bucket, each group
+        fills its bucket's free slots front-to-back and ring-overwrites from
+        the bucket cursor beyond ``bucket_cap`` — bit-identical table state
+        (slots, fills, cursors, overflow count) to the scalar insert loop.
+        Falls back to the scalar loop whenever the insert would evict:
+        scalar evictions interleave with inserts (each insert reuses the
+        slot it just freed), an order the grouped scatter cannot reproduce,
+        and parity with the scalar path outranks speed at capacity.
+
+        ``buckets``: precomputed (N, T) LSH buckets for these embeddings
+        (e.g. from naming at admission) — skips the second hash dispatch.
+        """
         embs = normalize(np.atleast_2d(np.asarray(embeddings, np.float32)))
-        buckets = np.asarray(self.lsh.hash_batch(embs))  # (N, T)
-        return [self._insert_hashed(emb, res, bks)
-                for emb, res, bks in zip(embs, results, buckets)]
+        if buckets is None:
+            buckets = np.asarray(self.lsh.hash_batch(embs))  # (N, T)
+        else:
+            buckets = np.asarray(buckets)
+        n = embs.shape[0]
+        if self.capacity > 0 and len(self._lru) + n > self.capacity:
+            return [self._insert_hashed(emb, res, bks)
+                    for emb, res, bks in zip(embs, results, buckets)]
+        ids = np.asarray([self._alloc() for _ in range(n)], np.int32)
+        self._emb[ids] = embs
+        self._emb_version += 1
+        for i, (idx, res) in enumerate(zip(ids, results)):
+            idx = int(idx)
+            self._results[idx] = res
+            self._buckets_of[idx] = buckets[i]
+            self._lru[idx] = None
+        self.inserts += n
+        self._table_add_batch(ids, buckets)
+        return [int(i) for i in ids]
+
+    def _table_add_batch(self, ids: np.ndarray, buckets: np.ndarray) -> None:
+        """Grouped (table, bucket) scatter of ``ids`` into the slot arrays.
+
+        Per table: stable-sort items by bucket, rank them within their
+        group, and write free-slot fills and ring overwrites in one fancy
+        assignment each (duplicate ring positions keep numpy's last-write-
+        wins order == sequential semantics).
+        """
+        cap = self.bucket_cap
+        n = ids.shape[0]
+        rank_base = np.arange(n, dtype=np.int64)
+        for t in range(self.params.num_tables):
+            order = np.argsort(buckets[:, t], kind="stable")
+            bs = buckets[order, t]
+            ids_s = ids[order]
+            uniq, starts, counts = np.unique(
+                bs, return_index=True, return_counts=True)
+            rank = rank_base - np.repeat(starts, counts)
+            fill_g = self._fill[t, uniq].astype(np.int64)
+            cur_g = self._cursor[t, uniq].astype(np.int64)
+            take_g = np.minimum(counts, np.maximum(cap - fill_g, 0))
+            fill_i = np.repeat(fill_g, counts)
+            cur_i = np.repeat(cur_g, counts)
+            take_i = np.repeat(take_g, counts)
+            slot = np.where(rank < take_i, fill_i + rank,
+                            (cur_i + rank - take_i) % cap)
+            self._slots[t, bs, slot] = ids_s
+            self._fill[t, uniq] = fill_g + take_g
+            over_g = counts - take_g
+            self._cursor[t, uniq] = np.where(
+                over_g > 0, (cur_g + over_g) % cap, cur_g)
+            self.overflows += int(over_g.sum())
 
     # ----------------------------------------------------------------- query
     def candidates(self, embedding: np.ndarray) -> List[int]:
@@ -219,6 +283,7 @@ class ReuseStore:
         self,
         embeddings: np.ndarray,
         thresholds: Union[float, Sequence[float], np.ndarray] = 0.0,
+        peek: bool = False,
     ) -> List[Tuple[Optional[Any], float, Optional[int]]]:
         """Batched ``query``: one probe dispatch + one fused gather/score call.
 
@@ -226,18 +291,22 @@ class ReuseStore:
         (result, similarity, idx) triple per query with the same hit/miss
         semantics as the scalar path; every query is scored against the store
         state at call time (a batch cannot reuse results inserted for earlier
-        queries of the same batch).
+        queries of the same batch).  ``peek=True`` is a pure read: no LRU
+        refresh and no query/candidate statistics (the forwarding-error
+        oracle and cross-replica probes must not perturb cache state).
         """
         embs = normalize(np.atleast_2d(np.asarray(embeddings, np.float32)))
         n = embs.shape[0]
-        self.queries += n
+        if not peek:
+            self.queries += n
         thr = np.asarray(thresholds, np.float32)
         if thr.ndim == 0:
             thr = np.full(n, float(thr), np.float32)
         elif thr.shape != (n,):
             raise ValueError("thresholds must be scalar or length-B")
         if not self._lru:
-            self.candidate_counts.extend([0] * n)
+            if not peek:
+                self.candidate_counts.extend([0] * n)
             return [(None, -1.0, None)] * n
         probes = np.asarray(self.lsh.probe_batch(embs))  # (B, T, P)
         cand, counts = self._candidate_matrix(probes)
@@ -250,7 +319,8 @@ class ReuseStore:
         uniq[:, 1:] = srt[:, 1:] != srt[:, :-1]
         uniq &= srt >= 0
         counts = uniq.sum(axis=1).astype(np.int64)
-        self.candidate_counts.extend(int(c) for c in counts)
+        if not peek:
+            self.candidate_counts.extend(int(c) for c in counts)
         if counts.max() == 0:
             return [(None, -1.0, None)] * n
         width = max(int(counts.max()), 1)
@@ -270,7 +340,8 @@ class ReuseStore:
                 out.append((None, sim, None))
                 continue
             j = int(idx[i])
-            self._lru.move_to_end(j)
+            if not peek:
+                self._lru.move_to_end(j)
             out.append((self._results[j], sim, j))
         return out
 
@@ -280,11 +351,14 @@ class ReuseStore:
         """Score the (B, C) candidate matrix -> ((B,) best sim, (B,) best id).
 
         Rows of ``cand`` are ascending unique ids, front-packed, -1 padded.
-        Cosine stores use the fused gather/score kernel; other similarity
-        measures score per query with the configured function (same math as
-        the scalar path, still one probe dispatch for the batch).
+        Cosine stores use the fused gather/score kernel when the gather is
+        big enough to pay for the dispatch (and the lazy device re-upload of
+        a dirty ``_emb``); small workloads — notably single-row oracle peeks
+        — score in numpy like the scalar path.  Other similarity measures
+        always score per query with the configured function.
         """
-        if self.similarity_name == "cosine":
+        work = embs.shape[0] * cand.shape[1]
+        if self.similarity_name == "cosine" and work >= self.use_kernel_threshold:
             from repro.kernels import ops as _kops
 
             if self._emb_dev_version != self._emb_version:

@@ -1,0 +1,140 @@
+"""Virtual-clock event loop shared by the simulator and the serving stack.
+
+Extracted from ``ReservoirNetwork``'s private event heap so the network
+simulator (``core/network.py``) and the async serving engine
+(``serving/async_engine.py``) run on the same scheduling substrate: a
+deterministic discrete-event loop ordered by (time, insertion sequence).
+
+Three primitives:
+
+* ``EventLoop``  — the heap itself: ``at``/``call_later`` schedule callbacks,
+  ``run`` drains events in virtual-time order, ``now`` is the clock.
+* ``Timer``      — handle returned by ``at``: ``cancel()`` makes the event a
+  no-op when it pops (O(1); the heap entry stays until its time comes).
+* ``Future``     — single-assignment result cell with done-callbacks and
+  first-result-wins semantics (``try_set_result`` returns False for losers),
+  the resolution primitive behind PIT follower coalescing and backup
+  re-dispatch (paper §II PIT aggregation, §IV-C TTC-driven stragglers).
+
+Everything is synchronous under the hood — callbacks run inline when their
+event pops — so the loop is deterministic and needs no threads or asyncio.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Any, Callable, List, Optional, Tuple
+
+
+class Timer:
+    """Cancellable handle for one scheduled event."""
+
+    __slots__ = ("when", "cancelled")
+
+    def __init__(self, when: float):
+        self.when = when
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+
+class EventLoop:
+    """Deterministic virtual-clock event loop (min-heap by (t, seq))."""
+
+    def __init__(self, start: float = 0.0):
+        self._now = float(start)
+        self._events: List[Tuple[float, int, Timer, Callable, tuple]] = []
+        self._seq = itertools.count()
+        self.processed = 0
+
+    @property
+    def now(self) -> float:
+        return self._now
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def at(self, t: float, fn: Callable, *args) -> Timer:
+        """Schedule ``fn(*args)`` at virtual time ``t``; returns its Timer."""
+        timer = Timer(t)
+        heapq.heappush(self._events, (t, next(self._seq), timer, fn, args))
+        return timer
+
+    def call_later(self, delay: float, fn: Callable, *args) -> Timer:
+        return self.at(self._now + delay, fn, *args)
+
+    def run(self, until: float = float("inf"),
+            max_events: int = 5_000_000) -> float:
+        """Drain events with t <= ``until`` (in order); returns the clock.
+
+        With a finite horizon the clock advances to ``until`` even when no
+        event lands exactly there (standard DES semantics), so arrivals
+        injected after a partial drain happen *at* the horizon."""
+        n = 0
+        while self._events and n < max_events:
+            t, _, timer, fn, args = self._events[0]
+            if t > until:
+                break
+            heapq.heappop(self._events)
+            if timer.cancelled:
+                continue
+            self._now = t
+            fn(*args)
+            n += 1
+            self.processed += 1
+        if until != float("inf") and n < max_events and self._now < until:
+            self._now = until
+        return self._now
+
+    def clear(self) -> None:
+        self._events.clear()
+
+
+class Future:
+    """Single-assignment result with done-callbacks (virtual-clock flavour).
+
+    ``try_set_result`` implements first-result-wins: the first caller
+    resolves the future and fires the callbacks inline; later callers get
+    ``False`` and must treat their result as redundant (e.g. a backup
+    request finishing after the primary).
+    """
+
+    __slots__ = ("_result", "_done", "_callbacks", "resolved_at")
+
+    def __init__(self):
+        self._result: Any = None
+        self._done = False
+        self._callbacks: List[Callable[["Future"], None]] = []
+        self.resolved_at: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    @property
+    def result(self) -> Any:
+        if not self._done:
+            raise RuntimeError("Future not resolved yet")
+        return self._result
+
+    def try_set_result(self, value: Any, now: Optional[float] = None) -> bool:
+        if self._done:
+            return False
+        self._result = value
+        self._done = True
+        self.resolved_at = now
+        callbacks, self._callbacks = self._callbacks, []
+        for cb in callbacks:
+            cb(self)
+        return True
+
+    def set_result(self, value: Any, now: Optional[float] = None) -> None:
+        if not self.try_set_result(value, now):
+            raise RuntimeError("Future already resolved")
+
+    def add_done_callback(self, fn: Callable[["Future"], None]) -> None:
+        if self._done:
+            fn(self)
+        else:
+            self._callbacks.append(fn)

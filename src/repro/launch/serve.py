@@ -19,7 +19,7 @@ from repro.configs import get_arch
 from repro.core.lsh import LSHParams
 from repro.data import DATASETS, make_stream
 from repro.models import build_model
-from repro.serving import ReplicaEngine, ServeRequest, ServingFleet
+from repro.serving import AsyncServingEngine, ReplicaEngine, ServeRequest, ServingFleet
 
 
 def main() -> None:
@@ -30,6 +30,13 @@ def main() -> None:
     ap.add_argument("--threshold", type=float, default=0.9)
     ap.add_argument("--dataset", default="cctv1", choices=sorted(DATASETS))
     ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--engine", default="sync", choices=("sync", "async"),
+                    help="sync: one submit per request; async: event-driven "
+                         "engine with Poisson arrivals + deadline batching")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="async offered load (requests/s, virtual clock)")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-wait-ms", type=float, default=5.0)
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
@@ -50,32 +57,54 @@ def main() -> None:
         return out
 
     lshp = LSHParams(dim=64, num_tables=5, num_probes=8)
-    fleet = ServingFleet(
-        lshp, [ReplicaEngine(i, lshp, execute) for i in range(args.replicas)])
+    replicas = [ReplicaEngine(i, lshp, execute) for i in range(args.replicas)]
 
     spec = DATASETS[args.dataset]
     X, _ = make_stream(spec, args.requests, seed=0)
-    rng = np.random.default_rng(0)
-    lat = []
-    t_all = time.time()
-    for i, emb in enumerate(X):
+
+    def make_req(i, emb):
         # payload: token prompt derived deterministically from the embedding
         tokens = jnp.asarray(
             (np.abs(emb[: args.seq_len]) * 1e4).astype(np.int64) % cfg.vocab_size,
             jnp.int32)[None, :]
-        req = ServeRequest(i, args.dataset, emb, payload={"tokens": tokens},
-                           threshold=args.threshold)
-        t0 = time.perf_counter()
-        res = fleet.submit(req)
-        lat.append((time.perf_counter() - t0, res.reuse))
-    wall = time.time() - t_all
+        return ServeRequest(i, args.dataset, emb, payload={"tokens": tokens},
+                            threshold=args.threshold)
 
-    stats = fleet.stats()
-    n = len(lat)
+    if args.engine == "async":
+        engine = AsyncServingEngine(
+            lshp, replicas, max_batch=args.max_batch,
+            max_wait_s=args.max_wait_ms * 1e-3)
+        rng = np.random.default_rng(0)
+        arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+        futs = [engine.submit_at(t, make_req(i, emb))
+                for i, (t, emb) in enumerate(zip(arrivals, X))]
+        t_all = time.time()
+        makespan = engine.drain()
+        wall = time.time() - t_all
+        lat = [(f.result.latency_s, f.result.reuse) for f in futs]
+        stats = engine.stats()
+        print(f"\n{len(futs)} requests drained in {wall:.1f}s wall "
+              f"({makespan:.2f}s virtual, offered {args.rate:.0f} req/s, "
+              f"window {args.max_wait_ms:.0f} ms x {args.max_batch})")
+    else:
+        fleet = ServingFleet(lshp, replicas)
+        lat = []
+        t_all = time.time()
+        for i, emb in enumerate(X):
+            req = make_req(i, emb)
+            t0 = time.perf_counter()
+            res = fleet.submit(req)
+            lat.append((time.perf_counter() - t0, res.reuse))
+        wall = time.time() - t_all
+        stats = fleet.stats()
+        print(f"\n{len(lat)} requests in {wall:.1f}s over {args.replicas} replicas")
     by = lambda k: [l for l, r in lat if r == k]  # noqa: E731
-    print(f"\n{n} requests in {wall:.1f}s over {args.replicas} replicas")
     print(f"  reuse: cs={stats['cs']} en={stats['en']} "
           f"executed={stats['executed']} aggregated={stats['aggregated']}")
+    if args.engine == "async":
+        p99 = float(np.percentile([l for l, _ in lat], 99))
+        print(f"  backups={stats['backups']} backup_wins={stats['backup_wins']} "
+              f"dispatches={stats['dispatches']}  p99 latency {p99 * 1e3:.2f} ms")
     for kind in ("cs", "en", None):
         ls = by(kind)
         if ls:

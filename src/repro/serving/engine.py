@@ -52,6 +52,8 @@ class ServeResult:
     similarity: float
     latency_s: float
     replica: int
+    agg_wait_s: float = 0.0        # time spent PIT-aggregated behind a leader
+    backup: bool = False           # resolved by a straggler backup dispatch
 
 
 class ReplicaEngine:
@@ -76,19 +78,92 @@ class ReplicaEngine:
             self.stores[service] = ReuseStore(self.params, capacity=100_000)
         return self.stores[service]
 
+    # -------------------------------------------------- composable stages
+    # The serving pipeline is split into stages shared verbatim by the sync
+    # paths below and by serving.async_engine.AsyncServingEngine: name/CS
+    # resolution, batched EN query, execution, and result commit.  Stages
+    # own the statistics they touch, so sync and async runs of the same
+    # trace produce identical counters.
+
+    def embed_batch(self, reqs: List[ServeRequest]
+                    ) -> Tuple[np.ndarray, List[str], np.ndarray]:
+        """One LSH hash dispatch for the batch -> (embs, names, buckets).
+
+        The (B, T) buckets ride along so a later ``commit_execution`` can
+        insert without re-hashing the same embeddings."""
+        embs = normalize(np.stack(
+            [np.asarray(r.embedding, np.float32).reshape(-1) for r in reqs]))
+        buckets = np.asarray(self.lsh.hash_batch(embs))  # (B, T)
+        names = [make_task_name(r.service, b, self.params.index_size_bytes)
+                 for r, b in zip(reqs, buckets)]
+        return embs, names, buckets
+
+    def name_of(self, service: str, buckets: np.ndarray) -> str:
+        """Task name from pre-computed LSH buckets (router reuse: no rehash)."""
+        return make_task_name(service, buckets, self.params.index_size_bytes)
+
+    def cs_lookup(self, name: str, now: float) -> Optional[Any]:
+        """Stage 1: exact-name Content Store hit (counts the hit)."""
+        hit = self.cs.lookup(name, now)
+        if hit is None:
+            return None
+        self.stats["cs"] += 1
+        return hit.content
+
+    def query_reuse(self, service: str, embs: np.ndarray,
+                    thresholds: np.ndarray) -> List[Tuple[Any, float, Optional[int]]]:
+        """Stage 3: one batched semantic-reuse query for a service group."""
+        return self._store(service).query_batch(embs, thresholds)
+
+    def admit_en_hit(self, name: str, result: Any, now: float) -> None:
+        """Record an EN hit: count it and cache the named result in the CS."""
+        self.stats["en"] += 1
+        self.cs.insert(Data(name, content=result), now)
+
+    def execute_batch(self, reqs: List[ServeRequest]) -> Tuple[List[Any], float]:
+        """Stage 4a: run the model on a miss group -> (results, wall seconds)."""
+        t_exec = time.perf_counter()
+        outs = self.execute_fn(reqs)
+        return outs, time.perf_counter() - t_exec
+
+    def commit_execution(self, service: str, embs: np.ndarray,
+                         names: List[str], outs: List[Any], now: float,
+                         exec_time_s: float,
+                         buckets: Optional[np.ndarray] = None) -> None:
+        """Stage 4b: bulk-insert executed results into the reuse store + CS,
+        update TTC with the amortized per-request time, count executions.
+
+        Split from ``execute_batch`` so the async engine can defer the commit
+        to the (virtual) completion event — and skip it entirely when a
+        backup already resolved the task (no double insert).  ``buckets``
+        reuses the admission-time hash for the store insert."""
+        self._store(service).insert_batch(embs, outs, buckets=buckets)
+        # amortized per-request time, matching the scalar path's batch-of-1
+        # observations (maybe_backup compares a *single* request's elapsed
+        # time against this EWMA)
+        self.ttc.observe(service, exec_time_s / max(len(outs), 1))
+        for name, result in zip(names, outs):
+            self.cs.insert(Data(name, content=result), now)
+            self.stats["executed"] += 1
+
+    # ------------------------------------------------------------ sync paths
     def handle(self, req: ServeRequest, now: Optional[float] = None) -> Optional[ServeResult]:
         """Serve one request; returns None if coalesced behind an identical
-        in-flight task (resolved when the executing request completes)."""
-        t0 = time.perf_counter() if now is None else now
+        in-flight task (resolved when the executing request completes).
+
+        ``now`` sets the Content-Store clock (pass the virtual loop time
+        when the replica is shared with an async engine so freshness
+        decisions come from one clock); latency is always wall-measured."""
+        t0 = time.perf_counter()
+        t_cs = t0 if now is None else now
         emb = normalize(np.asarray(req.embedding, np.float32).reshape(-1))
         buckets = self.lsh.hash_one(emb)
-        name = make_task_name(req.service, buckets, self.params.index_size_bytes)
+        name = self.name_of(req.service, buckets)
 
         # 1. Content Store (exact LSH-name reuse)
-        hit = self.cs.lookup(name, t0)
-        if hit is not None:
-            self.stats["cs"] += 1
-            return ServeResult(req.request_id, hit.content, "cs", 1.0,
+        content = self.cs_lookup(name, t_cs)
+        if content is not None:
+            return ServeResult(req.request_id, content, "cs", 1.0,
                                time.perf_counter() - t0, self.replica_id)
         # 2. PIT-style aggregation of identical in-flight names
         if name in self.inflight:
@@ -99,21 +174,16 @@ class ReplicaEngine:
         store = self._store(req.service)
         result, sim, idx = store.query(emb, req.threshold)
         if idx is not None:
-            self.stats["en"] += 1
-            self.cs.insert(Data(name, content=result), t0)
+            self.admit_en_hit(name, result, t_cs)
             return ServeResult(req.request_id, result, "en", sim,
                                time.perf_counter() - t0, self.replica_id)
         # 4. execute from scratch
         self.inflight[name] = [req]
-        t_exec = time.perf_counter()
-        result = self.execute_fn([req])[0]
-        exec_time = time.perf_counter() - t_exec
-        self.ttc.observe(req.service, exec_time)
-        store.insert(emb, result)
-        self.cs.insert(Data(name, content=result), t0)
-        self.stats["executed"] += 1
+        outs, exec_time = self.execute_batch([req])
+        self.commit_execution(req.service, emb[None], [name], outs, t_cs,
+                              exec_time, buckets=np.asarray(buckets)[None])
         self.inflight.pop(name, None)
-        return ServeResult(req.request_id, result, None, sim,
+        return ServeResult(req.request_id, outs[0], None, sim,
                            time.perf_counter() - t0, self.replica_id)
 
     def handle_batch(self, reqs: List[ServeRequest],
@@ -125,16 +195,14 @@ class ReplicaEngine:
         EN reuse -> execute), with within-batch PIT aggregation resolved
         synchronously: followers of an identical in-flight name receive the
         leader's executed result.  Misses are executed in one ``execute_fn``
-        call per service and bulk-inserted.
+        call per service and bulk-inserted.  ``now`` sets the Content-Store
+        clock (see ``handle``); latency is always wall-measured.
         """
-        t0 = time.perf_counter() if now is None else now
+        t0 = time.perf_counter()
+        t_cs = t0 if now is None else now
         if not reqs:
             return []
-        embs = normalize(np.stack(
-            [np.asarray(r.embedding, np.float32).reshape(-1) for r in reqs]))
-        buckets = np.asarray(self.lsh.hash_batch(embs))  # (B, T)
-        names = [make_task_name(r.service, b, self.params.index_size_bytes)
-                 for r, b in zip(reqs, buckets)]
+        embs, names, buckets = self.embed_batch(reqs)
         results: List[Optional[ServeResult]] = [None] * len(reqs)
 
         def _done(i: int, result: Any, reuse: Optional[str], sim: float):
@@ -146,10 +214,9 @@ class ReplicaEngine:
         followers: Dict[int, int] = {}  # follower index -> leader index
         pending: List[int] = []
         for i, name in enumerate(names):
-            hit = self.cs.lookup(name, t0)
-            if hit is not None:
-                self.stats["cs"] += 1
-                _done(i, hit.content, "cs", 1.0)
+            content = self.cs_lookup(name, t_cs)
+            if content is not None:
+                _done(i, content, "cs", 1.0)
                 continue
             if name in leaders:
                 self.stats["aggregated"] += 1
@@ -164,40 +231,36 @@ class ReplicaEngine:
             by_service.setdefault(reqs[i].service, []).append(i)
         missed: Dict[str, List[int]] = {}
         for service, idxs in by_service.items():
-            store = self._store(service)
-            out = store.query_batch(
-                embs[idxs], np.asarray([reqs[i].threshold for i in idxs],
-                                       np.float32))
+            out = self.query_reuse(
+                service, embs[idxs],
+                np.asarray([reqs[i].threshold for i in idxs], np.float32))
             for i, (result, sim, idx) in zip(idxs, out):
                 if idx is not None:
-                    self.stats["en"] += 1
-                    self.cs.insert(Data(names[i], content=result), t0)
+                    self.admit_en_hit(names[i], result, t_cs)
                     _done(i, result, "en", sim)
                 else:
                     missed.setdefault(service, []).append(i)
 
         # --- execute misses (one model batch per service) + bulk insert
         for service, idxs in missed.items():
-            t_exec = time.perf_counter()
-            outs = self.execute_fn([reqs[i] for i in idxs])
-            exec_time = time.perf_counter() - t_exec
-            store = self._store(service)
-            store.insert_batch(embs[idxs], outs)
-            # amortized per-request time, matching the scalar path's
-            # batch-of-1 observations (maybe_backup compares a *single*
-            # request's elapsed time against this EWMA)
-            self.ttc.observe(service, exec_time / len(idxs))
+            outs, exec_time = self.execute_batch([reqs[i] for i in idxs])
+            self.commit_execution(service, embs[idxs], [names[i] for i in idxs],
+                                  outs, t_cs, exec_time, buckets=buckets[idxs])
             for i, result in zip(idxs, outs):
-                self.cs.insert(Data(names[i], content=result), t0)
-                self.stats["executed"] += 1
                 _done(i, result, None, -1.0)
 
         # --- resolve within-batch aggregated followers: identical task name
         # == exact reuse, and the leader (executed or en-hit) has inserted the
         # name into the CS by now, so the scalar-equivalent re-handle is
-        # always a CS hit at sim 1.0
+        # always a CS hit at sim 1.0.  A follower "arrived" at t0 with its
+        # leader and resolved the moment the leader did — it inherits the
+        # leader's completion timestamp (not the end of the whole batch) and
+        # records the interval it spent aggregated as agg_wait_s.
         for i, leader in followers.items():
-            _done(i, results[leader].result, "cs", 1.0)
+            lead = results[leader]
+            results[i] = ServeResult(
+                reqs[i].request_id, lead.result, "cs", 1.0, lead.latency_s,
+                self.replica_id, agg_wait_s=lead.latency_s)
         return results
 
 
@@ -253,27 +316,49 @@ class ReuseRouter:
 
 
 class ServingFleet:
-    """Router + replicas + straggler mitigation (backup requests)."""
+    """Router + replicas + straggler mitigation, sync facade.
+
+    ``submit``/``submit_batch`` are thin wrappers over the event-driven
+    ``AsyncServingEngine`` (serving/async_engine.py): requests are admitted
+    as futures and the virtual-clock loop is drained to completion, so the
+    sync API exercises exactly the async pipeline (batcher flush, PIT
+    follower futures, backup timers) — which is what makes scalar parity
+    against ``handle_batch`` testable.  ``submit_batch_sync`` keeps the
+    direct one-``handle_batch``-per-replica path as the parity reference.
+    """
 
     def __init__(self, lsh_params: LSHParams, replicas: List[ReplicaEngine],
-                 backup: Optional[BackupPolicy] = None):
-        self.router = ReuseRouter(lsh_params, len(replicas))
+                 backup: Optional[BackupPolicy] = None,
+                 max_batch: int = 8, max_wait_s: float = 0.005):
+        from .async_engine import AsyncServingEngine  # avoid import cycle
+
+        self.engine = AsyncServingEngine(
+            lsh_params, replicas, backup=backup,
+            max_batch=max_batch, max_wait_s=max_wait_s)
+        self.router = self.engine.router
         self.replicas = replicas
-        self.backup = backup or BackupPolicy()
+        self.backup = self.engine.backup
 
     def submit(self, req: ServeRequest) -> ServeResult:
-        rid, _ = self.router.route(req.embedding)
-        res = self.replicas[rid].handle(req)
-        if res is None:  # aggregated; poll the owner (sync model: re-handle)
-            res = self.replicas[rid].handle(req)
-        ttc = self.replicas[rid].ttc.estimate(req.service)
-        if (req.deadline_s is not None and res is None):
-            pass  # unreachable in sync mode; async engines use BackupPolicy
-        return res
+        fut = self.engine.submit(req)
+        self.engine.drain()
+        return fut.result
 
     def submit_batch(self, reqs: List[ServeRequest]) -> List[ServeResult]:
-        """Route a whole batch (one hash dispatch), then one ``handle_batch``
-        per replica; results come back in submission order."""
+        """Admit a whole batch at one virtual instant, drain, and return
+        results in submission order."""
+        futs = [self.engine.submit(r) for r in reqs]
+        self.engine.drain()
+        return [f.result for f in futs]
+
+    def submit_batch_sync(self, reqs: List[ServeRequest]) -> List[ServeResult]:
+        """Direct sync path: route a whole batch (one hash dispatch), then
+        one ``handle_batch`` per replica; results in submission order.
+
+        Passes the engine's virtual time as the Content-Store clock so the
+        replicas' CS state stays on ONE clock even when both facade paths
+        are mixed on the same fleet (wall timestamps would instantly expire
+        entries inserted at virtual time, and vice versa)."""
         if not reqs:
             return []
         owners, _ = self.router.route_batch(
@@ -283,7 +368,7 @@ class ServingFleet:
         for rid in sorted(set(int(o) for o in owners)):
             idxs = [i for i, o in enumerate(owners) if int(o) == rid]
             for i, res in zip(idxs, self.replicas[rid].handle_batch(
-                    [reqs[i] for i in idxs])):
+                    [reqs[i] for i in idxs], now=self.engine.loop.now)):
                 results[i] = res
         return results
 
@@ -296,8 +381,6 @@ class ServingFleet:
         return None
 
     def stats(self) -> Dict[str, int]:
-        out: Dict[str, int] = {}
-        for r in self.replicas:
-            for k, v in r.stats.items():
-                out[k] = out.get(k, 0) + v
-        return out
+        """Fleet-wide counters: replica stats + the engine's backup/dispatch
+        counters (backups can fire during a drained ``submit``)."""
+        return self.engine.stats()

@@ -17,7 +17,7 @@ is fully implemented and tested):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 
 # ------------------------------------------------------------- health tracking
@@ -154,12 +154,44 @@ def plan_rescale(old_shape: Tuple[int, ...], n_devices: int,
 @dataclasses.dataclass
 class BackupPolicy:
     """Straggler mitigation for serving: duplicate a request to a second
-    replica once it exceeds ``factor`` x its TTC estimate."""
+    replica once it exceeds ``factor`` x its TTC estimate.
+
+    Besides the polling-style ``should_backup`` check, the policy carries the
+    event-driven serving engine's timer lifecycle: ``backup_delay_s`` turns a
+    TTC estimate into the re-dispatch timer's delay, and ``arm``/``cancel``
+    register per-task cancellation hooks (timer cancels) that fire when the
+    first result wins — so a completed task can never trigger a late backup,
+    and a resolved backup race tears down every outstanding timer exactly
+    once."""
 
     factor: float = 1.5
     max_backups: int = 1
+    _armed: Dict[Any, List[Callable[[], None]]] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     def should_backup(self, elapsed_s: float, ttc_estimate_s: float,
                       backups_sent: int) -> bool:
         return (backups_sent < self.max_backups
                 and elapsed_s > self.factor * max(ttc_estimate_s, 1e-6))
+
+    def backup_delay_s(self, ttc_estimate_s: float,
+                       backups_sent: int = 0) -> Optional[float]:
+        """Delay until the next backup dispatch, or None when exhausted."""
+        if backups_sent >= self.max_backups:
+            return None
+        return self.factor * max(ttc_estimate_s, 1e-6)
+
+    # ------------------------------------------------- cancellation hooks
+    def arm(self, key: Any, cancel_fn: Callable[[], None]) -> None:
+        """Register a cancellation hook (e.g. a Timer.cancel) for ``key``."""
+        self._armed.setdefault(key, []).append(cancel_fn)
+
+    def cancel(self, key: Any) -> int:
+        """Fire + drop every hook armed for ``key``; returns how many."""
+        hooks = self._armed.pop(key, [])
+        for fn in hooks:
+            fn()
+        return len(hooks)
+
+    def active(self) -> int:
+        return sum(len(v) for v in self._armed.values())
