@@ -10,6 +10,12 @@ sweep batch size x store size and compare
 
 Derived column reports the speedup of batch over scalar at the same store
 size.  Acceptance target (ISSUE 1): >= 10x at batch >= 256 on a >= 50k store.
+
+The churn sweep (`churn_paged` / `churn_full` rows) measures the paged
+device residency (ISSUE 3): insert -> sync -> query cycles at 10k/50k/200k
+entries, reporting device-sync pages and bytes per cycle.  Acceptance: at
+200k entries the post-insert sync uploads <= 2 pages (O(dirty pages), not
+O(store)); the `full` rows emulate the pre-paging full re-upload for A/B.
 """
 from __future__ import annotations
 
@@ -32,12 +38,13 @@ def _time_us(fn) -> float:
     return (time.perf_counter() - t0) * 1e6
 
 
-def _make_store(n_store: int, seed: int = 0) -> ReuseStore:
+def _make_store(n_store: int, seed: int = 0,
+                capacity: int | None = None) -> tuple[ReuseStore, np.ndarray]:
     # num_buckets sized to the store (FALCONN convention: ~N buckets) so the
     # multi-probe candidate set stays a small fraction of the store.
     p = LSHParams(dim=DIM, num_tables=5, num_probes=8, num_buckets=16384,
                   family="hyperplane", seed=11)
-    store = ReuseStore(p, capacity=n_store + 1)
+    store = ReuseStore(p, capacity=n_store + 1 if capacity is None else capacity)
     rng = np.random.default_rng(seed)
     X = normalize(rng.standard_normal((n_store, DIM)).astype(np.float32))
     for lo in range(0, n_store, 8192):  # chunked bulk insert
@@ -68,6 +75,75 @@ def _insert_rows(n_reps: int = 5) -> list:
                      f"per-item best-of-{n_reps}, hash_one+_table_add loop"))
         rows.append((f"reuse_scale/insert_batch/n{n_items}", us_b,
                      f"per-item best-of-{n_reps}, speedup {us_s / us_b:.1f}x"))
+    return rows
+
+
+CHURN_STORE_SIZES = (10_000, 50_000, 200_000)
+CHURN_INSERT = 512   # inserts per churn cycle (spans <= 2 of the 4096 pages)
+CHURN_QUERY = 512    # queries per churn cycle (forces the device sync)
+
+
+def _churn_rows(n_cycles: int = 4) -> list:
+    """Insert -> sync -> query churn at scale: device-sync cost per cycle.
+
+    The paged-residency measurement (ISSUE 3): after a batch insert, the
+    device sync uploads only the dirty pages — O(dirty), not O(store) — so
+    sync pages/bytes stay flat as the store grows 10k -> 200k.  The ``full``
+    rows flip the store's ``full_resync`` knob to emulate the pre-paging
+    behaviour (every sync re-uploads the whole matrix) on the *same* store
+    for a like-for-like A/B.
+    """
+    rows: list[Row] = []
+    rng = np.random.default_rng(5)
+    for n_store in CHURN_STORE_SIZES:
+        store, X = _make_store(n_store, capacity=2 * n_store)
+        warm_q = normalize(
+            X[:CHURN_QUERY] + 0.05 * rng.standard_normal(
+                (CHURN_QUERY, DIM)).astype(np.float32) / np.sqrt(DIM))
+        store.query_batch(warm_q, 0.8)  # jit warmup + device residency
+        fresh = normalize(rng.standard_normal(
+            (2 * (n_cycles + 1) * CHURN_INSERT, DIM)).astype(np.float32))
+        used = 0
+        # modes interleave *within* each cycle (paged then full on the same
+        # store), so both arms see the same store size to within one insert
+        # batch and a contention burst cannot hit only one arm; cycle 0 is
+        # an untimed warmup absorbing the jit compiles
+        acc = {m: {"ins": 0.0, "q": 0.0, "sync": float("inf"),
+                   "pages": 0, "kb": 0.0} for m in ("paged", "full")}
+        for cycle in range(n_cycles + 1):
+            for mode in ("paged", "full"):
+                store.full_resync = mode == "full"
+                batch = fresh[used:used + CHURN_INSERT]
+                res = list(range(used, used + CHURN_INSERT))
+                used += CHURN_INSERT
+                i_us = _time_us(lambda: store.insert_batch(batch, res))
+                b0 = store.sync_bytes_total
+                s_us = _time_us(lambda: store.sync_device(ensure=True))
+                p, by = store.last_sync_pages, store.sync_bytes_total - b0
+                qq_us = _time_us(lambda: store.query_batch(warm_q, 0.8))
+                if cycle == 0:
+                    continue
+                a = acc[mode]
+                a["ins"] += i_us
+                a["q"] += qq_us
+                a["sync"] = min(a["sync"], s_us)
+                a["pages"] += p
+                a["kb"] += by / 1024
+        store.full_resync = False
+        for mode in ("paged", "full"):
+            a = acc[mode]
+            # the row metric is the post-insert device sync itself (best-of-
+            # cycles): insert and query wall are sync-invariant between the
+            # modes and would otherwise bury the 1-vs-50-page signal in
+            # shared-box query noise
+            rows.append((
+                f"reuse_scale/churn_{mode}/store{n_store}", a["sync"],
+                f"sync_us best-of-{n_cycles} (cycle=insert{CHURN_INSERT}+sync+"
+                f"query{CHURN_QUERY}, modes interleaved);"
+                f"sync_pages/cycle={a['pages'] / n_cycles:.1f};"
+                f"sync_kb/cycle={a['kb'] / n_cycles:.0f};"
+                f"insert_us={a['ins'] / n_cycles:.0f};"
+                f"query_us={a['q'] / n_cycles:.0f}"))
     return rows
 
 
@@ -104,6 +180,7 @@ def run(n_reps: int = 7) -> list:
             rows.append((f"reuse_scale/batch{b}/store{n_store}", us,
                          f"per-task best-of-{n_reps}, speedup {us_scalar / us:.1f}x"))
     rows.extend(_insert_rows())
+    rows.extend(_churn_rows())
     return rows
 
 

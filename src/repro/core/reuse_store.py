@@ -16,9 +16,22 @@ and the batched ``query_batch`` path services a whole batch of tasks with one
 overwrite their oldest slot ring-buffer style (the displaced entry stays
 reachable through its other tables; ``overflows`` counts occurrences).
 
+Paged device residency (DESIGN.md §Array-native store / Paged device
+residency): embeddings live in fixed-size host *pages* of ``page_size`` rows,
+and the device mirror is one preallocated ``(num_pages, page_size, dim)``
+array.  A slot id decomposes as ``(idx // page_size, idx % page_size)``.
+Inserts and removals mark only their touched pages dirty; a device sync
+uploads exactly the dirty pages (one donated ``dynamic_update_slice`` each),
+so sync cost is O(dirty pages) instead of O(store).  Growth appends host
+pages and doubles the device allocation with a device-side copy — the host
+matrix is never reallocated-and-copied.  ``sync_pages_total`` /
+``sync_bytes_total`` / ``last_sync_pages`` account every upload.
+
 Capacity-bounded with LRU eviction (the paper's §V-C cache-size study applies
-the same policy at user devices, forwarders, and ENs).  For large scalar-path
-candidate sets the scoring matmul is offloaded to the ``sim_topk`` kernel.
+the same policy at user devices, forwarders, and ENs).  Removal tombstones
+the entry's page row (zeros it and dirties the page) so a stale embedding can
+never be gathered after slot-id reuse.  For large scalar-path candidate sets
+the scoring matmul is offloaded to the ``sim_topk`` kernel.
 """
 from __future__ import annotations
 
@@ -32,6 +45,30 @@ from .similarity import get_similarity
 
 # Hard ceiling on total bucket-table slots (int32 entries) per store.
 _MAX_TABLE_SLOTS = 1 << 25
+
+# Default rows per embedding page: 4096 x dim f32 = 1 MiB at dim=64 — big
+# enough that a batch insert rarely straddles more than two pages, small
+# enough that one dirty row doesn't re-upload a meaningful store fraction.
+DEFAULT_PAGE_SIZE = 4096
+
+_PAGE_UPDATER = None  # lazily-built jitted page writer (shared by all stores)
+
+
+def _page_updater():
+    """Jitted in-place page write: donates the buffer so XLA aliases it and
+    the only host->device traffic is the one dirty page."""
+    global _PAGE_UPDATER
+    if _PAGE_UPDATER is None:
+        import functools
+
+        import jax
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def _upd(buf, page, p):
+            return jax.lax.dynamic_update_slice(buf, page[None], (p, 0, 0))
+
+        _PAGE_UPDATER = _upd
+    return _PAGE_UPDATER
 
 
 def _auto_bucket_cap(params: LSHParams, capacity: int) -> int:
@@ -55,6 +92,8 @@ class ReuseStore:
         similarity: str = "cosine",
         use_kernel_threshold: int = 4096,
         bucket_cap: Optional[int] = None,
+        page_size: int = DEFAULT_PAGE_SIZE,
+        full_resync: bool = False,
     ):
         self.lsh: LSH = get_lsh(lsh_params)
         self.params = lsh_params
@@ -62,8 +101,23 @@ class ReuseStore:
         self.similarity_name = similarity
         self.similarity = get_similarity(similarity)
         self.use_kernel_threshold = use_kernel_threshold
-        d = lsh_params.dim
-        self._emb = np.zeros((0, d), np.float32)
+        self.dim = lsh_params.dim
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
+        # paged embedding storage: host truth is a list of (page_size, dim)
+        # pages (growth appends, never reallocates); the device mirror is one
+        # (alloc_pages, page_size, dim) array synced page-at-a-time
+        self.page_size = int(page_size)
+        # debug/bench knob: a dirty sync re-uploads every page (the seed's
+        # whole-matrix invalidation); clean syncs stay free in both modes
+        self.full_resync = bool(full_resync)
+        self._pages: List[np.ndarray] = []
+        self._n_slots = 0                      # high-water slot id
+        self._dirty: set = set()               # host pages not yet on device
+        self._emb_dev: Any = None              # (alloc_pages, page_size, dim)
+        self.sync_pages_total = 0
+        self.sync_bytes_total = 0
+        self.last_sync_pages = 0
         self._results: List[Any] = []
         self._buckets_of: List[Optional[np.ndarray]] = []  # per slot: (T,) ids
         self._free: List[int] = []
@@ -76,18 +130,117 @@ class ReuseStore:
         self._fill = np.zeros((t, nb), np.int32)
         self._cursor = np.zeros((t, nb), np.int32)  # ring position when full
         self.overflows = 0
-        # device-resident embedding matrix for the batched kernel, refreshed
-        # lazily when inserts dirty it (one upload per batch window, not per
-        # query)
-        self._emb_version = 0
-        self._emb_dev: Any = None
-        self._emb_dev_version = -1
         self.inserts = 0
         self.queries = 0
         self.candidate_counts: List[int] = []
 
     def __len__(self) -> int:
         return len(self._lru)
+
+    # ----------------------------------------------------------------- pages
+    @property
+    def num_pages(self) -> int:
+        """Host pages allocated (each ``page_size`` rows)."""
+        return len(self._pages)
+
+    @property
+    def device_pages(self) -> int:
+        """Pages in the device allocation (0 until the kernel path runs)."""
+        return 0 if self._emb_dev is None else int(self._emb_dev.shape[0])
+
+    def _row(self, idx: int) -> np.ndarray:
+        return self._pages[idx // self.page_size][idx % self.page_size]
+
+    @staticmethod
+    def _page_runs(pg: np.ndarray):
+        """Boundaries of equal-page runs in ``pg`` -> (starts, ends) arrays.
+
+        Gather/scatter callers pass ascending slot ids, so runs == distinct
+        pages and each run is one contiguous fancy-index; unsorted input is
+        still correct, just split into more runs."""
+        bounds = np.flatnonzero(pg[1:] != pg[:-1]) + 1
+        return (np.concatenate(([0], bounds)),
+                np.concatenate((bounds, [pg.size])))
+
+    def _rows(self, ids: np.ndarray) -> np.ndarray:
+        """Vectorized host gather of slot ids through (page, offset)."""
+        ids = np.asarray(ids, np.int64)
+        if ids.size == 0:
+            return np.empty((0, self.dim), np.float32)
+        pg = ids // self.page_size
+        first = int(pg[0])
+        if pg[-1] == first and (pg == first).all():  # common: one page
+            return self._pages[first][ids - first * self.page_size]
+        off = ids - pg * self.page_size
+        out = np.empty((ids.size, self.dim), np.float32)
+        for s, e in zip(*self._page_runs(pg)):
+            # np.take with out= gathers straight into the slice (no temp);
+            # the residual cost vs one contiguous fancy-index is a few
+            # percent of a scalar query — the batched path gathers on device
+            np.take(self._pages[pg[s]], off[s:e], axis=0, out=out[s:e])
+        return out
+
+    def _write_rows(self, ids: np.ndarray, embs: np.ndarray) -> None:
+        ids = np.asarray(ids, np.int64)
+        if ids.size == 0:
+            return
+        pg = ids // self.page_size
+        off = ids - pg * self.page_size
+        for s, e in zip(*self._page_runs(pg)):
+            self._pages[pg[s]][off[s:e]] = embs[s:e]
+            self._dirty.add(int(pg[s]))
+
+    def sync_device(self, ensure: bool = False) -> int:
+        """Upload dirty host pages into the device mirror; returns the number
+        of pages uploaded.
+
+        A no-op until the batched kernel path has materialized the device
+        buffer (small stores never pay for device residency); ``ensure=True``
+        forces allocation — benchmarks and the serving commit path use it to
+        move the upload off the query critical path.
+        """
+        if self._emb_dev is None and not ensure:
+            return 0
+        return self._sync_device()
+
+    def _sync_device(self) -> int:
+        import jax.numpy as jnp
+
+        n_pages = len(self._pages)
+        if n_pages == 0:
+            self.last_sync_pages = 0
+            return 0
+        if self._emb_dev is None:
+            alloc = 1
+            while alloc < n_pages:
+                alloc *= 2
+            self._emb_dev = jnp.zeros(
+                (alloc, self.page_size, self.dim), jnp.float32)
+            self._dirty.update(range(n_pages))  # first residency: upload all
+        elif self._emb_dev.shape[0] < n_pages:
+            # growth: double the device allocation with a device-side copy —
+            # previously-synced pages never cross the host/device boundary
+            alloc = int(self._emb_dev.shape[0])
+            while alloc < n_pages:
+                alloc *= 2
+            pad = jnp.zeros((alloc - self._emb_dev.shape[0],
+                             self.page_size, self.dim), jnp.float32)
+            self._emb_dev = jnp.concatenate([self._emb_dev, pad])
+        if self.full_resync and self._dirty:
+            # bench knob: emulate the pre-paging behaviour — any dirty row
+            # invalidates the whole matrix (but an already-clean store stays
+            # clean, exactly like the seed's version check)
+            self._dirty.update(range(n_pages))
+        upd = _page_updater()
+        uploaded = sorted(self._dirty)
+        for p in uploaded:
+            self._emb_dev = upd(self._emb_dev, jnp.asarray(self._pages[p]),
+                                jnp.int32(p))
+        self._dirty.clear()
+        self.last_sync_pages = len(uploaded)
+        self.sync_pages_total += len(uploaded)
+        self.sync_bytes_total += len(uploaded) * self.page_size * self.dim * 4
+        return len(uploaded)
 
     # ---------------------------------------------------------------- tables
     def _table_add(self, idx: int, buckets: np.ndarray) -> None:
@@ -143,27 +296,42 @@ class ReuseStore:
     def _alloc(self) -> int:
         if self._free:
             return self._free.pop()
-        idx = self._emb.shape[0]
-        grow = max(256, idx)
-        self._emb = np.concatenate([self._emb, np.zeros((grow, self._emb.shape[1]), np.float32)])
-        self._results.extend([None] * grow)
-        self._buckets_of.extend([None] * grow)
-        self._free.extend(reversed(range(idx + 1, idx + grow)))
+        idx = self._n_slots
+        if idx >= len(self._pages) * self.page_size:
+            self._pages.append(np.zeros((self.page_size, self.dim), np.float32))
+            self._results.extend([None] * self.page_size)
+            self._buckets_of.extend([None] * self.page_size)
+        self._n_slots += 1
         return idx
+
+    def remove(self, idx: int) -> None:
+        """Drop a live entry: detach it from the LSH tables, tombstone its
+        page row (zeroed + page dirtied) so the device mirror can never
+        return the stale embedding after the slot id is reused, and recycle
+        the slot."""
+        if idx not in self._lru:
+            raise KeyError(f"slot {idx} is not live")
+        del self._lru[idx]
+        self._release(idx)
 
     def _evict_lru(self) -> None:
         idx, _ = self._lru.popitem(last=False)
+        self._release(idx)
+
+    def _release(self, idx: int) -> None:
         self._table_remove(idx, self._buckets_of[idx])
         self._results[idx] = None
         self._buckets_of[idx] = None
+        self._row(idx)[:] = 0.0          # tombstone the embedding row
+        self._dirty.add(idx // self.page_size)
         self._free.append(idx)
 
     def _insert_hashed(self, emb: np.ndarray, result: Any, buckets: np.ndarray) -> int:
         while len(self._lru) >= self.capacity > 0:
             self._evict_lru()
         idx = self._alloc()
-        self._emb[idx] = emb
-        self._emb_version += 1
+        self._row(idx)[:] = emb
+        self._dirty.add(idx // self.page_size)
         self._results[idx] = result
         self._buckets_of[idx] = buckets
         self._table_add(idx, buckets)
@@ -202,8 +370,7 @@ class ReuseStore:
             return [self._insert_hashed(emb, res, bks)
                     for emb, res, bks in zip(embs, results, buckets)]
         ids = np.asarray([self._alloc() for _ in range(n)], np.int32)
-        self._emb[ids] = embs
-        self._emb_version += 1
+        self._write_rows(ids, embs)
         for i, (idx, res) in enumerate(zip(ids, results)):
             idx = int(idx)
             self._results[idx] = res
@@ -264,7 +431,7 @@ class ReuseStore:
             return None, -1.0, None
         emb = normalize(np.asarray(embedding, np.float32).reshape(-1))
         cand_arr = np.asarray(cand, np.int64)
-        store = self._emb[cand_arr]
+        store = self._rows(cand_arr)
         if len(cand) >= self.use_kernel_threshold and self.similarity_name == "cosine":
             from repro.kernels import ops as _kops  # lazy: optional accelerated path
 
@@ -352,20 +519,17 @@ class ReuseStore:
 
         Rows of ``cand`` are ascending unique ids, front-packed, -1 padded.
         Cosine stores use the fused gather/score kernel when the gather is
-        big enough to pay for the dispatch (and the lazy device re-upload of
-        a dirty ``_emb``); small workloads — notably single-row oracle peeks
-        — score in numpy like the scalar path.  Other similarity measures
-        always score per query with the configured function.
+        big enough to pay for the dispatch: candidates gather straight out of
+        the paged device mirror via (page, offset) decomposition after an
+        O(dirty pages) sync.  Small workloads — notably single-row oracle
+        peeks — score in numpy like the scalar path.  Other similarity
+        measures always score per query with the configured function.
         """
         work = embs.shape[0] * cand.shape[1]
         if self.similarity_name == "cosine" and work >= self.use_kernel_threshold:
             from repro.kernels import ops as _kops
 
-            if self._emb_dev_version != self._emb_version:
-                import jax.numpy as jnp
-
-                self._emb_dev = jnp.asarray(self._emb)
-                self._emb_dev_version = self._emb_version
+            self.sync_device(ensure=True)
             val, idx = _kops.gathered_top1(embs, self._emb_dev, cand)
             return np.asarray(val), np.asarray(idx)
         val = np.full(embs.shape[0], -np.inf, np.float32)
@@ -374,14 +538,14 @@ class ReuseStore:
             ids = cand[i, : counts[i]]
             if ids.size == 0:
                 continue
-            sims = self.similarity(embs[i], self._emb[ids])
+            sims = self.similarity(embs[i], self._rows(ids))
             best = int(np.argmax(sims))
             val[i], idx[i] = sims[best], int(ids[best])
         return val, idx
 
     # ------------------------------------------------------------ inspection
     def embedding_of(self, idx: int) -> np.ndarray:
-        return self._emb[idx]
+        return self._row(idx)
 
     def result_of(self, idx: int) -> Any:
         return self._results[idx]

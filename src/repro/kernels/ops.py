@@ -89,22 +89,36 @@ def _pad_ids(ids: jax.Array, axis: int, mult: int) -> jax.Array:
 def gathered_top1(q: jax.Array, store: jax.Array, cand_ids: jax.Array):
     """Fused multi-probe gather + masked cosine top-1 (batched reuse query).
 
-    q: (Q, D) unit rows; store: (N, D) unit rows; cand_ids: (Q, C) int32 store
-    row ids, -1 = unused slot.  Returns (best (Q,) f32, idx (Q,) int32) where
-    idx is a store row id and -1/-inf mark queries without candidates.
+    q: (Q, D) unit rows; store: (N, D) unit rows, or the reuse store's paged
+    (num_pages, page_size, D) device buffer — slot ids then address row
+    ``page * page_size + offset`` and the kernel gathers through the
+    (page, offset) decomposition without flattening the buffer.  cand_ids:
+    (Q, C) int32 store row ids, -1 = unused slot.  Returns (best (Q,) f32,
+    idx (Q,) int32) where idx is a store row id and -1/-inf mark queries
+    without candidates.
 
     Candidate width is padded to a multiple of 64 (queries to 8) so repeated
     calls with drifting candidate counts reuse a small set of compilations.
+    A paged store is passed through unpadded: its row count is
+    num_pages * page_size, already a hardware-friendly multiple (the store
+    allocates whole pages; keep page_size a multiple of 8 on TPU).
     """
     q = jnp.atleast_2d(q)
     nq = q.shape[0]
-    if store.shape[0] == 0 or cand_ids.shape[1] == 0:
+    paged = store.ndim == 3
+    if paged and store.shape[1] % 8 and not _interpret():
+        # tiny (test-sized) pages misalign TPU tiles; flatten — a copy, but
+        # a correctness valve only: production page sizes are multiples of 8
+        store = store.reshape(-1, store.shape[-1])
+        paged = False
+    n_rows = (store.shape[0] * store.shape[1]) if paged else store.shape[0]
+    if n_rows == 0 or cand_ids.shape[1] == 0:
         return (jnp.full((nq,), -jnp.inf, jnp.float32),
                 jnp.full((nq,), -1, jnp.int32))
     qp, _ = _pad_to(q, 0, 8)
     ids = _pad_ids(jnp.asarray(cand_ids, jnp.int32), 1, 64)
     ids = _pad_ids(ids, 0, 8)
-    sp, _ = _pad_to(store, 0, 8)
+    sp = store if paged else _pad_to(store, 0, 8)[0]
     # Small blocks keep the gathered (bQ, bC, D) tile cache-resident on CPU;
     # the TPU path prefers the kernel's larger MXU-aligned defaults.
     blocks = {"block_q": 128, "block_c": 512} if _interpret() else {}

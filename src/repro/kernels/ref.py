@@ -46,9 +46,10 @@ def sim_top1_ref(q: jax.Array, store: jax.Array, valid_n: Optional[int] = None):
 def gather_top1_ref(q: jax.Array, store: jax.Array, cand_ids: jax.Array):
     """Candidate-gather cosine top-1 (the multi-probe batch path).
 
-    q: (Q, D); store: (N, D); cand_ids: (Q, C) int32 store row ids, -1 = pad.
-    Returns (best (Q,), idx (Q,)) with idx a store row id, -1 when a query has
-    no valid candidate (best is -inf there).
+    q: (Q, D); store: (N, D) or paged (num_pages, page_size, D);
+    cand_ids: (Q, C) int32 store row ids, -1 = pad (paged stores address row
+    ``page * page_size + offset``).  Returns (best (Q,), idx (Q,)) with idx a
+    store row id, -1 when a query has no valid candidate (best is -inf there).
     """
     ids = cand_ids.astype(jnp.int32)
     valid = ids >= 0
@@ -57,7 +58,12 @@ def gather_top1_ref(q: jax.Array, store: jax.Array, cand_ids: jax.Array):
     qn = qf / jnp.maximum(jnp.linalg.norm(qf, axis=-1, keepdims=True), 1e-12)
     sf = store.astype(jnp.float32)
     sn = sf / jnp.maximum(jnp.linalg.norm(sf, axis=-1, keepdims=True), 1e-12)
-    cand = jnp.take(sn, safe, axis=0)                   # (Q, C, D)
+    if store.ndim == 3:  # paged: (page, offset) decomposition, same as kernel
+        page_size = store.shape[1]
+        pg = jnp.clip(safe // page_size, 0, store.shape[0] - 1)
+        cand = sn[pg, safe % page_size]                 # (Q, C, D)
+    else:
+        cand = jnp.take(sn, safe, axis=0)               # (Q, C, D)
     scores = jnp.einsum("qd,qcd->qc", qn, cand)
     scores = jnp.where(valid, scores, -jnp.inf)
     best = jnp.max(scores, axis=-1)

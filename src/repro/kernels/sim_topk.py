@@ -15,9 +15,13 @@ similarity is a plain matmul.  Two kernels:
   ``-1`` padded); the kernel gathers candidate embeddings by slot id and
   computes the masked cosine top-1 in the same pass.  Grid: (Q / bQ, C / bC)
   with candidates innermost and the same running-best scratch scheme, so
-  work is O(B * C * D) — the candidate set, not the store size.  The gather
-  lowers to a Mosaic dynamic row gather on TPU; on CPU the kernels run in
-  interpret mode (see ops.py).
+  work is O(B * C * D) — the candidate set, not the store size.  The store
+  operand is either a flat ``(N, D)`` matrix or the reuse store's *paged*
+  device buffer ``(num_pages, page_size, D)``; in the paged case the kernel
+  decomposes each slot id as ``(id // page_size, id % page_size)`` and
+  gathers through (page, offset), so the caller never has to flatten (=
+  copy) the paged residency.  The gather lowers to a Mosaic dynamic row
+  gather on TPU; on CPU the kernels run in interpret mode (see ops.py).
 """
 from __future__ import annotations
 
@@ -112,8 +116,15 @@ def _gather_top1_kernel(q_ref, ids_ref, store_ref, val_ref, idx_ref,
     ids = ids_ref[...]                                 # (bQ, bC) int32, -1 pad
     valid = ids >= 0
     safe = jnp.where(valid, ids, 0)
-    store = store_ref[...]                             # (N, D)
-    cand = jnp.take(store, safe.reshape(-1), axis=0, mode="clip")
+    store = store_ref[...]                             # (N, D) | (P, S, D)
+    flat = safe.reshape(-1)
+    if store.ndim == 3:
+        # paged store: slot id -> (page, offset) row gather
+        page_size = store.shape[1]
+        pg = jnp.clip(flat // page_size, 0, store.shape[0] - 1)
+        cand = store[pg, flat % page_size]
+    else:
+        cand = jnp.take(store, flat, axis=0, mode="clip")
     cand = cand.reshape(safe.shape + (q.shape[-1],)).astype(jnp.float32)
     scores = jnp.einsum("qd,qcd->qc", q, cand)         # (bQ, bC) on the VPU
     scores = jnp.where(valid, scores, -jnp.inf)
@@ -137,8 +148,10 @@ def gather_top1(q: jax.Array, store: jax.Array, cand_ids: jax.Array,
                 interpret: bool = True):
     """Fused candidate-gather + masked cosine top-1.
 
-    q: (Q, D) unit rows; store: (N, D) unit rows; cand_ids: (Q, C) int32 store
-    row ids with -1 marking unused slots.  Returns (best (Q,), idx (Q,)) where
+    q: (Q, D) unit rows; store: (N, D) unit rows or a paged
+    (num_pages, page_size, D) device buffer; cand_ids: (Q, C) int32 store
+    row ids with -1 marking unused slots (paged stores address row
+    ``page * page_size + offset``).  Returns (best (Q,), idx (Q,)) where
     idx is a *store row id* (-1 and best=-inf when a query has no candidates).
     """
     Q, D = q.shape

@@ -137,7 +137,12 @@ class ReplicaEngine:
         to the (virtual) completion event — and skip it entirely when a
         backup already resolved the task (no double insert).  ``buckets``
         reuses the admission-time hash for the store insert."""
-        self._store(service).insert_batch(embs, outs, buckets=buckets)
+        store = self._store(service)
+        store.insert_batch(embs, outs, buckets=buckets)
+        # Page the fresh embeddings onto the device now, off the query
+        # critical path: the next query_batch starts without an upload stall.
+        # No-op until the store's kernel path has gone device-resident.
+        store.sync_device()
         # amortized per-request time, matching the scalar path's batch-of-1
         # observations (maybe_backup compares a *single* request's elapsed
         # time against this EWMA)

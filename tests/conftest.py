@@ -4,14 +4,26 @@
 module scope for property tests.  On environments without it, installing a
 minimal stand-in here (conftest is imported before collection) keeps the rest
 of the suite runnable — only ``@given``-decorated tests are skipped.
+
+When hypothesis *is* installed, a deadline-disabled ``ci`` profile is
+registered and selected via ``HYPOTHESIS_PROFILE=ci`` (the CI hypothesis job
+sets it): the store-property interleavings run whole ReuseStore op sequences
+per example, and jit warm-up inside an example would trip the default 200 ms
+deadline with a spurious ``DeadlineExceeded``.
 """
 from __future__ import annotations
 
+import os
 import sys
 import types
 
 try:  # pragma: no cover - exercised implicitly by the import below
-    import hypothesis  # noqa: F401
+    import hypothesis
+
+    hypothesis.settings.register_profile(
+        "ci", deadline=None, print_blob=True)
+    if os.environ.get("HYPOTHESIS_PROFILE"):
+        hypothesis.settings.load_profile(os.environ["HYPOTHESIS_PROFILE"])
 except ImportError:
     import pytest
 

@@ -131,6 +131,49 @@ class TestGatherTop1:
         np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-6)
         assert (np.asarray(i1) == np.asarray(i2)).all()
 
+    @pytest.mark.parametrize("P,S,D,C", [(8, 32, 32, 40), (3, 128, 64, 200),
+                                         (16, 8, 16, 25)])
+    def test_paged_store_matches_flat(self, P, S, D, C):
+        """(P, S, D) paged buffer == the same rows flattened to (P*S, D)."""
+        flat = self._unit(P * S, D)
+        paged = flat.reshape(P, S, D)
+        q = self._unit(12, D)
+        ids = jnp.asarray(RNG.integers(-1, P * S, (12, C)), jnp.int32)
+        fv, fi = ops.gathered_top1(q, flat, ids)
+        pv, pi = ops.gathered_top1(q, paged, ids)
+        np.testing.assert_allclose(np.asarray(pv), np.asarray(fv), atol=1e-6)
+        assert (np.asarray(pi) == np.asarray(fi)).all()
+
+    def test_paged_oracle_lockstep(self):
+        """ref.gather_top1_ref accepts the paged layout and agrees with the
+        kernel through the (page, offset) decomposition."""
+        P, S, D, C = 5, 64, 32, 90
+        paged = self._unit(P * S, D).reshape(P, S, D)
+        q = self._unit(9, D)
+        ids = jnp.asarray(RNG.integers(-1, P * S, (9, C)), jnp.int32)
+        val, idx = ops.gathered_top1(q, paged, ids)
+        wv, wi = ref.gather_top1_ref(q, paged, ids)
+        fin = np.isfinite(np.asarray(wv))
+        np.testing.assert_allclose(np.asarray(val)[fin], np.asarray(wv)[fin],
+                                   atol=1e-5)
+        assert (np.asarray(idx) == np.asarray(wi)).all()
+
+    def test_paged_block_invariance(self):
+        P, S, D = 4, 64, 32
+        paged = self._unit(P * S, D).reshape(P, S, D)
+        q = self._unit(24, D)
+        ids = jnp.asarray(RNG.integers(-1, P * S, (24, 70)), jnp.int32)
+        v1, i1 = gather_top1(q, paged, ids, block_q=8, block_c=32)
+        v2, i2 = gather_top1(q, paged, ids, block_q=32, block_c=128)
+        np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-6)
+        assert (np.asarray(i1) == np.asarray(i2)).all()
+
+    def test_paged_empty_store(self):
+        q = self._unit(3, 32)
+        val, idx = ops.gathered_top1(q, jnp.zeros((0, 16, 32), jnp.float32),
+                                     jnp.zeros((3, 4), jnp.int32))
+        assert (np.asarray(idx) == -1).all()
+
     def test_agrees_with_sim_top1_when_all_candidates(self):
         """Full candidate list == brute-force streaming top-1."""
         q, s = self._unit(16, 64), self._unit(256, 64)
