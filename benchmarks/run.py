@@ -26,6 +26,7 @@ BENCHES = (
     "multiprobe",         # beyond-paper: probe depth vs recall vs cost
     "reuse_store_scale",  # beyond-paper: batched vs scalar reuse pipeline
     "async_serving",      # beyond-paper: event-driven serving core sweep
+    "cosim",              # beyond-paper: edge-to-TPU co-simulation sweep
     "roofline",           # §Roofline (reads dry-run artifacts)
 )
 

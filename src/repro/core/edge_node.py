@@ -24,6 +24,7 @@ from .lsh import LSHParams
 from .packets import Data, Interest
 from .namespace import parse_task_name
 from .reuse_store import ReuseStore
+from .sim_clock import Future
 
 
 @dataclasses.dataclass
@@ -68,6 +69,101 @@ class TTCEstimator:
         return base * (1 + queue_len)
 
 
+# ------------------------------------------------------------ compute seam
+@dataclasses.dataclass
+class ExecCompletion:
+    """Resolution payload of a ``ComputeBackend`` execution future.
+
+    ``t_done`` is the absolute virtual time the result exists at the EN —
+    the network schedules the ``Data``/TTC exchange from it.  ``reuse`` /
+    ``similarity`` report *backend-side* reuse (a serving replica's Content
+    Store or semantic store answered instead of the model); the inline
+    delay-sampled backend always executes, so it leaves them at the scratch
+    defaults."""
+
+    result: Any
+    t_done: float
+    reuse: Optional[str] = None        # 'cs' | 'en' | None (executed)
+    similarity: float = -1.0
+    replica: Optional[int] = None      # engine replica that produced it
+    backup: bool = False               # a straggler backup won the race
+
+
+class ComputeBackend:
+    """Seam between an EN's network-side task treatment and its execution.
+
+    The network decides *whether* a task must execute (reuse-store miss) and
+    owns the NDN protocol exchange; the backend decides *when the result
+    exists* and what produced it.  ``submit`` admits one scratch task and
+    returns a ``Future`` resolving with an ``ExecCompletion`` — no earlier
+    than virtual time ``t_done``:
+
+    * ``InlineBackend``  — the simulator's classic delay-sampled model
+      (calibrated exec-time sample + EN busy-queue); resolves synchronously,
+      so the surrounding code keeps exact legacy behaviour.
+    * ``serving.async_engine.EngineBackend`` — submits into a per-EN
+      ``AsyncServingEngine`` replica set sharing the network's event loop;
+      resolves when the engine's (batched, backup-raced) completion event
+      fires.
+    """
+
+    def attach(self, network) -> None:
+        """Bind to a ``ReservoirNetwork`` (loop, ENs, services)."""
+        raise NotImplementedError
+
+    def submit(self, node: Any, svc_name: str, interest: Interest,
+               emb: np.ndarray, lead_delay_s: float,
+               defer_inserts: Optional[List[Tuple[np.ndarray, Any]]] = None,
+               ) -> Future:
+        """Admit one scratch execution; ``lead_delay_s`` is EN-side work
+        (LSH search + input pull) that precedes execution."""
+        raise NotImplementedError
+
+    def ttc_estimate(self, node: Any, svc_name: str) -> float:
+        """Fig. 3b TTC answer for a task whose future is still pending."""
+        raise NotImplementedError
+
+
+class InlineBackend(ComputeBackend):
+    """Exact-parity inline execution: the pre-seam delay-sampled model.
+
+    Draws the exec-time sample from the *network's* RNG in the legacy order
+    and keeps busy-queue accounting in ``net._en_busy_until``, so a seeded
+    trace reproduces the pre-refactor ``Metrics.summary()`` bit-for-bit."""
+
+    def __init__(self):
+        self.net = None
+
+    def attach(self, network) -> None:
+        self.net = network
+
+    def submit(self, node, svc_name, interest, emb, lead_delay_s,
+               defer_inserts=None) -> Future:
+        net = self.net
+        en = net.edge_nodes[node]
+        svc = net.services[svc_name]
+        exec_t = svc.sample_exec_time(net._rng)
+        result = svc.execute(emb)
+        if defer_inserts is None:
+            en.stores[svc_name].insert(emb, result)
+        else:
+            defer_inserts.append((emb, result))
+        en.stats["executed"] += 1
+        en.ttc.observe(svc_name, exec_t)
+        start = max(net.loop.now + lead_delay_s, net._en_busy_until[node])
+        done = start + exec_t
+        net._en_busy_until[node] = done
+        fut = Future()
+        fut.set_result(ExecCompletion(result, done), now=net.loop.now)
+        return fut
+
+    def ttc_estimate(self, node, svc_name) -> float:
+        # Unused: inline futures resolve synchronously, so the network
+        # always answers with the exact ``t_done``-derived TTC.
+        en = self.net.edge_nodes[node]
+        return en.ttc.estimate(svc_name)
+
+
 @dataclasses.dataclass
 class TaskOutcome:
     data: Data
@@ -95,7 +191,15 @@ class EdgeNode:
         self.similarity = similarity
         self.queue_len = 0
         self._rng = random.Random(seed)
-        self.stats = {"reused": 0, "executed": 0, "unknown_service": 0}
+        self.stats = {
+            "reused": 0, "executed": 0, "unknown_service": 0,
+            # TTC-protocol fetch path (network co-sim, paper Fig. 3b):
+            "fetches": 0,        # solicited deferred-result fetch Interests
+            "early_fetches": 0,  # fetches answered with an updated TTC
+            "fetch_drops": 0,    # unsolicited/expired fetches (were silent)
+            "ready_expired": 0,  # TTC results never fetched, TTL-expired
+            "window_reuse": 0,   # intra-batch-window follower dedup hits
+        }
 
     def register(self, service: Service) -> None:
         name = service.name.strip("/")

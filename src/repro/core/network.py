@@ -23,18 +23,19 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import random
+import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import networkx as nx
 import numpy as np
 
-from .edge_node import EdgeNode, Service
+from .edge_node import ComputeBackend, EdgeNode, InlineBackend, Service
 from .forwarder import Forwarder
 from .lsh import LSHParams, get_lsh, normalize
 from .namespace import make_task_name
 from .packets import Data, Interest
 from .rfib import partition
-from .sim_clock import EventLoop, Timer
+from .sim_clock import EventLoop, Future, Timer
 
 APP_FACE = 0  # face id reserved for the local application on every node
 
@@ -77,6 +78,23 @@ class PaperDelayModel:
 
 # -------------------------------------------------------------------- records
 @dataclasses.dataclass
+class _ReadyEntry:
+    """TTC-protocol result awaiting its deferred fetch (paper Fig. 3b).
+
+    ``resolved`` is False while an engine-backed execution is still in
+    flight: ``done`` is then only the current TTC *estimate* and early
+    fetches are answered with a refreshed estimate.  ``timer`` is the TTL
+    expiry guard (tasks whose users never fetch must not leak entries)."""
+
+    done: float
+    result: Any = None
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    resolved: bool = False
+    timer: Optional[Timer] = None
+    service: str = ""
+
+
+@dataclasses.dataclass
 class TaskRecord:
     task_id: int
     user: str
@@ -86,6 +104,9 @@ class TaskRecord:
     t_complete: float = -1.0
     reuse: Optional[str] = None  # 'user' | 'cs' | 'en' | None (executed)
     reuse_node: Optional[str] = None
+    aggregated: bool = False     # completed by waiting on an in-flight
+                                 # near-identical leader (window dedup), not
+                                 # by an instantly-available stored result
     similarity: float = -1.0
     correct: Optional[bool] = None
     true_result: Any = None
@@ -171,15 +192,20 @@ class ReservoirNetwork:
         protocol: str = "direct",      # 'direct' | 'ttc' (paper Fig. 3b)
         large_input_bytes: int = 0,    # >0: Fig. 3c pull path for big inputs
         input_chunk_bytes: int = 8192,
+        en_ready_ttl_s: float = 60.0,  # TTC results kept past completion
+        backend: Optional[ComputeBackend] = None,  # EN execute-path seam
         seed: int = 0,
     ):
         assert mode in ("reservoir", "icedge")
         assert protocol in ("direct", "ttc")
+        assert backend is None or mode == "reservoir", \
+            "compute backends model the reservoir execute path only"
         self.mode = mode
         self.protocol = protocol
         self.large_input_bytes = large_input_bytes
         self.input_chunk_bytes = input_chunk_bytes
-        self._en_ready: Dict[Tuple[Any, str], Tuple[float, Any]] = {}
+        self.en_ready_ttl_s = float(en_ready_ttl_s)
+        self._en_ready: Dict[Tuple[Any, str], _ReadyEntry] = {}
         self.measure_fwd_errors = measure_fwd_errors
         self._pending_cb: Dict[Tuple[Any, str], List[Callable]] = {}
         self.graph = graph
@@ -201,8 +227,12 @@ class ReservoirNetwork:
         self._adjacency: Dict[Tuple[Any, Any], int] = {}  # (a, b) -> face at a
         self._face_count: Dict[Any, int] = {}
         for node in graph.nodes:
+            # Stable per-node seed: ``hash(str)`` is salted per *process*, so
+            # it made seeded runs irreproducible across invocations (and
+            # pinned-golden parity tests impossible); crc32 is deterministic.
             self.forwarders[node] = Forwarder(
-                f"/net/{node}", cs_capacity=cs_capacity, seed=seed + hash(str(node)) % 9973
+                f"/net/{node}", cs_capacity=cs_capacity,
+                seed=seed + zlib.crc32(str(node).encode()) % 9973,
             )
             self._face_count[node] = APP_FACE + 1
         for a, b in graph.edges:
@@ -224,6 +254,10 @@ class ReservoirNetwork:
         self._en_busy_until: Dict[Any, float] = {n: 0.0 for n in self.en_nodes}
         self.en_batch_window_s = float(en_batch_window_s)
         self._en_pending: Dict[Any, List[Interest]] = {n: [] for n in self.en_nodes}
+
+        # --- compute backend (EN execute-path seam; DESIGN.md §Co-sim)
+        self.backend: ComputeBackend = backend or InlineBackend()
+        self.backend.attach(self)
 
         # --- users
         self.users: Dict[str, Tuple[Any, Forwarder]] = {}
@@ -415,23 +449,24 @@ class ReservoirNetwork:
         qres: Tuple[Any, float, Optional[int]],
         search_t: float,
         defer_inserts: Optional[List[Tuple[np.ndarray, Any]]] = None,
-    ) -> None:
+    ) -> Optional[Future]:
         """Treat one reservoir task given its (result, sim, idx) query result.
 
         ``defer_inserts`` (batch path): executed results are accumulated for a
         single ``insert_batch`` by the caller instead of inserted one-by-one.
+        Returns the backend's ``ExecCompletion`` future for scratch tasks
+        (the batch path deduplicates near-identical window followers against
+        these) and ``None`` for reuse hits.
         """
         en = self.edge_nodes[node]
         svc_name = interest.app_params["service"]
-        svc = self.services[svc_name]
-        store = en.stores[svc_name]
         result, sim, idx = qres
         if idx is not None:
             en.stats["reused"] += 1
             data = Data(interest.name, content=result,
                         meta={"reuse": "en", "similarity": sim, "en": en.prefix})
             self._send_from_en(node, data, search_t)
-            return
+            return None
         # miss -> execute from scratch (charge queueing on the EN)
         fwd_err = (
             self._oracle_other_en_hit(node, svc_name, emb, threshold)
@@ -446,34 +481,40 @@ class ReservoirNetwork:
             rtt_est = 2 * (self.user_link_delay_s + 2 * self.link_delay_s)
             # pipelined chunk fetches: one RTT + serialisation tail
             pull_delay = rtt_est + (nchunks - 1) * 0.2e-3
-        exec_t = svc.sample_exec_time(self._rng)
-        result = svc.execute(emb)
-        if defer_inserts is None:
-            store.insert(emb, result)
-        else:
-            defer_inserts.append((emb, result))
-        en.stats["executed"] += 1
-        en.ttc.observe(svc_name, exec_t)
-        start = max(self._now + search_t + pull_delay,
-                    self._en_busy_until[node])
-        done = start + exec_t
-        self._en_busy_until[node] = done
+        fut = self.backend.submit(node, svc_name, interest, emb,
+                                  search_t + pull_delay,
+                                  defer_inserts=defer_inserts)
         if self.protocol == "ttc":
             # Fig. 3b: answer the task Interest with a TTC estimate; the
-            # user fetches the result at /<EN-prefix>/<name> after TTC-RTT
-            self._en_ready[(node, interest.name)] = (
-                done, result, {"reuse": None, "en": en.prefix,
-                               "fwd_error": fwd_err})
+            # user fetches the result at /<EN-prefix>/<name> after TTC-RTT.
+            # An inline future is already resolved (TTC is exact); an engine
+            # future is pending, so the answer is the engine's TTCEstimator-
+            # informed estimate and the ready entry fills in when the
+            # engine's completion event fires.
+            meta = {"reuse": None, "en": en.prefix, "fwd_error": fwd_err}
+            if fut.done:
+                comp = fut.result
+                entry = self._store_ready(node, interest.name, comp.t_done,
+                                          comp.result, meta, service=svc_name)
+            else:
+                est = max(self.backend.ttc_estimate(node, svc_name), 1e-4)
+                entry = self._store_ready(node, interest.name,
+                                          self._now + est, None, meta,
+                                          resolved=False, service=svc_name)
+                key = (node, interest.name)
+                fut.add_done_callback(
+                    lambda f: self._resolve_ready(key, entry, f))
             ttc_data = Data(
                 interest.name,
-                content={"ttc": done - self._now, "en_prefix": en.prefix},
+                content={"ttc": entry.done - self._now,
+                         "en_prefix": en.prefix},
                 meta={"control": "ttc", "cacheable": False, "en": en.prefix})
             self._send_from_en(node, ttc_data, search_t)
         else:
-            data = Data(interest.name, content=result,
-                        meta={"reuse": None, "en": en.prefix,
-                              "fwd_error": fwd_err})
-            self._send_from_en(node, data, done - self._now)
+            name = interest.name
+            fut.add_done_callback(
+                lambda f: self._deliver_completion(node, name, fwd_err, f))
+        return fut
 
     def _flush_en_batch(self, node: Any) -> None:
         """Service all tasks buffered at an EN with one query_batch/service.
@@ -499,13 +540,122 @@ class ReservoirNetwork:
                                for i in interests], np.float32)
             qres = store.query_batch(embs, thrs)
             to_insert: List[Tuple[np.ndarray, Any]] = []
+            # Intra-window dedup: ``defer_inserts`` postpones store inserts
+            # past the whole window, so without this two near-identical
+            # tasks in one window would both execute from scratch.  The most
+            # similar earlier miss above the follower's threshold becomes its
+            # leader: the follower reuses the leader's result (reuse="en")
+            # and completes when the leader's execution does.
+            leaders: List[Tuple[np.ndarray, Future]] = []
             for interest, emb, thr, qr in zip(interests, embs, thrs, qres):
-                self._process_reservoir_task(node, interest, emb, float(thr),
-                                             qr, search_t,
-                                             defer_inserts=to_insert)
+                _, _, idx = qr
+                if idx is None and leaders:
+                    sims = np.asarray([float(l[0] @ emb) for l in leaders])
+                    best = int(np.argmax(sims))
+                    if sims[best] >= float(thr):
+                        self._window_follower(node, interest,
+                                              leaders[best][1],
+                                              float(sims[best]))
+                        continue
+                fut = self._process_reservoir_task(node, interest, emb,
+                                                   float(thr), qr, search_t,
+                                                   defer_inserts=to_insert)
+                if fut is not None:
+                    leaders.append((emb, fut))
             if to_insert:
                 store.insert_batch(np.stack([e for e, _ in to_insert]),
                                    [r for _, r in to_insert])
+
+    def _window_follower(self, node: Any, interest: Interest,
+                         leader_fut: Future, sim: float) -> None:
+        """Resolve a deduped window follower from its leader's execution.
+
+        Reuse semantics match an EN store hit (the result exists once the
+        leader finishes), so the Data answers directly even under the TTC
+        protocol — paper Fig. 3a — at the leader's completion time.  With an
+        engine backend the leader's future resolves at its completion event,
+        so the follower's Data rides the same timeline (straggler-backup
+        wins included)."""
+        en = self.edge_nodes[node]
+        en.stats["reused"] += 1
+        en.stats["window_reuse"] += 1
+        name = interest.name
+
+        def deliver(fut: Future) -> None:
+            comp = fut.result
+            data = Data(name, content=comp.result,
+                        meta={"reuse": "en", "similarity": sim,
+                              "en": en.prefix, "window_agg": True})
+            self._send_from_en(node, data,
+                               max(comp.t_done - self._now, 0.0))
+
+        leader_fut.add_done_callback(deliver)
+
+    def _store_ready(self, node: Any, name: str, done: float, result: Any,
+                     meta: Dict[str, Any], resolved: bool = True,
+                     service: str = "") -> _ReadyEntry:
+        """Register a TTC-protocol deferred result with a TTL expiry guard.
+
+        Entries used to be popped only by an on-time fetch, so tasks whose
+        users never fetched (or crashed mid-early-fetch-loop) leaked forever;
+        the timer expires the entry ``en_ready_ttl_s`` after completion.
+        Unresolved (engine-backed, still executing) entries arm their timer
+        at resolution instead (``_resolve_ready``)."""
+        entry = _ReadyEntry(done, result, meta, resolved=resolved,
+                            service=service)
+        key = (node, name)
+        old = self._en_ready.get(key)
+        if old is not None and old.timer is not None:
+            old.timer.cancel()
+        self._en_ready[key] = entry
+        if resolved:
+            entry.timer = self.at(done + self.en_ready_ttl_s,
+                                  self._expire_ready, key, entry)
+        return entry
+
+    def _resolve_ready(self, key: Tuple[Any, str], entry: _ReadyEntry,
+                       fut: Future) -> None:
+        """Engine completion for a TTC-protocol task: fill the ready entry
+        (result, exact completion time, backend reuse attribution) and arm
+        its TTL guard; the user's scheduled fetch delivers from it."""
+        if self._en_ready.get(key) is not entry:
+            return  # TTL-expired or superseded before completion
+        comp = fut.result
+        entry.done = comp.t_done
+        entry.result = comp.result
+        entry.resolved = True
+        meta = dict(entry.meta)
+        if comp.reuse is not None:
+            meta["reuse"] = comp.reuse
+            meta["similarity"] = comp.similarity
+            meta["reuse_node"] = \
+                f"{self.edge_nodes[key[0]].prefix}/replica/{comp.replica}"
+        if comp.backup:
+            meta["backup"] = True
+        entry.meta = meta
+        entry.timer = self.at(comp.t_done + self.en_ready_ttl_s,
+                              self._expire_ready, key, entry)
+
+    def _deliver_completion(self, node: Any, name: str, fwd_err: bool,
+                            fut: Future) -> None:
+        """Direct protocol: the backend's result exists — answer the task
+        Interest through the EN's forwarder at ``t_done`` (immediately when
+        the future resolved at completion time, i.e. the engine path)."""
+        comp = fut.result
+        en = self.edge_nodes[node]
+        meta = {"reuse": comp.reuse, "en": en.prefix, "fwd_error": fwd_err}
+        if comp.reuse is not None:
+            meta["similarity"] = comp.similarity
+            meta["reuse_node"] = f"{en.prefix}/replica/{comp.replica}"
+        if comp.backup:
+            meta["backup"] = True
+        data = Data(name, content=comp.result, meta=meta)
+        self._send_from_en(node, data, max(comp.t_done - self._now, 0.0))
+
+    def _expire_ready(self, key: Tuple[Any, str], entry: _ReadyEntry) -> None:
+        if self._en_ready.get(key) is entry:
+            self._en_ready.pop(key, None)
+            self.edge_nodes[key[0]].stats["ready_expired"] += 1
 
     def _en_fetch(self, node: Any, interest: Interest) -> None:
         """Deferred result fetch at an EN (paper Fig. 3b, second exchange)."""
@@ -513,18 +663,31 @@ class ReservoirNetwork:
         orig = interest.name[len(en.prefix):]
         entry = self._en_ready.get((node, orig))
         if entry is None:
-            return  # unsolicited; drop
-        done, result, meta = entry
-        if done <= self._now + 1e-9:
+            en.stats["fetch_drops"] += 1  # unsolicited or expired; drop
+            return
+        en.stats["fetches"] += 1
+        if entry.resolved and entry.done <= self._now + 1e-9:
             self._en_ready.pop((node, orig), None)
-            data = Data(interest.name, content=result, meta=dict(meta))
+            if entry.timer is not None:
+                entry.timer.cancel()
+            data = Data(interest.name, content=entry.result,
+                        meta=dict(entry.meta))
             self._send_from_en(node, data, 0.0)
         else:  # early fetch: respond with an updated TTC (paper §IV-C)
+            en.stats["early_fetches"] += 1
+            ttc = (entry.done - self._now if entry.resolved
+                   else self._backend_ttc(node, orig, entry))
             data = Data(interest.name,
-                        content={"ttc": done - self._now, "en_prefix": en.prefix},
+                        content={"ttc": ttc, "en_prefix": en.prefix},
                         meta={"control": "ttc", "cacheable": False,
                               "en": en.prefix})
             self._send_from_en(node, data, 0.0)
+
+    def _backend_ttc(self, node: Any, name: str, entry: _ReadyEntry) -> float:
+        """TTC refresh for a still-executing (engine-backed) task."""
+        if entry.service:
+            return max(self.backend.ttc_estimate(node, entry.service), 1e-4)
+        return max(entry.done - self._now, 1e-4)
 
     def _send_from_en(self, node: Any, data: Data, delay: float) -> None:
         fwd = self.forwarders[node]
@@ -586,20 +749,31 @@ class ReservoirNetwork:
                 tag = icedge_tag(emb, self.icedge_tag_bits)
                 name = f"/{service.strip('/')}/ictask/{tag}"
                 hash_t = 10e-6  # cheap semantic-name construction
-                en_node = self.en_nodes[hash(tag) % len(self.en_nodes)]
+                # crc32, not hash(): str hash() is process-salted, which made
+                # seeded icedge runs route to different ENs per process
+                en_node = self.en_nodes[
+                    zlib.crc32(tag.encode()) % len(self.en_nodes)]
                 hint = self.edge_nodes[en_node].prefix
             rec.name = name
+            # Send time of the latest Interest for this task.  The RTT that
+            # schedules the Fig. 3b result fetch must be measured from it:
+            # measuring from t_submit (the old behaviour) folds the whole
+            # elapsed TTC wait into the "RTT" on every re-fetch round, so the
+            # estimate grew each round and the fetch wait collapsed toward 0
+            # (fetch spam) instead of tracking the actual interest RTT.
+            sent_at = [t0]
 
             def on_result(data: Data, t: float):
                 if rec.t_complete >= 0:
                     return
                 if data.meta.get("control") == "ttc":
                     # Fig. 3b: schedule the result fetch at TTC - RTT
-                    rtt = max(t - rec.t_submit, 1e-4)
+                    rtt = max(t - sent_at[0], 1e-4)
                     wait = max(float(data.content["ttc"]) - rtt, 0.0)
                     fetch_name = data.content["en_prefix"] + name
 
                     def fetch():
+                        sent_at[0] = self._now
                         self._pending_cb.setdefault(
                             (node, fetch_name), []).append(on_result)
                         actions = fwd.on_interest(
@@ -619,6 +793,7 @@ class ReservoirNetwork:
                     rec.reuse = reuse
                     rec.reuse_node = data.meta.get("en")
                 rec.similarity = float(data.meta.get("similarity", -1.0))
+                rec.aggregated = bool(data.meta.get("window_agg", False))
                 rec.forwarding_error = bool(data.meta.get("fwd_error", False))
                 if rec.reuse is not None:
                     rec.correct = results_match(rec.result, rec.true_result)

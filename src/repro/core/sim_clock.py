@@ -138,3 +138,15 @@ class Future:
             fn(self)
         else:
             self._callbacks.append(fn)
+
+    def then(self, fn: Callable[[Any], Any]) -> "Future":
+        """Derived future resolving with ``fn(result)`` when this one does.
+
+        The adaptation seam between result vocabularies (e.g. a serving
+        engine's ``ServeResult`` -> the network's ``ExecCompletion``): the
+        derived future inherits ``resolved_at``, so virtual-time attribution
+        survives the mapping.  Resolves inline if this future is done."""
+        out = Future()
+        self.add_done_callback(
+            lambda f: out.try_set_result(fn(f._result), now=f.resolved_at))
+        return out

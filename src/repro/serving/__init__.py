@@ -1,3 +1,3 @@
-from .async_engine import AsyncServingEngine  # noqa: F401
+from .async_engine import AsyncServingEngine, EngineBackend  # noqa: F401
 from .batcher import Batcher  # noqa: F401
 from .engine import ReplicaEngine, ReuseRouter, ServeRequest, ServeResult, ServingFleet  # noqa: F401

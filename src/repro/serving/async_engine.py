@@ -35,10 +35,14 @@ loop (``engine.py``), which is what makes scalar parity testable.
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import random
+import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.edge_node import ComputeBackend, ExecCompletion
 from repro.core.lsh import LSHParams, normalize
 from repro.core.packets import Data
 from repro.core.sim_clock import EventLoop, Future, Timer
@@ -83,9 +87,14 @@ class AsyncServingEngine:
         max_wait_s: float = 0.005,
         exec_time_fn: Optional[
             Callable[[int, str, List[ServeRequest]], float]] = None,
+        bucket_range: Optional[Tuple[int, int]] = None,
     ):
-        self.loop = loop or EventLoop()
-        self.router = ReuseRouter(lsh_params, len(replicas))
+        # NOT ``loop or EventLoop()``: EventLoop.__len__ makes an *empty*
+        # loop falsy, which silently discarded a shared (not-yet-populated)
+        # loop and broke co-scheduling with the network simulator.
+        self.loop = loop if loop is not None else EventLoop()
+        self.router = ReuseRouter(lsh_params, len(replicas),
+                                  bucket_range=bucket_range)
         self.replicas = replicas
         self.backup = backup or BackupPolicy()
         self.batcher = Batcher(max_batch=max_batch, max_wait_s=max_wait_s)
@@ -293,5 +302,169 @@ class AsyncServingEngine:
         out: Dict[str, int] = dict(self.engine_stats)
         for r in self.replicas:
             for k, v in r.stats.items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+
+# ------------------------------------------------------------------- co-sim
+class EngineBackend(ComputeBackend):
+    """``ComputeBackend`` (core/edge_node.py seam) backed by per-EN
+    ``AsyncServingEngine`` replica sets on the *network's* event loop.
+
+    This is the edge-to-TPU co-simulation seam (ROADMAP "Async network
+    co-simulation"): a ``ReservoirNetwork`` EN whose reuse store missed
+    submits the task into its attached serving engine instead of sampling an
+    inline delay.  Forwarding and execution then share one timeline —
+
+    * the EN's batch window flushes admit one ``ServeRequest`` per miss at
+      ``now + lead_delay_s`` (the LSH search / input pull precede the
+      accelerator queue); the engine's own deadline-aware ``Batcher``
+      re-batches them per (replica, service),
+    * queueing, batching, replica-store reuse, PIT coalescing, and
+      TTC-driven straggler backups all run as engine events on the shared
+      clock, and every resolution — including a backup's win — propagates
+      back as a network-visible NDN completion,
+    * Fig. 3b TTC answers come from the engines' ``TTCEstimator``s
+      (EWMA-informed once real executions exist) plus the batcher window,
+      not from an omniscient ``done - now``.
+
+    Executed results are also inserted into the EN's own reuse store at
+    completion time, so network-edge reuse (and cross-EN forwarding-error
+    accounting) keeps working exactly as with the inline model.  Virtual
+    execution time defaults to the service's calibrated ``exec_time_s``
+    sample with sub-linear batch amortisation (``len(batch) **
+    batch_alpha``), overridable via ``exec_time_fn`` for straggler
+    injection."""
+
+    def __init__(
+        self,
+        n_replicas: int = 2,
+        max_batch: int = 8,
+        max_wait_s: float = 0.002,
+        backup: Optional[BackupPolicy] = None,
+        batch_alpha: float = 0.5,
+        exec_time_fn: Optional[
+            Callable[[int, str, List[ServeRequest]], float]] = None,
+        replica_store_capacity: int = 100_000,
+        replica_cs_capacity: int = 4096,
+        wall_time: bool = False,
+        seed: int = 0,
+    ):
+        self.n_replicas = n_replicas
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.backup = backup
+        self.batch_alpha = batch_alpha
+        self.exec_time_fn = exec_time_fn
+        self.replica_store_capacity = replica_store_capacity
+        self.replica_cs_capacity = replica_cs_capacity
+        # wall_time: charge the *measured* wall duration of execute_fn as
+        # the virtual batch duration (real-model-behind-simulated-network
+        # mode) instead of sampling the service's calibrated exec_time_s
+        self.wall_time = wall_time
+        self.seed = seed
+        self.net = None
+        self.engines: Dict[Any, AsyncServingEngine] = {}
+        self._ids = itertools.count()
+
+    # ------------------------------------------------------------ wiring
+    def attach(self, network) -> None:
+        self.net = network
+        self.engines = {}
+        n_ens = len(network.en_nodes)
+        nb = network.lsh_params.effective_buckets
+        for idx, node in enumerate(network.en_nodes):
+            node_seed = self.seed + zlib.crc32(str(node).encode()) % 9973
+            replicas = [
+                ReplicaEngine(
+                    i, network.lsh_params, self._execute,
+                    cs_capacity=self.replica_cs_capacity,
+                    store_capacity=self.replica_store_capacity)
+                for i in range(self.n_replicas)
+            ]
+            # Each EN's replica router partitions the EN's *own* rFIB bucket
+            # subrange (the same consecutive split core.rfib.partition
+            # installs, in en_nodes order).  Re-partitioning the full space
+            # would be the nested-partition pathology: the network already
+            # localized this EN's tasks to one slice, so every task would
+            # land on a single replica regardless of the replica count.
+            bucket_range = (round(idx * nb / n_ens),
+                            round((idx + 1) * nb / n_ens))
+            self.engines[node] = AsyncServingEngine(
+                network.lsh_params, replicas,
+                backup=self.backup or BackupPolicy(),
+                loop=network.loop, max_batch=self.max_batch,
+                max_wait_s=self.max_wait_s,
+                exec_time_fn=None if self.wall_time else (
+                    self.exec_time_fn or self._virtual_exec_time(
+                        random.Random(node_seed))),
+                bucket_range=bucket_range,
+            )
+
+    def _execute(self, reqs: List[ServeRequest]) -> List[Any]:
+        """Replica execute_fn: run the registered edge service on each
+        payload (the task's input embedding, exactly as the inline model)."""
+        return [self.net.services[r.service].execute(
+            np.asarray(r.payload, np.float32)) for r in reqs]
+
+    def _virtual_exec_time(self, rng: random.Random):
+        """Virtual batch duration: one calibrated per-request sample with
+        sub-linear amortisation — the model batch shares prefill work."""
+
+        def fn(rid: int, service: str, reqs: List[ServeRequest]) -> float:
+            per_req = self.net.services[service].sample_exec_time(rng)
+            return per_req * max(1.0, len(reqs)) ** self.batch_alpha
+
+        return fn
+
+    # ------------------------------------------------------------ seam API
+    def submit(self, node, svc_name, interest, emb, lead_delay_s,
+               defer_inserts=None) -> Future:
+        net = self.net
+        engine = self.engines[node]
+        req = ServeRequest(
+            next(self._ids), svc_name, emb, payload=emb,
+            threshold=float(interest.app_params.get("threshold", 0.0)),
+            deadline_s=interest.app_params.get("deadline"))
+        out = Future()
+
+        def adapt(sr: ServeResult) -> ExecCompletion:
+            # ServeResult -> ExecCompletion vocabulary mapping, running at
+            # the engine's completion instant (Future.then inherits it)
+            t = net.loop.now
+            en = net.edge_nodes[node]
+            if sr.reuse is None:
+                # a real scratch execution: the network-edge reuse store
+                # learns the result at the moment it exists on the engine
+                en.stats["executed"] += 1
+                en.stores[svc_name].insert(emb, sr.result)
+            return ExecCompletion(sr.result, t, reuse=sr.reuse,
+                                  similarity=sr.similarity,
+                                  replica=sr.replica, backup=sr.backup)
+
+        def admit() -> None:
+            engine.submit(req).then(adapt).add_done_callback(
+                lambda f: out.try_set_result(f.result, now=f.resolved_at))
+
+        if lead_delay_s > 0:
+            net.loop.call_later(lead_delay_s, admit)
+        else:
+            admit()
+        return out
+
+    def ttc_estimate(self, node, svc_name) -> float:
+        """Fig. 3b TTC answer while the engine still runs: the replicas'
+        EWMA service-time estimate plus one batcher flush window."""
+        engine = self.engines[node]
+        est = float(np.mean([r.ttc.estimate(svc_name)
+                             for r in engine.replicas]))
+        return est + engine.batcher.max_wait_s
+
+    # ------------------------------------------------------------- metrics
+    def stats(self) -> Dict[str, int]:
+        """Engine counters aggregated across all ENs' replica sets."""
+        out: Dict[str, int] = {}
+        for engine in self.engines.values():
+            for k, v in engine.stats().items():
                 out[k] = out.get(k, 0) + v
         return out

@@ -67,6 +67,7 @@ class ReplicaEngine:
         self.params = lsh_params
         self.execute_fn = execute_fn
         self.cs = ContentStore(cs_capacity)
+        self.store_capacity = store_capacity
         self.stores: Dict[str, ReuseStore] = {}
         self.ttc = TTCEstimator()
         self.lsh_params = lsh_params
@@ -75,7 +76,9 @@ class ReplicaEngine:
 
     def _store(self, service: str) -> ReuseStore:
         if service not in self.stores:
-            self.stores[service] = ReuseStore(self.params, capacity=100_000)
+            # was hardcoded to 100_000, silently ignoring the ctor argument
+            self.stores[service] = ReuseStore(
+                self.params, capacity=self.store_capacity)
         return self.stores[service]
 
     # -------------------------------------------------- composable stages
@@ -270,17 +273,27 @@ class ReplicaEngine:
 
 
 class ReuseRouter:
-    """rFIB-equivalent: consecutive LSH bucket ranges -> replica ids."""
+    """rFIB-equivalent: consecutive LSH bucket ranges -> replica ids.
 
-    def __init__(self, lsh_params: LSHParams, n_replicas: int):
+    ``bucket_range`` restricts the partitioned span to ``[lo, hi)`` instead
+    of the full ``effective_buckets``.  This matters when the router sits
+    *behind* another range partition (edge-to-TPU co-sim: the network's rFIB
+    already sliced the bucket space across ENs, so a per-EN replica set that
+    re-partitions the full space would map every local task onto a single
+    replica — the nested-partition pathology).  Buckets outside the span
+    clamp to the nearest edge replica."""
+
+    def __init__(self, lsh_params: LSHParams, n_replicas: int,
+                 bucket_range: Optional[Tuple[int, int]] = None):
         self.params = lsh_params
         self.lsh = get_lsh(lsh_params)
         self.n_replicas = n_replicas
+        self.bucket_range = bucket_range or (0, lsh_params.effective_buckets)
         self._bounds = self._make_bounds(n_replicas)
 
     def _make_bounds(self, n: int) -> List[int]:
-        nb = self.params.effective_buckets
-        return [round(i * nb / n) for i in range(n + 1)]
+        lo, hi = self.bucket_range
+        return [lo + round(i * (hi - lo) / n) for i in range(n + 1)]
 
     def rescale(self, n_replicas: int) -> None:
         """Elastic event: re-partition ranges (consistent, consecutive)."""
@@ -288,6 +301,8 @@ class ReuseRouter:
         self._bounds = self._make_bounds(n_replicas)
 
     def _owner(self, bucket: int) -> int:
+        if bucket < self._bounds[0]:
+            return 0
         for i in range(self.n_replicas):
             if self._bounds[i] <= bucket < self._bounds[i + 1]:
                 return i

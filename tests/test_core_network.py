@@ -2,6 +2,10 @@
 import numpy as np
 import pytest
 
+from repro.core import ReservoirNetwork
+from repro.core.edge_node import Service
+from repro.core.lsh import normalize
+from repro.core.topology import line_topology
 from repro.core import (
     FIB,
     ContentStore,
@@ -194,3 +198,117 @@ class TestForwarderPipeline:
         bad = Data(name, content=1)
         bad.signature ^= 0xFF
         assert fwd.on_data(bad, 5, 0.1) == []
+
+
+# ---------------------------------------------------------------- TTC path
+def _ttc_net(exec_time=0.5, link=1e-4, window=0.0, num_tables=10,
+             backend=None, **kw):
+    """Single-EN line topology running the Fig. 3b TTC protocol on the
+    virtual clock: user -> 0 -> 1 -> 2(EN).  Tiny links make the EN-side
+    hash+search delta dominate the RTT, which is what exercises the
+    early-fetch / re-fetch machinery deterministically."""
+    params = LSHParams(dim=16, num_tables=num_tables, num_probes=8)
+    g, ens = line_topology(2, link_delay_s=link)
+    net = ReservoirNetwork(g, ens, params, seed=0, protocol="ttc",
+                           user_link_delay_s=link, en_batch_window_s=window,
+                           backend=backend, **kw)
+    net.register_service(Service(
+        "/svc", execute=lambda x: round(float(np.sum(x)), 5),
+        exec_time_s=exec_time, input_dim=16))
+    net.add_user("u1", 0)
+    net.add_user("u2", 0)
+    return net
+
+
+def _mix(base: np.ndarray, cos: float, seed: int = 5) -> np.ndarray:
+    """A unit vector at exactly ``cos`` similarity to ``base``."""
+    rng = np.random.default_rng(seed)
+    base = normalize(base)
+    r = rng.standard_normal(base.shape).astype(np.float32)
+    perp = normalize(r - (r @ base) * base)
+    return cos * base + np.sqrt(1.0 - cos * cos) * perp
+
+
+class TestTTCPath:
+    """Fig. 3b exchange: TTC response -> scheduled fetch -> delivery."""
+
+    def test_scheduled_fetch_delivers(self):
+        net = _ttc_net(exec_time=0.2)
+        rec = net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        net.run()
+        en = net.edge_nodes[net.en_nodes[0]]
+        assert rec.t_complete >= 0.2          # waited for the execution
+        assert rec.reuse is None
+        assert en.stats["fetches"] >= 1       # result came via the fetch
+        assert rec.t_complete == pytest.approx(0.2, abs=0.05)
+        assert not net._en_ready              # delivered entries are popped
+
+    def test_early_fetch_gets_updated_ttc(self):
+        net = _ttc_net(exec_time=0.5)
+        rec = net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        net.run()
+        en = net.edge_nodes[net.en_nodes[0]]
+        # the first-round RTT estimate includes the user-side hash time, so
+        # the first fetch lands before ``done`` and is answered with an
+        # updated TTC instead of the result
+        assert en.stats["early_fetches"] >= 1
+        assert rec.t_complete == pytest.approx(0.5, abs=0.05)
+
+    def test_refetch_rtt_not_inflated(self):
+        """Regression (ISSUE 4): the re-fetch RTT must be measured from the
+        last Interest's *send time*.  The old computation used
+        ``t - rec.t_submit``, which on every extra TTC round folded the whole
+        elapsed TTC wait into the "RTT", collapsing the fetch wait toward 0:
+        on this topology that yields 6+ early fetches (fetch spam) for the
+        single task; measuring from the send time needs at most 3."""
+        net = _ttc_net(exec_time=0.5, link=2e-5)
+        rec = net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        net.run()
+        en = net.edge_nodes[net.en_nodes[0]]
+        assert rec.t_complete == pytest.approx(0.5, abs=0.02)
+        assert en.stats["early_fetches"] <= 3
+        assert en.stats["fetches"] == en.stats["early_fetches"] + 1
+
+    def test_ready_entry_expires_when_never_fetched(self):
+        """Regression (ISSUE 4): _en_ready entries used to be popped only by
+        an on-time fetch, so un-fetched results leaked forever."""
+        net = _ttc_net(exec_time=0.05, en_ready_ttl_s=1.0)
+        en_node = net.en_nodes[0]
+        en = net.edge_nodes[en_node]
+        emb = normalize(np.ones(16, np.float32))
+        buckets = net.lsh.hash_one(emb)
+        name = make_task_name("/svc", buckets, net.lsh_params.index_size_bytes)
+        interest = Interest(name, app_params={
+            "service": "svc", "input": emb, "threshold": 0.9})
+        # inject straight at the EN app: no user ever fetches the result
+        net.at(0.0, net._en_receive, en_node, interest)
+        net.run()
+        assert en.stats["ready_expired"] == 1
+        assert not net._en_ready
+
+    def test_unsolicited_fetch_counted_not_silent(self):
+        net = _ttc_net()
+        en_node = net.en_nodes[0]
+        en = net.edge_nodes[en_node]
+        net._en_fetch(en_node, Interest(en.prefix + "/svc/task/00"))
+        assert en.stats["fetch_drops"] == 1
+
+    def test_window_dedupe_intra_batch(self):
+        """Regression (ISSUE 4): two near-identical tasks inside one EN batch
+        window must not both execute — the second reuses the first."""
+        net = _ttc_net(exec_time=0.1, window=0.02)
+        base = normalize(np.ones(16, np.float32))
+        other = _mix(base, 0.8)
+        r1 = net.submit_task("u1", "svc", base, 0.6, at_time=0.0)
+        r2 = net.submit_task("u2", "svc", other, 0.6, at_time=0.001)
+        net.run()
+        en = net.edge_nodes[net.en_nodes[0]]
+        assert en.stats["executed"] == 1
+        assert en.stats["window_reuse"] == 1
+        assert r1.reuse is None
+        assert r2.reuse == "en"
+        assert r2.similarity == pytest.approx(0.8, abs=1e-5)
+        # the follower's result exists only once the leader executed: it
+        # completes with (not before) the leader
+        assert r2.t_complete >= 0.1
+        assert abs(r2.t_complete - r1.t_complete) < 0.02

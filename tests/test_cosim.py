@@ -1,0 +1,300 @@
+"""Edge-to-TPU co-simulation tests (ISSUE 4).
+
+Two halves:
+
+* ``TestInlineParity`` — the ComputeBackend seam must be *behaviour
+  preserving*: ``ReservoirNetwork`` with the default ``InlineBackend`` has
+  to reproduce the pre-seam inline execute path bit-for-bit.  ``LegacyNet``
+  below carries the pre-refactor miss path verbatim (delay-sampled, no
+  futures) as an in-process reference; a seeded 500-task trace must match
+  per-task completion times exactly for both protocols, plus pinned
+  cross-process golden summaries.
+
+* ``TestEngineCosim`` — with ``EngineBackend`` the same network drives
+  per-EN ``AsyncServingEngine`` replica sets on the shared event loop:
+  every task completes, engine-side reuse/backup wins propagate back as
+  network-visible completions, TTC answers come from the engines'
+  estimators, and the scratch-vs-reuse completion gap survives queueing.
+"""
+import numpy as np
+import pytest
+
+from repro.core import LSHParams, ReservoirNetwork
+from repro.core.edge_node import ExecCompletion, Service
+from repro.core.lsh import normalize
+from repro.core.network import Data
+from repro.core.sim_clock import Future
+from repro.core.topology import line_topology
+from repro.core.topology import testbed_topology as _testbed_topology
+from repro.data import DATASETS, dataset_service, make_stream
+from repro.serving import EngineBackend
+from repro.training.elastic import BackupPolicy
+
+
+# --------------------------------------------------------------- reference
+class LegacyNet(ReservoirNetwork):
+    """Pre-seam reference: the delay-sampled inline miss path, verbatim.
+
+    This is the exact ``_process_reservoir_task`` body the simulator had
+    before the ComputeBackend refactor (modulo returning a resolved future
+    so the window-dedup bookkeeping keeps working).  Do not "improve" it —
+    its whole value is being frozen."""
+
+    def _process_reservoir_task(self, node, interest, emb, threshold, qres,
+                                search_t, defer_inserts=None):
+        en = self.edge_nodes[node]
+        svc_name = interest.app_params["service"]
+        svc = self.services[svc_name]
+        store = en.stores[svc_name]
+        result, sim, idx = qres
+        if idx is not None:
+            en.stats["reused"] += 1
+            data = Data(interest.name, content=result,
+                        meta={"reuse": "en", "similarity": sim,
+                              "en": en.prefix})
+            self._send_from_en(node, data, search_t)
+            return None
+        fwd_err = (self._oracle_other_en_hit(node, svc_name, emb, threshold)
+                   if self.measure_fwd_errors else False)
+        pull_delay = 0.0
+        input_size = int(interest.app_params.get("input_size", 0))
+        if self.large_input_bytes and input_size > self.large_input_bytes:
+            nchunks = -(-input_size // self.input_chunk_bytes)
+            rtt_est = 2 * (self.user_link_delay_s + 2 * self.link_delay_s)
+            pull_delay = rtt_est + (nchunks - 1) * 0.2e-3
+        exec_t = svc.sample_exec_time(self._rng)
+        result = svc.execute(emb)
+        if defer_inserts is None:
+            store.insert(emb, result)
+        else:
+            defer_inserts.append((emb, result))
+        en.stats["executed"] += 1
+        en.ttc.observe(svc_name, exec_t)
+        start = max(self._now + search_t + pull_delay,
+                    self._en_busy_until[node])
+        done = start + exec_t
+        self._en_busy_until[node] = done
+        if self.protocol == "ttc":
+            self._store_ready(node, interest.name, done, result,
+                              {"reuse": None, "en": en.prefix,
+                               "fwd_error": fwd_err})
+            ttc_data = Data(
+                interest.name,
+                content={"ttc": done - self._now, "en_prefix": en.prefix},
+                meta={"control": "ttc", "cacheable": False, "en": en.prefix})
+            self._send_from_en(node, ttc_data, search_t)
+        else:
+            data = Data(interest.name, content=result,
+                        meta={"reuse": None, "en": en.prefix,
+                              "fwd_error": fwd_err})
+            self._send_from_en(node, data, done - self._now)
+        fut = Future()
+        fut.set_result(ExecCompletion(result, done), now=self._now)
+        return fut
+
+
+def _trace(cls, protocol, window, n_tasks=500, backend=None):
+    params = LSHParams(dim=64, num_tables=5, num_probes=8)
+    g, ens = _testbed_topology()
+    net = cls(g, ens, params, seed=0, protocol=protocol,
+              en_batch_window_s=window, measure_fwd_errors=True,
+              backend=backend)
+    spec = DATASETS["stanford_ar"]
+    net.register_service(dataset_service(spec))
+    for u in range(3):
+        net.add_user(f"u{u}", "fwd1" if u % 2 else "fwd2")
+    X, _ = make_stream(spec, n_tasks, seed=7)
+    t = 0.0
+    for i, x in enumerate(X):
+        net.submit_task(f"u{i % 3}", spec.name, x, 0.9, at_time=t)
+        t += 0.012
+    net.run()
+    return net
+
+
+def _key(r):
+    return (r.t_complete, r.reuse, r.similarity, r.correct,
+            r.forwarding_error, r.reuse_node)
+
+
+# Cross-process goldens for the seeded 500-task acceptance trace, captured
+# from the pre-seam code (LegacyNet path) after the satellite bugfixes.
+# Reproducible across processes since forwarder seeding moved off the
+# salted ``hash()``; compared at rel=1e-9 only to tolerate BLAS differences
+# across platforms — the in-process A/B below is the bit-for-bit assertion.
+GOLDEN = {
+    "direct": {
+        "tasks": 500,
+        "mean_ct_scratch": 0.11743256895503866,
+        "mean_ct_cs": 0.006210639836999299,
+        "mean_ct_en": 0.015915092919248766,
+        "reuse_pct": 84.0,
+        "reuse_pct_cs": 28.4,
+        "reuse_pct_en": 55.60000000000001,
+        "accuracy_pct": 100.0,
+        "fwd_error_pct": 6.800000000000001,
+    },
+    "ttc": {
+        "tasks": 500,
+        "mean_ct_scratch": 0.13539679846951094,
+        "mean_ct_cs": 0.006334329121343468,
+        "mean_ct_en": 0.015930518390692365,
+        "reuse_pct": 86.6,
+        "reuse_pct_cs": 28.000000000000004,
+        "reuse_pct_en": 58.599999999999994,
+        "accuracy_pct": 100.0,
+        "fwd_error_pct": 6.0,
+    },
+}
+
+
+class TestInlineParity:
+    @pytest.mark.parametrize("protocol", ("direct", "ttc"))
+    def test_bit_for_bit_500_tasks(self, protocol):
+        old = _trace(LegacyNet, protocol, 0.0)
+        new = _trace(ReservoirNetwork, protocol, 0.0)
+        assert len(new.metrics.records) == 500
+        for a, b in zip(old.metrics.records, new.metrics.records):
+            assert _key(a) == _key(b)
+        assert old.metrics.summary() == new.metrics.summary()
+        s = new.metrics.summary()
+        for k, v in GOLDEN[protocol].items():
+            assert s[k] == pytest.approx(v, rel=1e-9), k
+
+    @pytest.mark.parametrize("protocol", ("direct", "ttc"))
+    def test_bit_for_bit_batch_window(self, protocol):
+        """Same parity through the batched (windowed) EN path, including
+        the intra-window dedup bookkeeping."""
+        old = _trace(LegacyNet, protocol, 0.024, n_tasks=250)
+        new = _trace(ReservoirNetwork, protocol, 0.024, n_tasks=250)
+        for a, b in zip(old.metrics.records, new.metrics.records):
+            assert _key(a) == _key(b)
+        assert old.metrics.summary() == new.metrics.summary()
+
+
+# ------------------------------------------------------------ engine co-sim
+def _engine_net(protocol="direct", window=0.01, exec_time=(0.070, 0.100),
+                n_replicas=2, backend_kw=None, link=1e-3):
+    params = LSHParams(dim=16, num_tables=5, num_probes=8)
+    g, ens = line_topology(2, link_delay_s=link)
+    be = EngineBackend(n_replicas=n_replicas, max_batch=8, max_wait_s=0.004,
+                       seed=3, **(backend_kw or {}))
+    net = ReservoirNetwork(g, ens, params, seed=0, protocol=protocol,
+                           user_link_delay_s=link, en_batch_window_s=window,
+                           backend=be)
+    net.register_service(Service(
+        "/svc", execute=lambda x: round(float(np.sum(x)), 5),
+        exec_time_s=exec_time, input_dim=16))
+    net.add_user("u1", 0)
+    net.add_user("u2", 0)
+    return net, be
+
+
+def _stream(n, dim=16, seed=11, centers=6, noise=0.05):
+    rng = np.random.default_rng(seed)
+    base = normalize(rng.standard_normal((centers, dim)).astype(np.float32))
+    picks = rng.integers(0, centers, n)
+    return normalize(base[picks]
+                     + noise * rng.standard_normal((n, dim)).astype(np.float32))
+
+
+class TestEngineCosim:
+    @pytest.mark.parametrize("protocol", ("direct", "ttc"))
+    def test_all_complete_with_attribution(self, protocol):
+        net, be = _engine_net(protocol=protocol)
+        X = _stream(80)
+        t = 0.0
+        for i, x in enumerate(X):
+            net.submit_task("u1" if i % 2 else "u2", "svc", x, 0.9, at_time=t)
+            t += 0.008
+        net.run()
+        recs = net.metrics.records
+        assert all(r.t_complete >= 0 for r in recs)
+        es = be.stats()
+        assert es["executed"] > 0
+        # engine scratch executions feed the EN's own store: network-edge
+        # reuse keeps working in front of the engine
+        en = net.edge_nodes[net.en_nodes[0]]
+        assert en.stats["reused"] > 0 or es["en"] > 0
+        assert not net._en_ready        # TTC entries all delivered/expired
+        # reuse is faster than scratch end-to-end on the shared timeline
+        m = net.metrics
+        assert m.mean_completion(kind=(None,)) > m.mean_completion(
+            kind=("en", "cs", "user"))
+
+    def test_ttc_answers_come_from_engine_estimator(self):
+        net, be = _engine_net(protocol="ttc", window=0.0, exec_time=0.2)
+        node = net.en_nodes[0]
+        # cold estimator: the first TTC answer must be the engine's prior-
+        # based estimate (no real observations yet), not an omniscient done
+        est0 = be.ttc_estimate(node, "svc")
+        assert est0 == pytest.approx(
+            be.engines[node].replicas[0].ttc.initial + be.max_wait_s)
+        rec = net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        net.run()
+        assert rec.t_complete >= 0.2
+        # after the execution the EWMA is informed and moves toward 0.2
+        assert be.ttc_estimate(node, "svc") > est0
+
+    def test_backup_win_propagates_to_network(self):
+        calls = []
+
+        def exec_time_fn(rid, service, reqs):
+            calls.append(rid)
+            return 3.0 if len(calls) == 1 else 0.05
+
+        net, be = _engine_net(
+            protocol="direct", window=0.0,
+            backend_kw={"backup": BackupPolicy(factor=1.5, max_backups=1),
+                        "exec_time_fn": exec_time_fn})
+        node = net.en_nodes[0]
+        for r in be.engines[node].replicas:
+            r.ttc.observe("svc", 0.05)  # informed TTC arms backup timers
+        rec = net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        net.run()
+        es = be.stats()
+        assert es["backups"] == 1
+        assert es["backup_wins"] == 1
+        # the straggling primary (3 s) lost; the network saw the backup's
+        # completion, not the straggler's
+        assert 0 <= rec.t_complete < 1.0
+        assert rec.reuse is None
+        # loser commit skipped: exactly one execution counted fleet-wide
+        assert es["executed"] == 1
+
+    def test_window_dedupe_rides_leader_future(self):
+        net, be = _engine_net(protocol="direct", window=0.02, exec_time=0.1)
+        base = normalize(np.ones(16, np.float32))
+        rng = np.random.default_rng(5)
+        r = rng.standard_normal(16).astype(np.float32)
+        perp = normalize(r - (r @ base) * base)
+        other = 0.8 * base + 0.6 * perp
+        r1 = net.submit_task("u1", "svc", base, 0.6, at_time=0.0)
+        r2 = net.submit_task("u2", "svc", other, 0.6, at_time=0.001)
+        net.run()
+        en = net.edge_nodes[net.en_nodes[0]]
+        assert en.stats["window_reuse"] == 1
+        assert be.stats()["executed"] == 1   # the leader, once, on the engine
+        assert r2.reuse == "en"
+        assert r2.similarity == pytest.approx(0.8, abs=1e-5)
+        # the follower's completion rides the leader's *engine* future:
+        # it cannot beat the leader's (batched, queued) execution
+        assert r2.t_complete >= r1.t_complete - 0.02
+        assert r2.t_complete >= 0.1
+
+    def test_reuse_retains_completion_gap_under_queueing(self):
+        """Light in-suite version of the BENCH_cosim acceptance: on a
+        correlated stream under offered load, engine-backed reuse keeps a
+        clear end-to-end completion-time advantage over scratch."""
+        net, be = _engine_net(protocol="direct", window=0.008)
+        X = _stream(150, noise=0.03)
+        t = 0.0
+        for i, x in enumerate(X):
+            net.submit_task("u1" if i % 2 else "u2", "svc", x, 0.9, at_time=t)
+            t += 0.004   # ~250 Hz offered: real queueing at the replicas
+        net.run()
+        m = net.metrics
+        scratch = m.mean_completion(kind=(None,))
+        reuse = m.mean_completion(kind=("en", "cs", "user"))
+        assert np.isfinite(scratch) and np.isfinite(reuse)
+        assert scratch / reuse >= 2.0
