@@ -147,6 +147,71 @@ def _churn_rows(n_cycles: int = 4) -> list:
     return rows
 
 
+SKEW_STORE = 20_000
+SKEW_QUERY = 1_000
+SKEW_CENTERS = 256
+SKEW_NOISE = 0.02
+SKEW_THRESHOLD = 0.9
+
+
+def _skewed_occupancy_rows() -> list:
+    """Recall-study slice (ISSUE 5): Zipf-skewed bucket occupancy vs recall.
+
+    Extends the ``multiprobe`` recall methodology (held-out stream items,
+    label-match hit criterion) to the *skewed* stores the federation layer's
+    reuse-affinity policy peeks into: cluster popularity ~ Zipf(s) makes a
+    few LSH buckets far denser than the rest, ring overflow drops pointers
+    there first, and this row set pins what recall the
+    ``query_batch(peek=True)`` affinity hint actually delivers — overall and
+    split hot (top-decile clusters) vs cold — alongside the occupancy skew
+    that produced it (top-decile bucket share, max fill vs bucket_cap,
+    overflow count).  ``zipf0.0`` is the uniform control.
+    """
+    rows: list[Row] = []
+    p = LSHParams(dim=DIM, num_tables=5, num_probes=8, num_buckets=4096,
+                  family="hyperplane", seed=11)
+    n_hot = max(SKEW_CENTERS // 10, 1)
+    for s in (0.0, 1.1, 1.6):
+        rng = np.random.default_rng(17)
+        base = normalize(rng.standard_normal(
+            (SKEW_CENTERS, DIM)).astype(np.float32))
+        pop = 1.0 / np.arange(1, SKEW_CENTERS + 1) ** s
+        pop /= pop.sum()
+        n = SKEW_STORE + SKEW_QUERY
+        labels = rng.choice(SKEW_CENTERS, n, p=pop)
+        X = normalize(base[labels] + SKEW_NOISE * rng.standard_normal(
+            (n, DIM)).astype(np.float32))
+        # auto cap = the federation bench's operating point; cap 4 stresses
+        # ring overflow so the skew-induced recall cliff is visible
+        for cap in (None, 4):
+            store = ReuseStore(p, capacity=n + 8, bucket_cap=cap)
+            store.insert_batch(X[:SKEW_STORE], list(labels[:SKEW_STORE]))
+            fill = np.sort(store._fill.reshape(-1))[::-1]
+            total = max(int(fill.sum()), 1)
+            top10 = float(fill[: max(fill.size // 10, 1)].sum()) / total
+            hits = {True: [0, 0], False: [0, 0]}  # hot? -> [hits, queries]
+            out = store.query_batch(X[SKEW_STORE:], SKEW_THRESHOLD,
+                                    peek=True)
+            for lab, (res, _, idx) in zip(labels[SKEW_STORE:], out):
+                bucket = hits[bool(lab < n_hot)]
+                bucket[1] += 1
+                bucket[0] += int(idx is not None and res == lab)
+            recall = sum(b[0] for b in hits.values()) / SKEW_QUERY
+            rh = hits[True][0] / max(hits[True][1], 1)
+            rc = hits[False][0] / max(hits[False][1], 1)
+            rows.append((
+                f"reuse_scale/skewed_occupancy/zipf{s}/"
+                f"cap{store.bucket_cap}", 0.0,
+                f"recall_pct={100 * recall:.1f};"
+                f"recall_hot_pct={100 * rh:.1f};"
+                f"recall_cold_pct={100 * rc:.1f};"
+                f"top10_bucket_share={top10:.2f};"
+                f"max_fill={int(fill[0])};bucket_cap={store.bucket_cap};"
+                f"overflows={store.overflows};"
+                f"hot_queries={hits[True][1]};threshold={SKEW_THRESHOLD}"))
+    return rows
+
+
 def run(n_reps: int = 7) -> list:
     rows: list[Row] = []
     rng = np.random.default_rng(1)
@@ -181,6 +246,7 @@ def run(n_reps: int = 7) -> list:
                          f"per-task best-of-{n_reps}, speedup {us_scalar / us:.1f}x"))
     rows.extend(_insert_rows())
     rows.extend(_churn_rows())
+    rows.extend(_skewed_occupancy_rows())
     return rows
 
 

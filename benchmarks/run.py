@@ -27,6 +27,7 @@ BENCHES = (
     "reuse_store_scale",  # beyond-paper: batched vs scalar reuse pipeline
     "async_serving",      # beyond-paper: event-driven serving core sweep
     "cosim",              # beyond-paper: edge-to-TPU co-simulation sweep
+    "federation",         # beyond-paper: cross-EN offload policy sweep
     "roofline",           # §Roofline (reads dry-run artifacts)
 )
 

@@ -87,6 +87,8 @@ class ExecCompletion:
     similarity: float = -1.0
     replica: Optional[int] = None      # engine replica that produced it
     backup: bool = False               # a straggler backup won the race
+    remote_en: Optional[str] = None    # federated: prefix of the EN that
+                                       # actually answered (offloaded miss)
 
 
 class ComputeBackend:
@@ -123,6 +125,53 @@ class ComputeBackend:
         """Fig. 3b TTC answer for a task whose future is still pending."""
         raise NotImplementedError
 
+    def load_snapshot(self, node: Any, now: float) -> "LoadSnapshot":
+        """Execution-side load telemetry for one EN (federation seam).
+
+        ``depth`` counts tasks queued or executing behind this EN's compute,
+        ``service_s`` is the EWMA per-task service time, ``workers`` the
+        parallel execution lanes — enough for a remote EN to estimate the
+        expected wait ``depth * service_s / workers`` when deciding whether
+        to offload a miss here (federation/policy.py)."""
+        raise NotImplementedError
+
+    def on_partition_change(self) -> None:
+        """The network re-partitioned rFIB bucket ownership (rebalance or
+        EN leave).  Backends whose internal routing derives from the
+        partition (``EngineBackend``'s per-EN replica ``bucket_range``)
+        re-derive it here; the inline model has no such state."""
+
+
+@dataclasses.dataclass
+class LoadSnapshot:
+    """Per-EN load telemetry gossiped between ENs (federation layer).
+
+    Snapshots age: ``wait_s(now)`` decays the expected wait by the time
+    elapsed since capture — a work-conserving queue observed ``depth`` deep
+    at ``t`` has drained ``now - t`` seconds of work since (assuming no new
+    arrivals, which is exactly the staleness a gossip interval buys)."""
+
+    node: Any
+    t: float                 # virtual capture time
+    depth: float             # tasks queued or executing
+    service_s: float         # EWMA per-task service time
+    workers: int = 1         # parallel execution lanes (engine replicas)
+
+    def wait_s(self, now: Optional[float] = None) -> float:
+        wait = self.depth * self.service_s / max(self.workers, 1)
+        if now is not None:
+            wait -= max(now - self.t, 0.0)
+        return max(wait, 0.0)
+
+
+def _ewma_service_s(ttc: TTCEstimator, service: Optional[str] = None) -> float:
+    """Mean informed EWMA service time (the prior when uninformed)."""
+    if service is not None and ttc.informed(service):
+        return ttc.ewma[service]
+    if ttc.ewma:
+        return float(sum(ttc.ewma.values()) / len(ttc.ewma))
+    return ttc.initial
+
 
 class InlineBackend(ComputeBackend):
     """Exact-parity inline execution: the pre-seam delay-sampled model.
@@ -158,10 +207,19 @@ class InlineBackend(ComputeBackend):
         return fut
 
     def ttc_estimate(self, node, svc_name) -> float:
-        # Unused: inline futures resolve synchronously, so the network
-        # always answers with the exact ``t_done``-derived TTC.
-        en = self.net.edge_nodes[node]
+        # Only reached for *offloaded* pending futures (inline local futures
+        # resolve synchronously): the local EWMA is the best a delegating EN
+        # can answer before the remote result exists.
+        en = self.net._en_of(node)
         return en.ttc.estimate(svc_name)
+
+    def load_snapshot(self, node, now) -> LoadSnapshot:
+        """Inline queue telemetry: the busy-until horizon IS the backlog."""
+        en = self.net.edge_nodes[node]
+        ewma = _ewma_service_s(en.ttc)
+        busy = max(self.net._en_busy_until[node] - now, 0.0)
+        return LoadSnapshot(node, now, depth=busy / max(ewma, 1e-6),
+                            service_s=ewma, workers=1)
 
 
 @dataclasses.dataclass
@@ -199,6 +257,11 @@ class EdgeNode:
             "fetch_drops": 0,    # unsolicited/expired fetches (were silent)
             "ready_expired": 0,  # TTC results never fetched, TTL-expired
             "window_reuse": 0,   # intra-batch-window follower dedup hits
+            # federation layer (federation/federator.py):
+            "offloaded": 0,      # local misses forwarded to a remote EN
+            "remote_hits": 0,    # federated tasks answered from this store
+            "remote_execs": 0,   # federated tasks executed on this EN
+            "remote_coalesced": 0,  # federated followers riding a leader
         }
 
     def register(self, service: Service) -> None:

@@ -32,9 +32,9 @@ import numpy as np
 from .edge_node import ComputeBackend, EdgeNode, InlineBackend, Service
 from .forwarder import Forwarder
 from .lsh import LSHParams, get_lsh, normalize
-from .namespace import make_task_name
+from .namespace import make_task_name, parse_task_name
 from .packets import Data, Interest
-from .rfib import partition
+from .rfib import partition, rebalance
 from .sim_clock import EventLoop, Future, Timer
 
 APP_FACE = 0  # face id reserved for the local application on every node
@@ -194,6 +194,8 @@ class ReservoirNetwork:
         input_chunk_bytes: int = 8192,
         en_ready_ttl_s: float = 60.0,  # TTC results kept past completion
         backend: Optional[ComputeBackend] = None,  # EN execute-path seam
+        offload_policy: Any = None,    # federation: name | OffloadPolicy
+        federation_kw: Optional[Dict[str, Any]] = None,
         seed: int = 0,
     ):
         assert mode in ("reservoir", "icedge")
@@ -265,6 +267,21 @@ class ReservoirNetwork:
 
         self._install_routes()
 
+        # --- federation (DESIGN.md §Federation): cross-EN offloading of
+        # reuse-store misses under a pluggable policy.  None keeps today's
+        # local-only execute path without instantiating any federation
+        # machinery; the named "local-only" policy instantiates it but must
+        # stay bit-for-bit identical (tests/test_cosim.py parity).
+        # ENs that leave mid-run are retained here so drained in-flight
+        # completions and Fig. 3b ready-entry fetches still resolve.
+        self._departed: Dict[Any, EdgeNode] = {}
+        self.federator = None
+        if offload_policy is not None:
+            assert mode == "reservoir", "federation models the reservoir path"
+            from repro.federation import Federator  # lazy: no import cycle
+            self.federator = Federator(self, offload_policy,
+                                       **(federation_kw or {}))
+
     # -------------------------------------------------------------- plumbing
     def _connect(self, a: Any, b: Any, delay: float) -> None:
         fa, fb = self._face_count[a], self._face_count[b]
@@ -323,6 +340,136 @@ class ReservoirNetwork:
                 if node != n else 0,
             )
             fwd.fib.insert(f"/{svc}", faces[self.edge_nodes[nearest].prefix][0])
+
+    def rebalance_service(self, service: str, weights=None,
+                          num_buckets: Optional[int] = None,
+                          _notify_backend: bool = True) -> None:
+        """Re-partition a service's rFIB bucket ranges on EVERY forwarder.
+
+        Used by the federation layer (load-driven weighted rebalance) and by
+        ``remove_en`` (membership change).  User forwarders are included —
+        their copied entries collapse onto the single upstream face exactly
+        as ``add_user`` installed them.  ``_notify_backend=False`` lets
+        multi-service callers batch the backend notification (one
+        ``on_partition_change`` per membership change, not per service)."""
+        svc = service.strip("/")
+        if num_buckets is None:
+            num_buckets = self.lsh_params.effective_buckets
+        en_prefixes = [self.edge_nodes[n].prefix for n in self.en_nodes]
+        for node, fwd in self.forwarders.items():
+            faces = {p: [fwd.fib.next_hop(p) or APP_FACE]
+                     for p in en_prefixes}
+            rebalance(fwd.rfib, svc, en_prefixes, faces,
+                      self.lsh_params.num_tables, num_buckets,
+                      self.lsh_params.index_size_bytes, weights=weights)
+        # per-EN engine replica routers partition the EN's own rFIB slice
+        # (the nested-partition fix, DESIGN.md §Co-sim) — they must follow
+        # the ownership shift or replica routing degenerates to one edge
+        # replica per EN
+        if _notify_backend:
+            self.backend.on_partition_change()
+
+    def remove_en(self, node: Any) -> None:
+        """EN leave: re-partition its bucket ranges across the survivors.
+
+        The EdgeNode object is retained in ``self._departed`` so already
+        -executing tasks drain gracefully (their completions still deliver)
+        and pre-leave TTC ready entries still answer their fetches; but the
+        node stops being a routing target: every service is re-partitioned
+        across the remaining ENs, window-buffered tasks are failed over
+        immediately, and Interests still in flight toward the old entry are
+        failed over on arrival (``_failover_interest``) instead of dangling.
+        """
+        en = self.edge_nodes.pop(node)
+        self.en_nodes.remove(node)
+        self._departed[node] = en
+        self._icedge_store.pop(node, None)
+        for svc in self.services:
+            self.rebalance_service(svc, _notify_backend=False)
+        self.backend.on_partition_change()  # once, on the final partition
+        if self.federator is not None:
+            self.federator.on_en_leave(node)
+        for interest in self._en_pending.pop(node, []):
+            self._failover_interest(node, interest)
+
+    def _departed_receive(self, node: Any, interest: Interest) -> None:
+        """App-face Interest at a departed EN's node (still a forwarder)."""
+        if "service" not in interest.app_params:
+            self._en_fetch(node, interest)  # pre-leave TTC ready entries
+        elif interest.app_params.get("failover"):
+            # a failover proxy whose target ALSO left before it arrived:
+            # chain to the next owner (the proxy's waiter is another
+            # departed node's app callback, not a Federator offload record,
+            # so nobody else will re-dispatch it)
+            self._failover_interest(node, interest)
+        elif interest.app_params.get("federated"):
+            # the delegating EN re-dispatched at leave time; late arrivals
+            # are redundant — count and drop (PIT state expires upstream)
+            if self.federator is not None:
+                self.federator.stats["dropped_at_departed"] += 1
+        else:
+            self._failover_interest(node, interest)
+
+    def _ensure_federator(self):
+        """The EN-leave failover path rides the federated exchange; a
+        network run without an offload policy gets a non-offloading
+        (local-only) federator on demand — with autonomous load-driven
+        rebalance OFF: ``offload_policy=None`` promised no federation
+        behavior beyond the failover proxying itself."""
+        if self.federator is None:
+            from repro.federation import Federator  # lazy: no import cycle
+            self.federator = Federator(self, "local-only", rebalance=False)
+        return self.federator
+
+    def _failover_interest(self, node: Any, interest: Interest) -> None:
+        """Re-route a task whose rFIB entry was invalidated under it.
+
+        The Interest was forwarded here via a hint minted from a since
+        -replaced ``RFibEntry``; this node's (post-rebalance) rFIB now names
+        the new owner.  Re-emitting under the *same* name would dangle: the
+        PIT trail back to the user runs through this node and possibly
+        shared upstream hops, so the retry would aggregate into an existing
+        entry at the first shared forwarder and never reach the new owner.
+        Instead the task is proxied over the federated exchange — a fresh
+        ``/<new-owner-prefix>/...`` name — and the returning Data answers
+        the original name from this node's app face, retracing the original
+        PIT breadcrumbs to the user.  Proxies chain: when the Interest is
+        itself a failover proxy whose target has since departed (name
+        carries THIS node's prefix), the prefix is stripped, the next owner
+        looked up, and the reply still answers the name the upstream waiter
+        registered."""
+        fwd = self.forwarders[node]
+        orig_name = interest.name
+        task_name = orig_name
+        departed = self._departed.get(node)
+        if departed is not None and task_name.startswith(departed.prefix):
+            task_name = task_name[len(departed.prefix):]
+        try:
+            service, _, hash_comp = parse_task_name(task_name)
+        except ValueError:
+            return
+        entry = fwd.rfib.lookup(service, hash_comp)
+        if entry is None:
+            return
+        owner = next((n for n in self.en_nodes
+                      if self.edge_nodes[n].prefix == entry.en_prefix), None)
+        if owner is None:
+            return
+        self._ensure_federator()
+        fed_name = entry.en_prefix + task_name
+
+        def on_data(data: Data, t: float) -> None:
+            reply = Data(orig_name, content=data.content,
+                         meta=dict(data.meta))
+            actions = fwd.on_data(reply, APP_FACE, self._now)
+            self._emit(node, actions, self._now)
+
+        self._pending_cb.setdefault((node, fed_name), []).append(on_data)
+        fed_int = Interest(fed_name, app_params={
+            **interest.app_params, "federated": True, "failover": True,
+        })
+        actions = fwd.on_interest(fed_int, APP_FACE, self._now)
+        self._emit(node, actions, self._now)
 
     def add_user(self, user_id: str, attach_to: Any) -> None:
         node = f"user:{user_id}"
@@ -387,12 +534,22 @@ class ReservoirNetwork:
         self._emit(node, actions, self._now)
 
     def _deliver_app(self, node: Any, packet) -> None:
-        if node in self.edge_nodes and isinstance(packet, Interest):
-            self._en_receive(node, packet)
+        if isinstance(packet, Interest):
+            if node in self.edge_nodes:
+                self._en_receive(node, packet)
+            elif node in self._departed:
+                self._departed_receive(node, packet)
         elif isinstance(packet, Data):
             cbs = self._pending_cb.pop((node, packet.name), [])
             for cb in cbs:
                 cb(packet, self._now)
+
+    def _en_of(self, node: Any) -> EdgeNode:
+        """EN lookup that still resolves departed ENs (graceful drain:
+        in-flight completions and pre-leave TTC ready entries outlive the
+        EN's membership in the routing fabric)."""
+        en = self.edge_nodes.get(node)
+        return en if en is not None else self._departed[node]
 
     # ------------------------------------------------------------- EN logic
     def _en_receive(self, node: Any, interest: Interest) -> None:
@@ -400,6 +557,13 @@ class ReservoirNetwork:
         if "service" not in interest.app_params:
             # deferred result fetch (paper Fig. 3b): /<EN-prefix>/<svc>/task/<h>
             self._en_fetch(node, interest)
+            return
+        if interest.app_params.get("federated"):
+            # federated execution (DESIGN.md §Federation): a remote EN's
+            # miss, offloaded here.  Bypasses the batch window — the
+            # delegating EN already searched — and coalesces in-flight
+            # duplicates onto one leader execution.
+            self.federator.handle_remote(node, interest)
             return
         if self.mode == "reservoir" and self.en_batch_window_s > 0:
             # batch window (DESIGN.md §Array-native store): buffer tasks
@@ -481,9 +645,9 @@ class ReservoirNetwork:
             rtt_est = 2 * (self.user_link_delay_s + 2 * self.link_delay_s)
             # pipelined chunk fetches: one RTT + serialisation tail
             pull_delay = rtt_est + (nchunks - 1) * 0.2e-3
-        fut = self.backend.submit(node, svc_name, interest, emb,
-                                  search_t + pull_delay,
-                                  defer_inserts=defer_inserts)
+        fut = self._submit_execution(node, svc_name, interest, emb,
+                                     threshold, search_t + pull_delay,
+                                     defer_inserts=defer_inserts)
         if self.protocol == "ttc":
             # Fig. 3b: answer the task Interest with a TTC estimate; the
             # user fetches the result at /<EN-prefix>/<name> after TTC-RTT.
@@ -516,13 +680,40 @@ class ReservoirNetwork:
                 lambda f: self._deliver_completion(node, name, fwd_err, f))
         return fut
 
+    def _submit_execution(
+        self,
+        node: Any,
+        svc_name: str,
+        interest: Interest,
+        emb: np.ndarray,
+        threshold: float,
+        lead_delay_s: float,
+        defer_inserts: Optional[List[Tuple[np.ndarray, Any]]] = None,
+    ) -> Future:
+        """Execute-or-offload seam for a reuse-store miss.
+
+        Without a federator (or when the policy keeps the task local) this
+        is exactly the backend submit.  An offloaded task skips the local
+        insert entirely — the *executing* EN's store absorbs the result, so
+        rFIB bucket affinity is preserved — and resolves with the remote
+        Data's ``ExecCompletion``."""
+        if self.federator is not None:
+            target = self.federator.decide(node, svc_name, interest, emb,
+                                           threshold)
+            if target != node:
+                return self.federator.offload(node, target, svc_name,
+                                              interest, emb, threshold,
+                                              lead_delay_s)
+        return self.backend.submit(node, svc_name, interest, emb,
+                                   lead_delay_s, defer_inserts=defer_inserts)
+
     def _flush_en_batch(self, node: Any) -> None:
         """Service all tasks buffered at an EN with one query_batch/service.
 
         The per-task search delay is the batched search amortised over the
         window (the measured speedup lives in benchmarks/reuse_store_scale).
         """
-        pending = self._en_pending[node]
+        pending = self._en_pending.get(node)  # None once the EN has left
         if not pending:
             return
         self._en_pending[node] = []
@@ -628,8 +819,10 @@ class ReservoirNetwork:
         if comp.reuse is not None:
             meta["reuse"] = comp.reuse
             meta["similarity"] = comp.similarity
-            meta["reuse_node"] = \
-                f"{self.edge_nodes[key[0]].prefix}/replica/{comp.replica}"
+            meta["reuse_node"] = comp.remote_en or \
+                f"{self._en_of(key[0]).prefix}/replica/{comp.replica}"
+        if comp.remote_en:
+            meta["fed_en"] = comp.remote_en
         if comp.backup:
             meta["backup"] = True
         entry.meta = meta
@@ -642,11 +835,14 @@ class ReservoirNetwork:
         Interest through the EN's forwarder at ``t_done`` (immediately when
         the future resolved at completion time, i.e. the engine path)."""
         comp = fut.result
-        en = self.edge_nodes[node]
+        en = self._en_of(node)
         meta = {"reuse": comp.reuse, "en": en.prefix, "fwd_error": fwd_err}
         if comp.reuse is not None:
             meta["similarity"] = comp.similarity
-            meta["reuse_node"] = f"{en.prefix}/replica/{comp.replica}"
+            meta["reuse_node"] = comp.remote_en or \
+                f"{en.prefix}/replica/{comp.replica}"
+        if comp.remote_en:
+            meta["fed_en"] = comp.remote_en
         if comp.backup:
             meta["backup"] = True
         data = Data(name, content=comp.result, meta=meta)
@@ -655,11 +851,11 @@ class ReservoirNetwork:
     def _expire_ready(self, key: Tuple[Any, str], entry: _ReadyEntry) -> None:
         if self._en_ready.get(key) is entry:
             self._en_ready.pop(key, None)
-            self.edge_nodes[key[0]].stats["ready_expired"] += 1
+            self._en_of(key[0]).stats["ready_expired"] += 1
 
     def _en_fetch(self, node: Any, interest: Interest) -> None:
         """Deferred result fetch at an EN (paper Fig. 3b, second exchange)."""
-        en = self.edge_nodes[node]
+        en = self._en_of(node)
         orig = interest.name[len(en.prefix):]
         entry = self._en_ready.get((node, orig))
         if entry is None:
@@ -791,7 +987,10 @@ class ReservoirNetwork:
                     rec.reuse_node = rnode
                 else:
                     rec.reuse = reuse
-                    rec.reuse_node = data.meta.get("en")
+                    # a federated completion reports the EN that actually
+                    # answered (fed_en), not the EN the rFIB routed to
+                    rec.reuse_node = (data.meta.get("fed_en")
+                                      or data.meta.get("en"))
                 rec.similarity = float(data.meta.get("similarity", -1.0))
                 rec.aggregated = bool(data.meta.get("window_agg", False))
                 rec.forwarding_error = bool(data.meta.get("fwd_error", False))

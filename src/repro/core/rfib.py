@@ -137,9 +137,20 @@ def partition(
 
 def rebalance(rfib: RFIB, service: str, en_prefixes: Sequence[str],
               faces: Dict[str, List[int]], num_tables: int, num_buckets: int,
-              index_size_bytes: int = 1) -> None:
-    """Elastic re-partition after EN join/leave: replace the service's entries."""
+              index_size_bytes: int = 1,
+              weights: Optional[Sequence[float]] = None) -> None:
+    """Elastic re-partition after EN join/leave: replace the service's entries.
+
+    ``weights`` (federation layer): persistent load skew shifts bucket
+    *ownership*, not just individual tasks — a hot EN gets a proportionally
+    narrower consecutive range, so future arrivals route elsewhere while
+    each bucket still has exactly one owner (reuse affinity is preserved).
+    In-flight Interests routed via a replaced entry carry a now-dangling
+    forwarding hint; the owner network fails them over to the new owner
+    (``ReservoirNetwork._failover_interest``).
+    """
     svc = service.strip("/")
     rfib._by_service[svc] = partition(
-        svc, en_prefixes, faces, num_tables, num_buckets, index_size_bytes
+        svc, en_prefixes, faces, num_tables, num_buckets, index_size_bytes,
+        weights=weights,
     )

@@ -39,6 +39,44 @@ class Timer:
         self.cancelled = True
 
 
+class RepeatingTimer:
+    """Self-rescheduling periodic event with a stop-when-idle contract.
+
+    ``fn()`` runs every ``interval_s``; returning a falsy value stops the
+    chain (no further events are scheduled), which is what keeps a
+    drain-to-idle ``EventLoop.run()`` terminating: a periodic service (e.g.
+    the federation telemetry gossip) must stop rescheduling itself once the
+    activity it serves has ceased, and can be ``kick()``-ed back to life by
+    the next burst of activity."""
+
+    __slots__ = ("loop", "interval_s", "fn", "_timer")
+
+    def __init__(self, loop: "EventLoop", interval_s: float, fn: Callable[[], Any]):
+        self.loop = loop
+        self.interval_s = float(interval_s)
+        self.fn = fn
+        self._timer: Optional[Timer] = None
+
+    @property
+    def running(self) -> bool:
+        return self._timer is not None and not self._timer.cancelled
+
+    def kick(self) -> None:
+        """(Re)start the chain if it is not already ticking."""
+        if not self.running:
+            self._timer = self.loop.call_later(self.interval_s, self._tick)
+
+    def _tick(self) -> None:
+        self._timer = None
+        if self.fn():
+            self._timer = self.loop.call_later(self.interval_s, self._tick)
+
+    def cancel(self) -> None:
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+
+
 class EventLoop:
     """Deterministic virtual-clock event loop (min-heap by (t, seq))."""
 
@@ -63,6 +101,14 @@ class EventLoop:
 
     def call_later(self, delay: float, fn: Callable, *args) -> Timer:
         return self.at(self._now + delay, fn, *args)
+
+    def every(self, interval_s: float, fn: Callable[[], Any]) -> RepeatingTimer:
+        """Activity-gated periodic event: ``fn`` repeats while truthy.
+
+        The returned ``RepeatingTimer`` is NOT started — call ``kick()``.
+        This keeps idle loops drainable: a periodic service only ticks while
+        it keeps reporting activity."""
+        return RepeatingTimer(self, interval_s, fn)
 
     def run(self, until: float = float("inf"),
             max_events: int = 5_000_000) -> float:

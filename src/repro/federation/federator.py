@@ -1,0 +1,379 @@
+"""Federator: cross-EN offloading over the NDN fabric (DESIGN.md §Federation).
+
+Turns N co-simulated ENs into one load-balanced reuse fabric.  On a reuse
+-store miss the owning EN asks an ``OffloadPolicy`` where the task should
+execute; a remote choice becomes a *federated execution* — one more NDN
+exchange layered on the machinery the simulator already has:
+
+* the delegating EN forwards an Interest named
+  ``/<remote-EN-prefix>/<svc>/task/<hash>`` toward the chosen EN (plain FIB
+  forwarding, like the Fig. 3b result-fetch names; intermediate PIT entries
+  aggregate identical federated names and CSes cache the returned Data),
+* the executing EN runs the normal treatment — its own store may *hit*
+  (the forwarding-error case of Fig. 10, recovered instead of measured),
+  otherwise its compute backend executes and **its** store absorbs the
+  insert, so rFIB bucket affinity is preserved for future near-duplicates,
+* the result flows back as Data along the PIT reverse path; the delegating
+  EN resolves the pending ``ExecCompletion`` future exactly as if a local
+  backend had produced it (TTC answers, window-dedup followers, and the
+  direct protocol all keep working unchanged).
+
+Near-identical misses offloaded by *different* ENs to the same executor
+share a federated name, so they coalesce: in-network via PIT aggregation
+when the second Interest finds the first pending, and at the executing EN
+via the ``_remote_inflight`` leader map when both reach the application.
+
+Persistent skew triggers ``rfib.rebalance`` with load-derived weights —
+bucket *ownership* shifts away from a hot EN, not just individual tasks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import networkx as nx
+import numpy as np
+
+from repro.core.edge_node import ExecCompletion
+from repro.core.lsh import normalize
+from repro.core.namespace import TASK_KEYWORD, decode_task_hash, parse_task_name
+from repro.core.network import APP_FACE
+from repro.core.packets import Data, Interest
+from repro.core.sim_clock import Future
+
+from .policy import LocalOnlyPolicy, OffloadContext, OffloadPolicy, get_policy
+from .telemetry import TelemetryGossip
+
+# mid-range forwarder processing charge per hop for the RTT estimate
+_HOP_PROC_S = 86e-6
+
+
+@dataclasses.dataclass
+class _Offload:
+    """One in-flight federated execution (delegating-EN side)."""
+
+    src: Any
+    dst: Any
+    fed_name: str
+    service: str
+    interest: Interest           # the original task Interest
+    emb: np.ndarray
+    threshold: float
+    out: Future                  # resolves with the ExecCompletion
+    send_timer: Any = None       # lead-delay timer; cancelled on dst leave
+
+
+class Federator:
+    """Reuse-aware cross-EN offloading + load-driven rFIB rebalance."""
+
+    def __init__(
+        self,
+        net,
+        policy,
+        gossip_interval_s: float = 0.05,
+        prop_delay_s: Optional[float] = None,
+        rebalance: bool = True,
+        rebalance_every_rounds: int = 20,   # check cadence, in gossip rounds
+        rebalance_skew: float = 2.5,        # max/mean miss-rate ratio
+        rebalance_persistence: int = 3,     # consecutive skewed checks
+        rebalance_min_tasks: int = 64,      # misses per check window
+    ):
+        self.net = net
+        self.policy: OffloadPolicy = get_policy(policy)
+        self.gossip = TelemetryGossip(net, interval_s=gossip_interval_s,
+                                      prop_delay_s=prop_delay_s)
+        self.gossip.on_round = self._on_gossip_round
+        self.rebalance_enabled = bool(rebalance)
+        self.rebalance_every_rounds = int(rebalance_every_rounds)
+        self.rebalance_skew = float(rebalance_skew)
+        self.rebalance_persistence = int(rebalance_persistence)
+        self.rebalance_min_tasks = int(rebalance_min_tasks)
+        self._rounds_since_check = 0
+        self._skewed_checks = 0
+        self._miss_counts: Dict[Any, int] = {}
+        self._remote_inflight: Dict[Tuple[Any, str], Future] = {}
+        self._offloads_by_dst: Dict[Any, List[_Offload]] = {}
+        self._rtt_cache: Dict[Tuple[Any, Any], float] = {}
+        self.stats = {
+            "decisions": 0, "offloads": 0, "remote_hits": 0,
+            "remote_execs": 0, "remote_coalesced": 0, "rebalances": 0,
+            "leave_redispatched": 0, "dropped_at_departed": 0,
+        }
+
+    # ----------------------------------------------------------- decisions
+    def decide(self, node: Any, svc_name: str, interest: Interest,
+               emb: np.ndarray, threshold: float) -> Any:
+        """Pick the EN a miss should execute on (``node`` = stay local)."""
+        self.stats["decisions"] += 1
+        self._miss_counts[node] = self._miss_counts.get(node, 0) + 1
+        if isinstance(self.policy, LocalOnlyPolicy):
+            # parity fast path: skip the context build (normalize, task-hash
+            # decode, live load snapshot) a local-only choose() would
+            # ignore; gossip only keeps ticking if the rebalance checker —
+            # the one local-only consumer of rounds — is enabled
+            if self.rebalance_enabled:
+                self.gossip.kick()
+            return node
+        self.gossip.kick()
+        if len(self.net.edge_nodes) < 2:
+            return node
+        views = self.gossip.views(node)
+        if not views:
+            return node
+        ctx = OffloadContext(
+            local=node, service=svc_name,
+            emb=normalize(np.asarray(emb, np.float32).reshape(-1)),
+            threshold=threshold, buckets=self._buckets_of(interest),
+            now=self.net.loop.now, local_view=self.gossip.self_view(node),
+            views=views, federator=self)
+        target = self.policy.choose(ctx)
+        if target == node or target not in self.net.edge_nodes:
+            return node
+        return target
+
+    def _buckets_of(self, interest: Interest) -> Optional[np.ndarray]:
+        try:
+            _, kw, comp = parse_task_name(interest.name)
+            if kw != TASK_KEYWORD:
+                return None
+            return np.asarray(decode_task_hash(
+                comp, self.net.lsh_params.index_size_bytes))
+        except ValueError:
+            return None
+
+    # -------------------------------------------------------- policy inputs
+    def rtt_s(self, a: Any, b: Any) -> float:
+        """EN-to-EN round trip: link delays + forwarder processing, cached."""
+        key = (a, b)
+        rtt = self._rtt_cache.get(key)
+        if rtt is None:
+            path = nx.shortest_path(self.net.graph, a, b)
+            one_way = sum(
+                self.net.graph.edges[u, v].get("delay", self.net.link_delay_s)
+                for u, v in zip(path, path[1:]))
+            one_way += _HOP_PROC_S * max(len(path) - 1, 1)
+            rtt = 2.0 * one_way
+            self._rtt_cache[key] = self._rtt_cache[(b, a)] = rtt
+        return rtt
+
+    def affinity(self, local: Any, node: Any, service: str,
+                 buckets: Optional[np.ndarray]) -> float:
+        """Fraction of the task's per-table buckets ``node`` owns (rFIB)."""
+        if buckets is None:
+            return 0.0
+        entries = self.net.forwarders[local].rfib.entries(service)
+        if not entries:
+            return 0.0
+        prefix = self.net.edge_nodes[node].prefix
+        owned = sum(
+            any(e.en_prefix == prefix and e.covers(t, int(b))
+                for e in entries)
+            for t, b in enumerate(buckets))
+        return owned / len(buckets)
+
+    def peek_hit(self, node: Any, service: str, emb: np.ndarray,
+                 threshold: float) -> bool:
+        """Would ``node``'s store reuse this task?  Pure ``peek=True`` read
+        (no LRU refresh, no statistics) — models a gossiped store sketch."""
+        store = self.net.edge_nodes[node].stores.get(service)
+        if store is None or not len(store):
+            return False
+        (_, _, idx), = store.query_batch(emb[None], threshold, peek=True)
+        return idx is not None
+
+    def search_s(self, node: Any, service: str) -> float:
+        store = self.net.edge_nodes[node].stores.get(service)
+        size = len(store) if store is not None else 1
+        return self.net.delays.search_time_s(
+            self.net.lsh_params.num_tables, max(size, 1))
+
+    # ------------------------------------------------- delegating-EN side
+    def offload(self, src: Any, dst: Any, svc_name: str, interest: Interest,
+                emb: np.ndarray, threshold: float,
+                lead_delay_s: float) -> Future:
+        """Forward a miss to ``dst`` for federated execution.
+
+        Returns a Future[ExecCompletion] resolving when the remote Data
+        arrives back at ``src`` — a drop-in for ``ComputeBackend.submit``,
+        so every downstream consumer (TTC answers, direct delivery, window
+        -dedup leader futures) works unchanged.  ``lead_delay_s`` charges
+        the local LSH search that discovered the miss before the federated
+        Interest leaves, exactly like the local execute path."""
+        net = self.net
+        en_src = net.edge_nodes[src]
+        fed_name = net.edge_nodes[dst].prefix + interest.name
+        out = Future()
+        rec = _Offload(src, dst, fed_name, svc_name, interest,
+                       np.asarray(emb, np.float32), threshold, out)
+        self._offloads_by_dst.setdefault(dst, []).append(rec)
+        self.stats["offloads"] += 1
+        en_src.stats["offloaded"] += 1
+
+        def on_data(data: Data, t: float) -> None:
+            recs = self._offloads_by_dst.get(rec.dst, [])
+            if rec in recs:
+                recs.remove(rec)
+            reuse = data.meta.get("reuse")
+            comp = ExecCompletion(
+                data.content, t,
+                reuse="en" if reuse is not None else None,
+                similarity=float(data.meta.get("similarity", 1.0)),
+                remote_en=data.meta.get("en", net.edge_nodes.get(
+                    rec.dst, en_src).prefix))
+            out.try_set_result(comp, now=t)
+
+        def send() -> None:
+            rec.send_timer = None
+            if rec.dst not in net.edge_nodes:
+                return  # target left during the lead delay; on_en_leave
+                        # already re-dispatched this task
+            fed_int = Interest(fed_name, app_params={
+                "service": svc_name, "input": rec.emb,
+                "threshold": threshold, "federated": True,
+                "origin": en_src.prefix,
+            })
+            net._pending_cb.setdefault((src, fed_name), []).append(on_data)
+            fwd = net.forwarders[src]
+            actions = fwd.on_interest(fed_int, APP_FACE, net.loop.now)
+            net._emit(src, actions, net.loop.now)
+
+        if lead_delay_s > 0:
+            rec.send_timer = net.loop.call_later(lead_delay_s, send)
+        else:
+            send()
+        return out
+
+    # --------------------------------------------------- executing-EN side
+    def handle_remote(self, node: Any, interest: Interest) -> None:
+        """Treat a federated task at the executing EN.
+
+        Bypasses the EN batch window (the delegating EN already searched and
+        the policy already paid a decision latency); coalesces identical
+        in-flight federated names onto one leader execution; a store hit
+        answers directly; a miss goes to this EN's own compute backend so
+        the result is inserted *here* (bucket affinity preserved)."""
+        net = self.net
+        en = net.edge_nodes.get(node)
+        if en is None:  # departed while the Interest was in flight
+            self.stats["dropped_at_departed"] += 1
+            return
+        svc_name = interest.app_params["service"]
+        emb = np.asarray(interest.app_params["input"], np.float32)
+        threshold = float(interest.app_params.get("threshold", 0.0))
+        name = interest.name
+        key = (node, name)
+        leader = self._remote_inflight.get(key)
+        if leader is not None:
+            # follower rides the leader future: one execution, N replies
+            en.stats["remote_coalesced"] += 1
+            self.stats["remote_coalesced"] += 1
+            leader.add_done_callback(
+                lambda f: self._reply_remote(node, name, f.result))
+            return
+        store = en.stores[svc_name]
+        search_t = net.delays.search_time_s(
+            net.lsh_params.num_tables, max(len(store), 1))
+        result, sim, idx = store.query(emb, threshold)
+        if idx is not None:
+            en.stats["reused"] += 1
+            en.stats["remote_hits"] += 1
+            self.stats["remote_hits"] += 1
+            data = Data(name, content=result,
+                        meta={"reuse": "en", "similarity": sim,
+                              "en": en.prefix})
+            net._send_from_en(node, data, search_t)
+            return
+        en.stats["remote_execs"] += 1
+        self.stats["remote_execs"] += 1
+        fut = net.backend.submit(node, svc_name, interest, emb, search_t)
+        self._remote_inflight[key] = fut
+
+        def done(f: Future) -> None:
+            self._remote_inflight.pop(key, None)
+            self._reply_remote(node, name, f.result)
+
+        fut.add_done_callback(done)
+
+    def _reply_remote(self, node: Any, name: str, comp: ExecCompletion) -> None:
+        """Send the executing EN's result back as Data on the PIT path."""
+        net = self.net
+        en = net._en_of(node)
+        meta: Dict[str, Any] = {"reuse": comp.reuse, "en": en.prefix}
+        if comp.reuse is not None:
+            meta["similarity"] = comp.similarity
+        data = Data(name, content=comp.result, meta=meta)
+        net._send_from_en(node, data, max(comp.t_done - net.loop.now, 0.0))
+
+    # ------------------------------------------------------------ EN leave
+    def on_en_leave(self, node: Any) -> None:
+        """Fail in-flight offloads over: re-decide each task bound for the
+        departed EN (its reply can never come) and drop its gossip views."""
+        self.gossip.forget(node)
+        self._rtt_cache.clear()
+        for key in [k for k in self._remote_inflight if k[0] == node]:
+            self._remote_inflight.pop(key, None)
+        for rec in self._offloads_by_dst.pop(node, []):
+            if rec.send_timer is not None:  # Interest not even sent yet
+                rec.send_timer.cancel()
+                rec.send_timer = None
+            self.net._pending_cb.pop((rec.src, rec.fed_name), None)
+            if rec.out.done:
+                continue
+            self.stats["leave_redispatched"] += 1
+            fut = self.net._submit_execution(
+                rec.src, rec.service, rec.interest, rec.emb, rec.threshold,
+                0.0)
+            fut.add_done_callback(
+                lambda f, out=rec.out: out.try_set_result(
+                    f.result, now=f.resolved_at))
+
+    # ----------------------------------------------------------- rebalance
+    def _on_gossip_round(self) -> None:
+        if not self.rebalance_enabled:
+            return
+        self._rounds_since_check += 1
+        if self._rounds_since_check < self.rebalance_every_rounds:
+            return
+        self._rounds_since_check = 0
+        counts = dict(self._miss_counts)
+        self._miss_counts = {}
+        total = sum(counts.values())
+        # en_nodes order — the SAME order rebalance_service derives the
+        # prefix list in, so the positional weights line up by construction
+        ens = list(self.net.en_nodes)
+        if total < self.rebalance_min_tasks or len(ens) < 2:
+            self._skewed_checks = 0
+            return
+        rates = np.asarray([counts.get(n, 0) for n in ens], np.float64)
+        if rates.max() < self.rebalance_skew * max(rates.mean(), 1e-9):
+            self._skewed_checks = 0
+            return
+        self._skewed_checks += 1
+        if self._skewed_checks < self.rebalance_persistence:
+            return
+        self._skewed_checks = 0
+        self._rebalance(ens, rates)
+
+    def _rebalance(self, ens: List[Any], rates: np.ndarray) -> None:
+        """Shift bucket ownership away from hot ENs (weighted re-partition).
+
+        New share ~ current share / observed miss rate (equalizes expected
+        arrivals if popularity is locally uniform), blended 50/50 with the
+        current share to damp oscillation and floored so no EN is starved
+        out of the partition entirely."""
+        net = self.net
+        nb = net.lsh_params.effective_buckets
+        for svc in list(net.services):
+            entries = net.forwarders[ens[0]].rfib.entries(svc)
+            widths = {e.en_prefix: (e.ranges[0][1] - e.ranges[0][0] + 1)
+                      for e in entries}
+            shares = np.asarray(
+                [widths.get(net.edge_nodes[n].prefix, 0) / nb for n in ens])
+            target = shares / np.maximum(rates, 1.0)
+            target /= max(target.sum(), 1e-12)
+            weights = 0.5 * shares + 0.5 * target
+            weights = np.maximum(weights, 0.25 / len(ens))
+            net.rebalance_service(svc, weights=list(weights / weights.sum()),
+                                  _notify_backend=False)
+        net.backend.on_partition_change()  # once, on the final partition
+        self.stats["rebalances"] += 1

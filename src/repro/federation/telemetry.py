@@ -1,0 +1,102 @@
+"""Per-EN load telemetry gossip (federation layer, DESIGN.md §Federation).
+
+Every EN periodically publishes a ``LoadSnapshot`` — queue depth, parallel
+execution lanes, EWMA service time — captured from its compute backend
+(``ComputeBackend.load_snapshot``: the inline busy-until horizon or the
+serving engine's in-flight/batcher state).  Snapshots propagate to every
+other EN on the shared ``sim_clock`` EventLoop, so an offload policy decides
+on *stale* views: a remote EN's state is at most ``interval_s`` (plus the
+EN-to-EN propagation delay) old, exactly the information regime a real
+gossip protocol provides.  ``LoadSnapshot.wait_s(now)`` compensates the
+known part of that staleness by draining the observed backlog at 1 s/s.
+
+The gossip chain is activity-gated (``RepeatingTimer``): it ticks only while
+tasks keep arriving and stops itself when the network goes idle, so a
+drain-to-idle ``EventLoop.run()`` still terminates.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from repro.core.edge_node import LoadSnapshot
+from repro.core.sim_clock import RepeatingTimer
+
+
+class TelemetryGossip:
+    """EN-to-EN load dissemination on the network's event loop.
+
+    ``views(observer)`` returns the freshest snapshot the observer has
+    *received* for every other EN; the observer's own state is always read
+    live (``self_view``) — an EN knows its own queue exactly.
+    """
+
+    def __init__(self, net, interval_s: float = 0.05,
+                 prop_delay_s: Optional[float] = None):
+        self.net = net
+        self.interval_s = float(interval_s)
+        # EN-to-EN propagation: one core-link traversal unless overridden
+        self.prop_delay_s = (net.link_delay_s if prop_delay_s is None
+                             else float(prop_delay_s))
+        self._views: Dict[Any, Dict[Any, LoadSnapshot]] = {}
+        self._active = False
+        self.rounds = 0
+        self.on_round = None  # optional per-round hook (federation rebalance)
+        self._timer: RepeatingTimer = net.loop.every(self.interval_s,
+                                                     self._tick)
+        self.publish_now()  # epoch-0 round: no EN starts blind
+
+    # ------------------------------------------------------------- publish
+    def kick(self) -> None:
+        """Note activity (a task arrival/decision); keeps the chain alive."""
+        self._active = True
+        self._timer.kick()
+
+    def _tick(self) -> bool:
+        self.publish_now()
+        if self.on_round is not None:
+            self.on_round()
+        active, self._active = self._active, False
+        return active  # stop rescheduling once the network goes idle
+
+    def publish_now(self) -> None:
+        """One gossip round: snapshot every EN, deliver after propagation."""
+        self.rounds += 1
+        now = self.net.loop.now
+        snaps = {node: self.net.backend.load_snapshot(node, now)
+                 for node in self.net.en_nodes}
+        if self.prop_delay_s > 0 and now > 0:
+            self.net.loop.call_later(self.prop_delay_s, self._apply, snaps)
+        else:  # epoch-0 seeding (and zero-delay configs) apply inline
+            self._apply(snaps)
+
+    def _apply(self, snaps: Dict[Any, LoadSnapshot]) -> None:
+        for obs in list(snaps):
+            view = self._views.setdefault(obs, {})
+            for subj, snap in snaps.items():
+                if subj != obs:
+                    view[subj] = snap
+
+    # --------------------------------------------------------------- views
+    def self_view(self, node: Any) -> LoadSnapshot:
+        """The observer's own state: always live, never stale."""
+        return self.net.backend.load_snapshot(node, self.net.loop.now)
+
+    def views(self, observer: Any) -> Dict[Any, LoadSnapshot]:
+        """Latest *received* snapshot per remote EN (may be stale)."""
+        view = self._views.get(observer, {})
+        # drop ENs that have left since the snapshot was delivered
+        return {n: s for n, s in view.items() if n in self.net.edge_nodes}
+
+    def staleness_s(self, observer: Any) -> float:
+        """Age of the oldest remote view (diagnostics)."""
+        view = self.views(observer)
+        if not view:
+            return float("inf")
+        now = self.net.loop.now
+        return max(now - s.t for s in view.values())
+
+    def forget(self, node: Any) -> None:
+        """EN leave: drop its outbound views and everyone's view of it."""
+        self._views.pop(node, None)
+        for view in self._views.values():
+            view.pop(node, None)

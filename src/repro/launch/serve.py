@@ -47,7 +47,15 @@ def main() -> None:
     ap.add_argument("--max-wait-ms", type=float, default=5.0)
     ap.add_argument("--window-ms", type=float, default=8.0,
                     help="cosim EN-side batch window (milliseconds)")
+    ap.add_argument("--offload-policy", default=None,
+                    choices=("local-only", "least-loaded", "reuse-affinity"),
+                    help="cosim federation policy: forward reuse-store "
+                         "misses to a remote EN's engine (DESIGN.md "
+                         "§Federation); default keeps execution local")
     args = ap.parse_args()
+    if args.offload_policy is not None and args.engine != "cosim":
+        ap.error("--offload-policy requires --engine cosim (federation "
+                 "runs between the co-simulated ENs)")
 
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)
@@ -100,7 +108,7 @@ def main() -> None:
             max_wait_s=args.max_wait_ms * 1e-3, wall_time=True)
         net = ReservoirNetwork(
             g, ens, lshp, seed=0, en_batch_window_s=args.window_ms * 1e-3,
-            backend=backend)
+            backend=backend, offload_policy=args.offload_policy)
         net.register_service(Service(
             f"/{args.dataset}", execute=svc_execute, input_dim=64))
         net.add_user("u0", "fwd1")
@@ -128,6 +136,13 @@ def main() -> None:
         print(f"  network reuse: {s['reuse_pct']:.1f}% "
               f"(cs {s['reuse_pct_cs']:.1f}%, en {s['reuse_pct_en']:.1f}%), "
               f"accuracy {s['accuracy_pct']:.1f}%")
+        if net.federator is not None:
+            fs = net.federator.stats
+            print(f"  federation[{args.offload_policy}]: "
+                  f"offloads={fs['offloads']} "
+                  f"remote_hits={fs['remote_hits']} "
+                  f"remote_execs={fs['remote_execs']} "
+                  f"rebalances={fs['rebalances']}")
     elif args.engine == "async":
         engine = AsyncServingEngine(
             lshp, replicas, max_batch=args.max_batch,

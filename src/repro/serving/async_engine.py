@@ -42,7 +42,12 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.edge_node import ComputeBackend, ExecCompletion
+from repro.core.edge_node import (
+    ComputeBackend,
+    ExecCompletion,
+    LoadSnapshot,
+    _ewma_service_s,
+)
 from repro.core.lsh import LSHParams, normalize
 from repro.core.packets import Data
 from repro.core.sim_clock import EventLoop, Future, Timer
@@ -298,6 +303,16 @@ class AsyncServingEngine:
     def pending(self) -> int:
         return len(self._inflight)
 
+    def load(self) -> Tuple[float, float]:
+        """Load telemetry: (in-flight leader depth, EWMA service time).
+
+        The federation layer gossips this between ENs (DESIGN.md
+        §Federation).  Depth counts every unresolved leader — batcher-queued
+        and executing alike — which is exactly the backlog an arriving task
+        queues behind; followers ride leaders so they add no work."""
+        ewma = float(np.mean([_ewma_service_s(r.ttc) for r in self.replicas]))
+        return float(len(self._inflight)), ewma
+
     def stats(self) -> Dict[str, int]:
         out: Dict[str, int] = dict(self.engine_stats)
         for r in self.replicas:
@@ -348,8 +363,15 @@ class EngineBackend(ComputeBackend):
         replica_store_capacity: int = 100_000,
         replica_cs_capacity: int = 4096,
         wall_time: bool = False,
+        replicas_per_en: Optional[Dict[Any, int]] = None,
         seed: int = 0,
     ):
+        # heterogeneous fleets: per-EN replica counts (node -> count)
+        # override the global ``n_replicas`` default — a beefy metro EN can
+        # run 4 replicas while a closet EN runs 1, and the federation
+        # layer's least-loaded/affinity policies see the difference through
+        # ``load_snapshot``'s ``workers`` field.
+        self.replicas_per_en = dict(replicas_per_en or {})
         self.n_replicas = n_replicas
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
@@ -373,14 +395,20 @@ class EngineBackend(ComputeBackend):
         self.engines = {}
         n_ens = len(network.en_nodes)
         nb = network.lsh_params.effective_buckets
+        unknown = set(self.replicas_per_en) - set(network.en_nodes)
+        if unknown:
+            raise ValueError(f"replicas_per_en names unknown ENs: {unknown}")
         for idx, node in enumerate(network.en_nodes):
             node_seed = self.seed + zlib.crc32(str(node).encode()) % 9973
+            n_rep = self.replicas_per_en.get(node, self.n_replicas)
+            if n_rep < 1:
+                raise ValueError(f"EN {node!r} needs >= 1 replica")
             replicas = [
                 ReplicaEngine(
                     i, network.lsh_params, self._execute,
                     cs_capacity=self.replica_cs_capacity,
                     store_capacity=self.replica_store_capacity)
-                for i in range(self.n_replicas)
+                for i in range(n_rep)
             ]
             # Each EN's replica router partitions the EN's *own* rFIB bucket
             # subrange (the same consecutive split core.rfib.partition
@@ -430,9 +458,10 @@ class EngineBackend(ComputeBackend):
 
         def adapt(sr: ServeResult) -> ExecCompletion:
             # ServeResult -> ExecCompletion vocabulary mapping, running at
-            # the engine's completion instant (Future.then inherits it)
+            # the engine's completion instant (Future.then inherits it).
+            # _en_of: a departed EN's in-flight executions drain gracefully.
             t = net.loop.now
-            en = net.edge_nodes[node]
+            en = net._en_of(node)
             if sr.reuse is None:
                 # a real scratch execution: the network-edge reuse store
                 # learns the result at the moment it exists on the engine
@@ -459,6 +488,45 @@ class EngineBackend(ComputeBackend):
         est = float(np.mean([r.ttc.estimate(svc_name)
                              for r in engine.replicas]))
         return est + engine.batcher.max_wait_s
+
+    def load_snapshot(self, node, now) -> LoadSnapshot:
+        """Engine queue telemetry for the federation gossip: in-flight
+        leaders across this EN's replica set, with the replica count as the
+        parallelism the expected-wait estimate divides by."""
+        engine = self.engines[node]
+        depth, service_s = engine.load()
+        return LoadSnapshot(node, now, depth=depth, service_s=service_s,
+                            workers=len(engine.replicas))
+
+    def on_partition_change(self) -> None:
+        """Follow an rFIB re-partition (federation rebalance / EN leave):
+        each EN's replica router re-splits the EN's *new* bucket slice.
+        Without this, a shifted partition leaves the router's stale span
+        behind and every task clamps onto one edge replica — the
+        nested-partition pathology coming back through the side door.
+        Slices come from the first service's entries; ``partition``/
+        ``rebalance`` install identical per-EN ranges for every service."""
+        net = self.net
+        if net is None or not net.services or not net.en_nodes:
+            return
+        entries = net.forwarders[net.en_nodes[0]].rfib.entries(
+            next(iter(net.services)))
+        for node, engine in self.engines.items():
+            en = net.edge_nodes.get(node)
+            if en is None:
+                continue  # departed: engine only drains, no new arrivals
+            mine = [e for e in entries if e.en_prefix == en.prefix]
+            if mine:
+                lo = min(e.ranges[0][0] for e in mine)
+                hi = max(e.ranges[0][1] for e in mine) + 1
+            else:
+                # starved out of the partition entirely (extreme weights
+                # round its range empty): no affinity structure remains, so
+                # split the FULL space — keeping the stale span would clamp
+                # offloaded tasks onto one edge replica
+                lo, hi = 0, net.lsh_params.effective_buckets
+            engine.router.bucket_range = (lo, hi)
+            engine.router.rescale(len(engine.replicas))
 
     # ------------------------------------------------------------- metrics
     def stats(self) -> Dict[str, int]:

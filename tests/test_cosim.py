@@ -93,12 +93,13 @@ class LegacyNet(ReservoirNetwork):
         return fut
 
 
-def _trace(cls, protocol, window, n_tasks=500, backend=None):
+def _trace(cls, protocol, window, n_tasks=500, backend=None,
+           offload_policy=None):
     params = LSHParams(dim=64, num_tables=5, num_probes=8)
     g, ens = _testbed_topology()
     net = cls(g, ens, params, seed=0, protocol=protocol,
               en_batch_window_s=window, measure_fwd_errors=True,
-              backend=backend)
+              backend=backend, offload_policy=offload_policy)
     spec = DATASETS["stanford_ar"]
     net.register_service(dataset_service(spec))
     for u in range(3):
@@ -170,6 +171,26 @@ class TestInlineParity:
         for a, b in zip(old.metrics.records, new.metrics.records):
             assert _key(a) == _key(b)
         assert old.metrics.summary() == new.metrics.summary()
+
+    @pytest.mark.parametrize("protocol", ("direct", "ttc"))
+    def test_local_only_federation_bit_for_bit(self, protocol):
+        """ISSUE 5 acceptance: instantiating the federation layer with the
+        ``local-only`` policy (telemetry gossip ticking, decide() on every
+        miss, zero offloads) must reproduce the seeded 500-task trace
+        bit-for-bit — the federator may not perturb RNG draws, event
+        ordering of task events, or store state."""
+        plain = _trace(ReservoirNetwork, protocol, 0.0)
+        fed = _trace(ReservoirNetwork, protocol, 0.0,
+                     offload_policy="local-only")
+        assert fed.federator is not None
+        assert fed.federator.stats["offloads"] == 0
+        assert fed.federator.stats["decisions"] > 0
+        for a, b in zip(plain.metrics.records, fed.metrics.records):
+            assert _key(a) == _key(b)
+        assert plain.metrics.summary() == fed.metrics.summary()
+        s = fed.metrics.summary()
+        for k, v in GOLDEN[protocol].items():
+            assert s[k] == pytest.approx(v, rel=1e-9), k
 
 
 # ------------------------------------------------------------ engine co-sim

@@ -1,0 +1,457 @@
+"""Federation layer tests (ISSUE 5): telemetry, policies, the federated NDN
+exchange, coalescing at the executing EN, EN leave failover, heterogeneous
+replica counts, and load-driven rFIB rebalance.
+
+The local-only bit-for-bit parity acceptance lives in tests/test_cosim.py
+(it extends the seeded 500-task golden traces); this file covers the new
+behavior.
+"""
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core import LSHParams, ReservoirNetwork
+from repro.core.edge_node import Service
+from repro.core.lsh import normalize
+from repro.core.namespace import make_task_name, parse_task_name
+from repro.core.packets import Interest
+from repro.core.topology import testbed_topology as _testbed_topology
+from repro.serving import EngineBackend
+
+
+def _star_topology(n_ens, link=0.005):
+    g = nx.Graph()
+    ens = [f"en{i}" for i in range(n_ens)]
+    for en in ens:
+        g.add_edge("core", en, delay=link)
+    return g, ens
+
+
+def _make_net(n_ens=3, policy="local-only", backend=None, fkw=None,
+              exec_time=(0.07, 0.1), window=0.0, dim=16, protocol="direct"):
+    params = LSHParams(dim=dim, num_tables=5, num_probes=8)
+    g, ens = _star_topology(n_ens)
+    net = ReservoirNetwork(g, ens, params, seed=0, protocol=protocol,
+                           en_batch_window_s=window, backend=backend,
+                           offload_policy=policy, federation_kw=fkw)
+    net.register_service(Service(
+        "/svc", execute=lambda x: round(float(np.sum(x)), 5),
+        exec_time_s=exec_time, input_dim=dim))
+    net.add_user("u1", "core")
+    net.add_user("u2", "core")
+    return net
+
+
+def _emb_routed_to(net, en_node, seed=0, dim=16):
+    """Find an embedding whose task the rFIB routes to ``en_node``."""
+    rng = np.random.default_rng(seed)
+    fwd = net.users["u1"][1]
+    want = net.edge_nodes[en_node].prefix
+    for _ in range(512):
+        emb = normalize(rng.standard_normal(dim).astype(np.float32))
+        name = make_task_name("svc", net.lsh.hash_one(emb),
+                              net.lsh_params.index_size_bytes)
+        entry = fwd.rfib.lookup("/svc", parse_task_name(name)[2])
+        if entry is not None and entry.en_prefix == want:
+            return emb
+    raise AssertionError(f"no embedding routed to {en_node}")
+
+
+# ------------------------------------------------------------------ telemetry
+class TestTelemetry:
+    def test_inline_snapshot_reflects_busy_queue(self):
+        net = _make_net()
+        node = net.en_nodes[0]
+        snap0 = net.backend.load_snapshot(node, 0.0)
+        assert snap0.depth == 0.0 and snap0.wait_s() == 0.0
+        net._en_busy_until[node] = 1.7
+        snap = net.backend.load_snapshot(node, 0.0)
+        assert snap.wait_s() == pytest.approx(1.7, rel=0.2)
+        # staleness compensation: a work-conserving queue drains 1 s/s
+        assert snap.wait_s(now=0.5) == pytest.approx(snap.wait_s() - 0.5)
+        assert snap.wait_s(now=100.0) == 0.0
+
+    def test_engine_snapshot_counts_inflight_and_workers(self):
+        be = EngineBackend(n_replicas=3, seed=1)
+        net = _make_net(backend=be)
+        node = net.en_nodes[0]
+        snap = be.load_snapshot(node, 0.0)
+        assert snap.workers == 3 and snap.depth == 0.0
+        eng = be.engines[node]
+        from repro.serving import ServeRequest
+        eng.submit(ServeRequest(0, "svc", np.ones(16, np.float32),
+                                payload=np.ones(16, np.float32)))
+        assert be.load_snapshot(node, 0.0).depth == 1.0
+        net.run()  # drain so no cross-test event-loop state lingers
+
+    def test_gossip_rounds_and_staleness(self):
+        net = _make_net(fkw={"gossip_interval_s": 0.05})
+        gossip = net.federator.gossip
+        # epoch-0 seeding: every EN sees every other EN immediately
+        v = gossip.views(net.en_nodes[1])
+        assert set(v) == set(net.en_nodes) - {net.en_nodes[1]}
+        assert all(s.t == 0.0 for s in v.values())
+        # one kick -> one active round (t=0.05) plus the final idle round
+        # (t=0.10) that observes no new activity and stops the chain
+        gossip.kick()
+        net.at(1.0, lambda: None)  # horizon marker
+        net.run()
+        v = gossip.views(net.en_nodes[1])
+        assert all(s.t == pytest.approx(0.10) for s in v.values())
+        assert gossip.staleness_s(net.en_nodes[1]) == pytest.approx(0.90)
+        assert not gossip._timer.running  # drained: no immortal timer chain
+
+    def test_self_view_is_live_not_gossiped(self):
+        net = _make_net()
+        node = net.en_nodes[0]
+        net._en_busy_until[node] = 9.0
+        assert net.federator.gossip.self_view(node).wait_s() > 0
+
+
+# ------------------------------------------------------------------- offload
+class TestOffload:
+    def test_local_only_never_offloads(self):
+        net = _make_net(policy="local-only")
+        rng = np.random.default_rng(3)
+        X = normalize(rng.standard_normal((40, 16)).astype(np.float32))
+        t = 0.0
+        for i, x in enumerate(X):
+            net.submit_task("u1" if i % 2 else "u2", "svc", x, 0.95,
+                            at_time=t)
+            t += 0.004
+        net.run()
+        assert all(r.t_complete >= 0 for r in net.metrics.records)
+        assert net.federator.stats["offloads"] == 0
+        assert net.federator.stats["decisions"] > 0
+
+    def test_least_loaded_offloads_and_executing_en_absorbs_insert(self):
+        net = _make_net(policy="least-loaded", n_ens=2)
+        src = net.en_nodes[0]
+        dst = net.en_nodes[1]
+        emb = _emb_routed_to(net, src)
+        net._en_busy_until[src] = 5.0  # local queue >> remote
+        rec = net.submit_task("u1", "svc", emb, 0.9, at_time=0.0)
+        net.run()
+        assert rec.t_complete >= 0
+        assert rec.reuse is None                # executed, remotely
+        assert rec.reuse_node == net.edge_nodes[dst].prefix
+        assert rec.completion_time < 1.0        # did not wait out the queue
+        fs = net.federator.stats
+        assert fs["offloads"] == 1 and fs["remote_execs"] == 1
+        # bucket affinity: the EXECUTING EN's store absorbed the insert
+        assert len(net.edge_nodes[dst].stores["svc"]) == 1
+        assert len(net.edge_nodes[src].stores["svc"]) == 0
+        assert net.edge_nodes[src].stats["offloaded"] == 1
+        assert net.edge_nodes[dst].stats["remote_execs"] == 1
+
+    def test_reuse_affinity_peek_turns_miss_into_remote_hit(self):
+        net = _make_net(policy="reuse-affinity", n_ens=2)
+        src, dst = net.en_nodes
+        emb = _emb_routed_to(net, src, seed=1)
+        rng = np.random.default_rng(9)
+        near = normalize(emb + 0.01 * rng.standard_normal(16).astype(np.float32))
+        net.edge_nodes[dst].stores["svc"].insert(
+            near, round(float(np.sum(near)), 5))
+        net._en_busy_until[src] = 5.0
+        rec = net.submit_task("u1", "svc", emb, 0.9, at_time=0.0)
+        net.run()
+        assert rec.reuse == "en"
+        assert rec.reuse_node == net.edge_nodes[dst].prefix
+        assert rec.similarity > 0.9
+        assert rec.completion_time < 0.1        # RTT + search, no queue
+        fs = net.federator.stats
+        assert fs["remote_hits"] == 1 and fs["remote_execs"] == 0
+
+    def test_hysteresis_keeps_marginal_tasks_local(self):
+        net = _make_net(policy="least-loaded")
+        node = net.en_nodes[0]
+        emb = _emb_routed_to(net, node, seed=2)
+        # queues equal (all zero): offloading would pay RTT for nothing
+        rec = net.submit_task("u1", "svc", emb, 0.9, at_time=0.0)
+        net.run()
+        assert rec.t_complete >= 0
+        assert net.federator.stats["offloads"] == 0
+
+    def test_offload_with_engine_backend(self):
+        be = EngineBackend(n_replicas=1, max_batch=4, max_wait_s=0.002,
+                           seed=3)
+        net = _make_net(policy="least-loaded", n_ens=2, backend=be,
+                        fkw={"gossip_interval_s": 0.01})
+        rng = np.random.default_rng(5)
+        X = normalize(rng.standard_normal((60, 16)).astype(np.float32))
+        t = 0.0
+        for i, x in enumerate(X):
+            net.submit_task("u1" if i % 2 else "u2", "svc", x, 0.95,
+                            at_time=t)
+            t += 0.002   # well above capacity: queues build, offloads fire
+        net.run()
+        assert all(r.t_complete >= 0 for r in net.metrics.records)
+        fs = net.federator.stats
+        assert fs["offloads"] > 0
+        # engine-side and network-edge execution accounting agree: every
+        # scratch execution (offloaded ones included) ran on some engine
+        # and fed exactly one EN store insert
+        executed = sum(en.stats["executed"]
+                       for en in net.edge_nodes.values())
+        assert executed == be.stats()["executed"] >= 1
+
+    def test_ttc_protocol_offload_completes(self):
+        net = _make_net(policy="least-loaded", n_ens=2, protocol="ttc")
+        src = net.en_nodes[0]
+        emb = _emb_routed_to(net, src, seed=3)
+        net._en_busy_until[src] = 3.0
+        rec = net.submit_task("u1", "svc", emb, 0.9, at_time=0.0)
+        net.run()
+        assert rec.t_complete >= 0
+        assert rec.completion_time < 1.0
+        assert net.federator.stats["offloads"] == 1
+        assert not net._en_ready   # ready entry delivered, not leaked
+
+
+# ---------------------------------------------------- federated coalescing
+class TestFederatedCoalescing:
+    def test_two_ens_same_name_coalesce_at_executor(self):
+        """Satellite: near-identical misses offloaded by two different ENs
+        to the same remote EN coalesce there — one execution, the follower
+        rides the leader (via in-network PIT aggregation of the shared
+        federated name)."""
+        net = _make_net(n_ens=3)
+        fed = net._ensure_federator()
+        executor = net.en_nodes[2]
+        emb = normalize(np.ones(16, np.float32))
+        rng = np.random.default_rng(4)
+        near = normalize(emb + 1e-3 * rng.standard_normal(16).astype(np.float32))
+        name = make_task_name("svc", net.lsh.hash_one(emb),
+                              net.lsh_params.index_size_bytes)
+        assert name == make_task_name("svc", net.lsh.hash_one(near),
+                                      net.lsh_params.index_size_bytes)
+        futs = []
+        for src, e in ((net.en_nodes[0], emb), (net.en_nodes[1], near)):
+            interest = Interest(name, app_params={
+                "service": "svc", "input": e, "threshold": 0.9})
+            futs.append(fed.offload(src, executor, "svc", interest, e, 0.9,
+                                    0.0))
+        net.run()
+        assert all(f.done for f in futs)
+        en = net.edge_nodes[executor]
+        assert en.stats["executed"] == 1          # ONE execution
+        assert en.stats["remote_execs"] == 1
+        # the follower got the leader's result
+        assert futs[0].result.result == futs[1].result.result
+        assert len(en.stores["svc"]) == 1
+
+    def test_app_level_coalescing_with_engine_backend(self):
+        """With an engine backend the leader future is pending long enough
+        for the executing EN's _remote_inflight map to catch a duplicate
+        delivered to the application (e.g. after PIT expiry)."""
+        be = EngineBackend(n_replicas=1, max_batch=4, max_wait_s=0.002,
+                           seed=3)
+        net = _make_net(n_ens=3, backend=be)
+        fed = net._ensure_federator()
+        executor = net.en_nodes[2]
+        emb = normalize(np.ones(16, np.float32))
+        name = make_task_name("svc", net.lsh.hash_one(emb),
+                              net.lsh_params.index_size_bytes)
+        interest = Interest(name, app_params={
+            "service": "svc", "input": emb, "threshold": 0.9})
+        # deliver twice straight to the application (bypassing the PIT)
+        fed.handle_remote(executor, interest)
+        fed.handle_remote(executor, interest.copy())
+        net.run()
+        en = net.edge_nodes[executor]
+        assert en.stats["remote_coalesced"] == 1
+        assert en.stats["remote_execs"] == 1
+        assert be.stats()["executed"] == 1
+
+
+# ------------------------------------------------------------------ EN leave
+class TestENLeave:
+    def test_inflight_task_fails_over_to_new_owner(self):
+        """Satellite regression: a task already routed via a removed
+        ``RFibEntry`` (forwarding hint minted pre-rebalance) must fail over
+        to the new owner instead of dangling at the departed EN."""
+        params = LSHParams(dim=16, num_tables=5, num_probes=8)
+        g, ens = _testbed_topology()
+        net = ReservoirNetwork(g, ens, params, seed=0)
+        net.register_service(Service(
+            "/svc", execute=lambda x: round(float(np.sum(x)), 5),
+            exec_time_s=0.05, input_dim=16))
+        net.add_user("u1", "fwd1")
+        emb = _emb_routed_to(net, "en1", seed=4)
+        rec = net.submit_task("u1", "svc", emb, 0.9, at_time=0.0)
+        # the Interest is in flight toward en1 when en1 leaves
+        net.at(0.004, net.remove_en, "en1")
+        net.run()
+        assert rec.t_complete >= 0, "in-flight task dangled at departed EN"
+        assert rec.reuse_node == "/en/en2"       # the new owner answered
+        assert len(net.edge_nodes["en2"].stores["svc"]) == 1
+        assert len(net._departed["en1"].stores["svc"]) == 0
+        # rFIB ownership moved everywhere, user forwarders included
+        for fwd in net.forwarders.values():
+            assert all(e.en_prefix == "/en/en2"
+                       for e in fwd.rfib.entries("svc"))
+
+    def test_window_buffered_tasks_fail_over(self):
+        params = LSHParams(dim=16, num_tables=5, num_probes=8)
+        g, ens = _testbed_topology()
+        net = ReservoirNetwork(g, ens, params, seed=0,
+                               en_batch_window_s=0.05)
+        net.register_service(Service(
+            "/svc", execute=lambda x: round(float(np.sum(x)), 5),
+            exec_time_s=0.05, input_dim=16))
+        net.add_user("u1", "fwd1")
+        emb = _emb_routed_to(net, "en1", seed=5)
+        rec = net.submit_task("u1", "svc", emb, 0.9, at_time=0.0)
+        # leave AFTER the task arrived (it sits in en1's batch window)
+        net.at(0.03, net.remove_en, "en1")
+        net.run()
+        assert rec.t_complete >= 0
+        assert rec.reuse_node == "/en/en2"
+
+    def test_inflight_offload_redispatches_on_leave(self):
+        net = _make_net(policy="least-loaded", n_ens=3,
+                        exec_time=0.3)
+        src, dst = net.en_nodes[0], net.en_nodes[1]
+        emb = _emb_routed_to(net, src, seed=6)
+        net._en_busy_until[src] = 5.0
+        net._en_busy_until[net.en_nodes[2]] = 1.0  # dst is the clear choice
+        rec = net.submit_task("u1", "svc", emb, 0.9, at_time=0.0)
+        # the chosen offload target leaves while the task executes there
+        # (offload decision lands ~10 ms in, execution takes 300 ms); the
+        # delegating EN must re-decide, not dangle
+        net.at(0.05, net.remove_en, dst)
+        net.run()
+        assert rec.t_complete >= 0
+        fs = net.federator.stats
+        assert fs["leave_redispatched"] >= 1
+
+    def test_double_leave_chains_failover(self):
+        """A failover proxy whose target ALSO departs before the proxy
+        Interest arrives must chain to the next owner — its waiter is the
+        first departed node's app callback, so nobody else would ever
+        re-dispatch it."""
+        net = _make_net(n_ens=3, exec_time=0.05)
+        emb = _emb_routed_to(net, "en0", seed=11)
+        rec = net.submit_task("u1", "svc", emb, 0.9, at_time=0.0)
+        net.at(0.004, net.remove_en, "en0")   # before arrival at en0
+        # en0's proxy leaves its node ~10 ms in; whichever EN it targets,
+        # removing en1 at 15 ms catches an en1-bound proxy mid-flight (and
+        # is a no-op for the chain if the proxy went to en2)
+        net.at(0.015, net.remove_en, "en1")
+        net.run()
+        assert rec.t_complete >= 0, "double-leave dangled the task"
+        assert rec.reuse_node == "/en/en2"
+        assert len(net.edge_nodes["en2"].stores["svc"]) == 1
+
+    def test_remove_last_but_one_en_keeps_serving(self):
+        net = _make_net(n_ens=2)
+        net.remove_en(net.en_nodes[0])
+        rng = np.random.default_rng(8)
+        emb = normalize(rng.standard_normal(16).astype(np.float32))
+        rec = net.submit_task("u1", "svc", emb, 0.9, at_time=0.0)
+        net.run()
+        assert rec.t_complete >= 0
+
+
+# ------------------------------------------- heterogeneous replica counts
+class TestHeterogeneousReplicas:
+    def test_replicas_per_en_map(self):
+        be = EngineBackend(n_replicas=2,
+                           replicas_per_en={"en0": 1, "en2": 4}, seed=1)
+        net = _make_net(n_ens=3, backend=be)
+        assert len(be.engines["en0"].replicas) == 1
+        assert len(be.engines["en1"].replicas) == 2   # global default
+        assert len(be.engines["en2"].replicas) == 4
+        # telemetry reports the heterogeneous parallelism
+        assert be.load_snapshot("en2", 0.0).workers == 4
+        rng = np.random.default_rng(2)
+        X = normalize(rng.standard_normal((30, 16)).astype(np.float32))
+        t = 0.0
+        for i, x in enumerate(X):
+            net.submit_task("u1" if i % 2 else "u2", "svc", x, 0.9,
+                            at_time=t)
+            t += 0.01
+        net.run()
+        assert all(r.t_complete >= 0 for r in net.metrics.records)
+
+    def test_replicas_per_en_validation(self):
+        with pytest.raises(ValueError, match="unknown ENs"):
+            _make_net(n_ens=2, backend=EngineBackend(
+                replicas_per_en={"nope": 2}))
+        with pytest.raises(ValueError, match=">= 1 replica"):
+            _make_net(n_ens=2, backend=EngineBackend(
+                replicas_per_en={"en0": 0}))
+
+
+# ----------------------------------------------------------------- rebalance
+class TestLoadDrivenRebalance:
+    def test_persistent_skew_shifts_bucket_ownership(self):
+        net = _make_net(
+            policy="reuse-affinity", n_ens=3,
+            fkw={"gossip_interval_s": 0.02, "rebalance_every_rounds": 5,
+                 "rebalance_min_tasks": 8, "rebalance_skew": 1.5,
+                 "rebalance_persistence": 2})
+        # mis-sized initial partition: en0 owns 70% of the buckets
+        net.rebalance_service("svc", weights=[0.7, 0.2, 0.1])
+        nb = net.lsh_params.effective_buckets
+
+        def share(prefix):
+            es = [e for e in net.forwarders["core"].rfib.entries("svc")
+                  if e.en_prefix == prefix]
+            return sum(e.ranges[0][1] - e.ranges[0][0] + 1 for e in es) / nb
+
+        assert share("/en/en0") == pytest.approx(0.7, abs=0.05)
+        rng = np.random.default_rng(6)
+        X = normalize(rng.standard_normal((160, 16)).astype(np.float32))
+        t = 0.0
+        for i, x in enumerate(X):  # all-miss stream: load mirrors ownership
+            net.submit_task("u1" if i % 2 else "u2", "svc", x, 0.99,
+                            at_time=t)
+            t += 0.004
+        net.run()
+        fs = net.federator.stats
+        assert fs["rebalances"] >= 1
+        assert share("/en/en0") < 0.6    # hot EN shed bucket ownership
+        assert all(r.t_complete >= 0 for r in net.metrics.records)
+        # user forwarders rebalanced too (copied entries, upstream face)
+        user_fwd = net.users["u1"][1]
+        assert share("/en/en0") == pytest.approx(
+            sum(e.ranges[0][1] - e.ranges[0][0] + 1
+                for e in user_fwd.rfib.entries("svc")
+                if e.en_prefix == "/en/en0") / nb)
+
+    def test_engine_replica_ranges_follow_rebalance(self):
+        """Regression: a rebalance that shifts rFIB bucket ownership must
+        re-derive each EN engine's replica ``bucket_range`` — a stale span
+        would clamp every task onto one edge replica (the nested-partition
+        pathology PR 4 fixed, reintroduced through the side door)."""
+        be = EngineBackend(n_replicas=2, seed=1)
+        net = _make_net(n_ens=2, backend=be)
+        nb = net.lsh_params.effective_buckets
+        # attach-time split is the uniform half/half
+        assert be.engines["en0"].router.bucket_range == (0, round(nb / 2))
+        net.rebalance_service("svc", weights=[0.75, 0.25])
+        lo, hi = be.engines["en0"].router.bucket_range
+        assert (lo, hi) == (0, round(0.75 * nb))
+        lo1, hi1 = be.engines["en1"].router.bucket_range
+        assert (lo1, hi1) == (round(0.75 * nb), nb)
+        # and the replica bounds were actually re-split over the new span
+        assert be.engines["en0"].router._bounds[0] == lo
+        assert be.engines["en0"].router._bounds[-1] == hi
+
+    def test_balanced_load_never_rebalances(self):
+        net = _make_net(
+            policy="least-loaded", n_ens=2,
+            fkw={"gossip_interval_s": 0.02, "rebalance_every_rounds": 5,
+                 "rebalance_min_tasks": 8, "rebalance_skew": 1.5,
+                 "rebalance_persistence": 2})
+        rng = np.random.default_rng(7)
+        X = normalize(rng.standard_normal((120, 16)).astype(np.float32))
+        t = 0.0
+        for i, x in enumerate(X):
+            net.submit_task("u1" if i % 2 else "u2", "svc", x, 0.99,
+                            at_time=t)
+            t += 0.004
+        net.run()
+        # an even partition of i.i.d. tasks shows no persistent 1.5x skew
+        assert net.federator.stats["rebalances"] == 0
