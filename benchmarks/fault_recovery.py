@@ -1,0 +1,294 @@
+"""Fault-recovery benchmark (ISSUE 6): lossy links, crash-stop, recovery.
+
+Three arms over the fault-injection layer (``src/repro/faults``):
+
+* **loss sweep** — the TTC protocol under uniform per-link packet loss
+  (0% / 1% / 5%) with consumer retransmission + exponential backoff on.
+  Every NDN exchange in the TTC protocol is a short-RTT round trip (task ->
+  TTC answer, fetch -> result), which is what makes a tight retransmission
+  timeout principled; the sweep measures what loss costs once the protocol
+  is allowed to recover: completion rate, p99 / mean completion time,
+  reuse-hit rate, and retransmission volume.
+
+* **crash-stop recovery** — a Zipf-hot hub fleet (EN0 owns most of the
+  bucket partition) loses EN0 to a crash-stop mid-stream: its reuse store
+  dies with it, routing keeps naming it (silence is the only signal), and
+  the federation layer's telemetry-staleness detector must notice, declare
+  it dead, and re-partition the rFIB while consumer retransmissions bridge
+  the blackout.  Reported: time-to-detect, windowed reuse-hit dip, and
+  time-to-recover (first post-crash window back within 5% of the pre-crash
+  reuse-hit level).
+
+* **zero-fault parity** — a ``ChaosController`` armed with an EMPTY
+  ``FaultPlan`` must reproduce the plain simulator's summary exactly
+  (the tests assert bit-for-bit on golden traces; the benchmark row keeps
+  the property visible in the perf artifact).
+
+Acceptance (ISSUE 6), asserted outside ``--smoke``:
+  * 5% uniform loss with retransmission on: completion rate 100% and
+    p99 <= 2x the lossless p99;
+  * the crash arm detects the dead EN, shows a reuse-hit dip, and recovers
+    the reuse-hit rate to within 5% of the pre-crash level.
+
+Fault schedules are crc32-seeded (never the process-salted ``hash()``), so
+every row reproduces across processes.
+
+Standalone: ``python -m benchmarks.fault_recovery [--smoke] [--json PATH]``
+(CI runs ``--smoke``); also registered in ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import zlib
+
+import networkx as nx
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import LSHParams, ReservoirNetwork
+from repro.core.edge_node import Service
+from repro.core.lsh import normalize
+from repro.faults import ChaosController, FaultPlan
+
+N_TASKS = 500
+N_USERS = 3
+N_ENS = 3
+THRESHOLD = 0.9
+LOAD_HZ = 40.0
+DIM = 64
+LOSS_RATES = (0.0, 0.01, 0.05)
+CONTENT_CENTERS = 40
+CONTENT_SKEW = 1.1
+CONTENT_NOISE = 0.02
+# crc32-derived plan seed: deterministic across processes
+PLAN_SEED = zlib.crc32(b"reservoir-fault-recovery")
+RETX = {"retx_timeout_s": 0.05, "retx_backoff": 2.0, "retx_max": 6}
+
+
+def _hub(n_ens: int, link_delay_s: float = 0.005):
+    g = nx.Graph()
+    ens = [f"en{i}" for i in range(n_ens)]
+    for en in ens:
+        g.add_edge("core", en, delay=link_delay_s)
+    return g, ens
+
+
+def _stream(n: int, seed: int = 7) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    base = normalize(rng.standard_normal(
+        (CONTENT_CENTERS, DIM)).astype(np.float32))
+    p = 1.0 / np.arange(1, CONTENT_CENTERS + 1) ** CONTENT_SKEW
+    p /= p.sum()
+    picks = rng.choice(CONTENT_CENTERS, n, p=p)
+    return normalize(base[picks] + CONTENT_NOISE * rng.standard_normal(
+        (n, DIM)).astype(np.float32))
+
+
+def _build(n_ens: int, plan=None, protocol="ttc", policy=None, fkw=None,
+           retx=True, seed=0):
+    params = LSHParams(dim=DIM, num_tables=5, num_probes=8, seed=11)
+    g, ens = _hub(n_ens)
+    net = ReservoirNetwork(
+        g, ens, params, seed=seed, protocol=protocol,
+        offload_policy=policy, federation_kw=fkw,
+        **(RETX if retx else {}))
+    chaos = ChaosController(net, plan) if plan is not None else None
+    net.register_service(Service(
+        "/svc", execute=lambda x: round(float(np.sum(x)), 5),
+        exec_time_s=(0.070, 0.100), input_dim=DIM))
+    for u in range(N_USERS):
+        net.add_user(f"u{u}", "core")
+    return net, chaos
+
+
+def _drive(net, n_tasks: int, load_hz: float, seed: int = 0):
+    X = _stream(n_tasks)
+    rng = np.random.default_rng(seed + 2)
+    arrivals = np.cumsum(rng.exponential(1.0 / load_hz, n_tasks))
+    for i, (t, x) in enumerate(zip(arrivals, X)):
+        net.submit_task(f"u{i % N_USERS}", "svc", x, THRESHOLD,
+                        at_time=float(t))
+    net.run()
+    return arrivals
+
+
+# ------------------------------------------------------------- loss sweep
+def _run_loss(rate: float, n_tasks: int) -> dict:
+    plan = (FaultPlan.uniform_loss(rate, seed=PLAN_SEED) if rate > 0
+            else FaultPlan(seed=PLAN_SEED))
+    net, chaos = _build(N_ENS, plan=plan)
+    _drive(net, n_tasks, LOAD_HZ)
+    m = net.metrics
+    done = m.completed()
+    cts = np.asarray([r.completion_time for r in done]) if done else [0.0]
+    return {
+        "completion_pct": m.completion_rate() * 100,
+        "p99_ms": float(np.percentile(cts, 99)) * 1e3,
+        "mean_ms": float(np.mean(cts)) * 1e3,
+        "reuse_pct": m.reuse_fraction() * 100,
+        "retx": net.fault_stats["retx_sent"],
+        "give_ups": net.fault_stats["retx_give_ups"],
+        "drops": (chaos.stats["interest_drops"] + chaos.stats["data_drops"]),
+    }
+
+
+# ------------------------------------------------------------- crash arm
+def _windowed_reuse(records, t_lo, t_hi, width):
+    """Reuse-hit fraction per ``width``-second submission window."""
+    edges = np.arange(t_lo, t_hi + width, width)
+    out = []
+    for lo, hi in zip(edges, edges[1:]):
+        win = [r for r in records if lo <= r.t_submit < hi]
+        done = [r for r in win if r.t_complete >= 0]
+        if len(win) < 3:
+            out.append((lo, float("nan")))
+            continue
+        out.append((lo, sum(r.reuse is not None for r in done) / len(win)))
+    return out
+
+
+def _run_crash(n_tasks: int, window_s: float = 0.25) -> dict:
+    duration = n_tasks / LOAD_HZ
+    t_crash = round(duration * 0.5, 3)
+    plan = FaultPlan(seed=PLAN_SEED).with_crash("en0", t_crash)
+    net, chaos = _build(
+        N_ENS, plan=plan, protocol="ttc", policy="local-only",
+        fkw={"gossip_interval_s": 0.05})
+    # Zipf-hot partition: EN0 owns the lion's share, so its crash takes the
+    # hot reuse content with it
+    w = 1.0 / np.arange(1, N_ENS + 1)
+    net.rebalance_service("svc", weights=list(w / w.sum()))
+    _drive(net, n_tasks, LOAD_HZ)
+    m = net.metrics
+    health = net.federator.health
+    detect_t = health.dead.get("en0")
+    wins = _windowed_reuse(m.records, 0.0, duration, window_s)
+    warmup = min(2.0, t_crash / 2)               # skip the cold-start ramp
+    pre = [f for t, f in wins if t + window_s <= t_crash
+           and t >= warmup and np.isfinite(f)]
+    pre_level = float(np.mean(pre)) if pre else float("nan")
+    post = [(t, f) for t, f in wins if t >= t_crash and np.isfinite(f)]
+    dip = min((f for _, f in post), default=float("nan"))
+    recover_t = next((t for t, f in post if f >= pre_level - 0.05), None)
+    return {
+        "completion_pct": m.completion_rate() * 100,
+        "t_crash": t_crash,
+        "time_to_detect_s": (detect_t - t_crash
+                             if detect_t is not None else float("nan")),
+        "pre_reuse_pct": pre_level * 100,
+        "dip_reuse_pct": dip * 100,
+        "time_to_recover_s": (recover_t - t_crash
+                              if recover_t is not None else float("nan")),
+        "retx": net.fault_stats["retx_sent"],
+        "crash_drops": net.fault_stats["crash_drops"],
+        "recovered_routing": net.fault_stats["crash_recoveries"] == 1,
+        "peers_dead": net.federator.stats["peers_dead"],
+    }
+
+
+# --------------------------------------------------------------- parity arm
+def _run_parity(n_tasks: int) -> dict:
+    plain, _ = _build(N_ENS, plan=None, retx=False)
+    _drive(plain, n_tasks, LOAD_HZ)
+    chaotic, chaos = _build(N_ENS, plan=FaultPlan(seed=PLAN_SEED), retx=False)
+    _drive(chaotic, n_tasks, LOAD_HZ)
+    same = plain.metrics.summary() == chaotic.metrics.summary()
+    return {"identical": same,
+            "chaos_events": sum(chaos.stats.values()),
+            "reuse_pct": chaotic.metrics.reuse_fraction() * 100}
+
+
+def run(smoke: bool = False) -> list:
+    rows: list[Row] = []
+    n_tasks = 150 if smoke else N_TASKS
+    loss_rates = (0.0, 0.05) if smoke else LOSS_RATES
+    loss = {}
+    for rate in loss_rates:
+        r = _run_loss(rate, n_tasks)
+        loss[rate] = r
+        rows.append((
+            f"fault_recovery/loss{rate * 100:.0f}pct", r["p99_ms"] * 1e3,
+            f"completion={r['completion_pct']:.1f}%;"
+            f"p99_ms={r['p99_ms']:.1f};mean_ms={r['mean_ms']:.1f};"
+            f"reuse_pct={r['reuse_pct']:.1f};retx={r['retx']};"
+            f"drops={r['drops']};give_ups={r['give_ups']}"))
+    cr = _run_crash(n_tasks)
+    rows.append((
+        "fault_recovery/crash_en0", cr["time_to_recover_s"] * 1e6,
+        f"completion={cr['completion_pct']:.1f}%;"
+        f"t_crash={cr['t_crash']:.2f}s;"
+        f"time_to_detect_s={cr['time_to_detect_s']:.3f};"
+        f"reuse_pre={cr['pre_reuse_pct']:.1f}%;"
+        f"reuse_dip={cr['dip_reuse_pct']:.1f}%;"
+        f"time_to_recover_s={cr['time_to_recover_s']:.2f};"
+        f"retx={cr['retx']};crash_drops={cr['crash_drops']};"
+        f"routing_repartitioned={cr['recovered_routing']}"))
+    par = _run_parity(min(n_tasks, 200))
+    rows.append((
+        "fault_recovery/zero_fault_parity", 0.0,
+        f"summaries_identical={par['identical']};"
+        f"chaos_events={par['chaos_events']};"
+        f"reuse_pct={par['reuse_pct']:.1f}"))
+
+    # --- acceptance (ISSUE 6)
+    base, lossy = loss[0.0], loss[max(loss_rates)]
+    p99_ratio = lossy["p99_ms"] / base["p99_ms"]
+    # p99 over 150 smoke tasks is the ~2nd-worst sample — too noisy to hold
+    # the full-run bound, so smoke only checks it stays within 3x.
+    p99_accept = 3.0 if smoke else 2.0
+    dipped = cr["dip_reuse_pct"] < cr["pre_reuse_pct"] - 5.0
+    ok = (lossy["completion_pct"] == 100.0 and p99_ratio <= p99_accept
+          and par["identical"] and cr["peers_dead"] == 1
+          and cr["recovered_routing"] and dipped
+          and np.isfinite(cr["time_to_recover_s"]))
+    rows.append((
+        "fault_recovery/acceptance", 0.0,
+        f"loss5_completion={lossy['completion_pct']:.1f}%(accept=100);"
+        f"p99_lossy/p99_lossless={p99_ratio:.2f}x(accept<={p99_accept:g});"
+        f"crash_detected={cr['peers_dead'] == 1};"
+        f"reuse_dipped={dipped};"
+        f"recovered_within_5pct={np.isfinite(cr['time_to_recover_s'])};"
+        f"zero_fault_parity={par['identical']};"
+        f"{'PASS' if ok else 'FAIL'}"))
+    if not ok and not smoke:
+        raise AssertionError(
+            f"fault_recovery acceptance: completion "
+            f"{lossy['completion_pct']:.1f}%, p99 ratio {p99_ratio:.2f}x, "
+            f"detect {cr['time_to_detect_s']:.3f}s, "
+            f"recover {cr['time_to_recover_s']}s, parity {par['identical']}")
+    if smoke:
+        # CI guard: faults demonstrably injected and demonstrably survived
+        assert loss[max(loss_rates)]["drops"] > 0, "smoke: no packets dropped"
+        assert loss[max(loss_rates)]["retx"] > 0, "smoke: no retransmissions"
+        assert par["identical"], "smoke: zero-fault parity broke"
+        assert cr["peers_dead"] == 1, "smoke: crash never detected"
+        assert ok, "smoke: acceptance row FAIL"
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small configurations (CI guard)")
+    ap.add_argument("--json", default=None,
+                    help="also write rows to this path "
+                         "(BENCH_fault_recovery.json)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f'{name},{us:.2f},"{derived}"')
+    if args.json:
+        records = [{"bench": "fault_recovery", "name": n,
+                    "us_per_call": round(float(u), 2), "derived": str(d)}
+                   for n, u, d in rows]
+        with open(args.json, "w") as f:
+            json.dump({"benches": ["fault_recovery"], "rows": records}, f,
+                      indent=1)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

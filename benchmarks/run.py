@@ -28,6 +28,7 @@ BENCHES = (
     "async_serving",      # beyond-paper: event-driven serving core sweep
     "cosim",              # beyond-paper: edge-to-TPU co-simulation sweep
     "federation",         # beyond-paper: cross-EN offload policy sweep
+    "fault_recovery",     # beyond-paper: fault injection + recovery under loss
     "roofline",           # §Roofline (reads dry-run artifacts)
 )
 

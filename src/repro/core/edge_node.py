@@ -27,6 +27,14 @@ from .reuse_store import ReuseStore
 from .sim_clock import Future
 
 
+class ExecAborted(RuntimeError):
+    """Execution abandoned before a result existed — the owning EN crashed,
+    a serving engine was torn down mid-flight, or a delegated offload timed
+    out with no path left to re-dispatch.  Set on the execution ``Future``
+    (``try_set_exception``) so waiters are rejected deterministically
+    instead of dangling past drain-to-idle."""
+
+
 @dataclasses.dataclass
 class Service:
     """An edge service: ``execute`` is the from-scratch path.
@@ -141,6 +149,12 @@ class ComputeBackend:
         partition (``EngineBackend``'s per-EN replica ``bucket_range``)
         re-derive it here; the inline model has no such state."""
 
+    def on_en_crash(self, node: Any) -> None:
+        """Crash-stop (no drain): tear down per-EN execution state and
+        reject every in-flight future with ``ExecAborted``.  The inline
+        model resolves at submit time, so it has nothing in flight; the
+        serving engine backend overrides this to abort its replicas."""
+
 
 @dataclasses.dataclass
 class LoadSnapshot:
@@ -191,7 +205,7 @@ class InlineBackend(ComputeBackend):
         net = self.net
         en = net.edge_nodes[node]
         svc = net.services[svc_name]
-        exec_t = svc.sample_exec_time(net._rng)
+        exec_t = svc.sample_exec_time(net._rng) * net.exec_inflation(node)
         result = svc.execute(emb)
         if defer_inserts is None:
             en.stores[svc_name].insert(emb, result)
@@ -262,6 +276,10 @@ class EdgeNode:
             "remote_hits": 0,    # federated tasks answered from this store
             "remote_execs": 0,   # federated tasks executed on this EN
             "remote_coalesced": 0,  # federated followers riding a leader
+            # fault/recovery layer (faults/, PIT aging, retransmission):
+            "pit_expired": 0,    # PIT entries aged out at this node
+            "retx_coalesced": 0,  # retransmissions deduped onto in-flight work
+            "exec_failed": 0,    # executions rejected (ExecAborted -> NACK)
         }
 
     def register(self, service: Service) -> None:

@@ -48,6 +48,9 @@ class ForwarderStats:
     rfib_routed: int = 0
     fib_routed: int = 0
     dropped: int = 0
+    retx_forwarded: int = 0
+    nonce_duplicates: int = 0
+    pit_expired: int = 0
 
 
 class Forwarder:
@@ -58,10 +61,11 @@ class Forwarder:
         fib_delay_range=(71e-6, 101e-6),
         rfib_delay_range=(74e-6, 106e-6),
         seed: int = 0,
+        pit_lifetime_s: float = 4.0,
     ):
         self.node_id = node_id
         self.cs = ContentStore(cs_capacity)
-        self.pit = PendingInterestTable()
+        self.pit = PendingInterestTable(lifetime_s=pit_lifetime_s)
         self.fib = FIB()
         self.rfib = RFIB()
         self.stats = ForwarderStats()
@@ -86,10 +90,16 @@ class Forwarder:
             meta["reuse_node"] = self.node_id
             hit = dataclasses.replace(cached, meta=meta)
             return [ForwardAction(in_face, hit, self._delay(self._fib_delay))]
-        # 2. PIT insert / aggregation.
-        if not self.pit.insert(interest, in_face, now):
+        # 2. PIT admit: aggregate / dedup / pass retransmissions upstream.
+        verdict = self.pit.admit(interest, in_face, now)
+        if verdict == "aggregate":
             self.stats.aggregated += 1
             return []
+        if verdict == "duplicate":
+            self.stats.nonce_duplicates += 1
+            return []
+        if verdict == "retransmit":
+            self.stats.retx_forwarded += 1  # falls through: forward upstream
         # 3./4. Forwarding decision.
         if interest.forwarding_hint is None and is_task_name(interest.name):
             service, _, hash_comp = parse_task_name(interest.name)
@@ -131,5 +141,7 @@ class Forwarder:
         return [ForwardAction(f, data, delay) for f in faces if f != in_face or len(faces) == 1]
 
     # ---------------------------------------------------------- housekeeping
-    def expire(self, now: float) -> None:
-        self.pit.expire(now)
+    def expire(self, now: float) -> int:
+        n = self.pit.expire(now)
+        self.stats.pit_expired += n
+        return n

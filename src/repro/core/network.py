@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 import random
 import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -112,6 +113,8 @@ class TaskRecord:
     true_result: Any = None
     result: Any = None
     forwarding_error: bool = False
+    retx: int = 0                # consumer retransmissions sent for this task
+    failed: bool = False         # gave up (retx budget exhausted / NACKed out)
 
     @property
     def completion_time(self) -> float:
@@ -140,6 +143,16 @@ class Metrics:
         if kind is None:
             return sum(r.reuse is not None for r in done) / len(done)
         return len(self.by_reuse(kind)) / len(done)
+
+    def completion_rate(self) -> float:
+        """Fraction of submitted tasks that completed (fault runs: tasks can
+        be lost to link loss past the retransmission budget or EN crashes)."""
+        if not self.records:
+            return 1.0
+        return len(self.completed()) / len(self.records)
+
+    def retransmissions(self) -> int:
+        return sum(r.retx for r in self.records)
 
     def accuracy(self) -> float:
         reused = [r for r in self.completed() if r.reuse is not None]
@@ -196,6 +209,18 @@ class ReservoirNetwork:
         backend: Optional[ComputeBackend] = None,  # EN execute-path seam
         offload_policy: Any = None,    # federation: name | OffloadPolicy
         federation_kw: Optional[Dict[str, Any]] = None,
+        retx_timeout_s: Optional[float] = None,  # consumer retransmission:
+                                       # initial timeout (None/0 = off, the
+                                       # legacy lossless-fabric behaviour)
+        retx_backoff: float = 2.0,     # exponential backoff multiplier
+        retx_max: int = 4,             # retries before giving up (failed)
+        pit_lifetime_s: Optional[float] = None,  # None = entries never age
+                                       # out (legacy: expire() was dead code,
+                                       # so the seed fabric had an infinite
+                                       # effective lifetime); set a finite
+                                       # lifetime alongside retx so retrans-
+                                       # missions refresh live entries
+        pit_sweep_interval_s: float = 1.0,  # PIT aging tick (event-driven)
         seed: int = 0,
     ):
         assert mode in ("reservoir", "icedge")
@@ -210,6 +235,24 @@ class ReservoirNetwork:
         self._en_ready: Dict[Tuple[Any, str], _ReadyEntry] = {}
         self.measure_fwd_errors = measure_fwd_errors
         self._pending_cb: Dict[Tuple[Any, str], List[Callable]] = {}
+        # --- fault layer (DESIGN.md §Fault model)
+        self.chaos = None              # faults.ChaosController attaches here
+        self._crashed: Dict[Any, EdgeNode] = {}  # crash-stop: state LOST
+        self.retx_timeout_s = retx_timeout_s or 0.0
+        self.retx_backoff = float(retx_backoff)
+        self.retx_max = int(retx_max)
+        self.pit_lifetime_s = (math.inf if pit_lifetime_s is None
+                               else float(pit_lifetime_s))
+        self._en_inflight: Dict[Tuple[Any, str], Future] = {}  # retx dedup
+        self.fault_stats = {
+            "retx_sent": 0,        # consumer retransmissions emitted
+            "retx_give_ups": 0,    # tasks abandoned after retx_max retries
+            "nacks_sent": 0,       # EN-side failures answered with a NACK
+            "nacks_received": 0,   # NACKs that reached a consumer callback
+            "crashed_ens": 0,      # crash_en invocations
+            "crash_drops": 0,      # packets that died at a crashed EN app
+            "crash_recoveries": 0,  # dead-peer verdicts that re-partitioned
+        }
         self.graph = graph
         self.lsh_params = lsh_params
         self.lsh = get_lsh(lsh_params)
@@ -235,6 +278,7 @@ class ReservoirNetwork:
             self.forwarders[node] = Forwarder(
                 f"/net/{node}", cs_capacity=cs_capacity,
                 seed=seed + zlib.crc32(str(node).encode()) % 9973,
+                pit_lifetime_s=self.pit_lifetime_s,
             )
             self._face_count[node] = APP_FACE + 1
         for a, b in graph.edges:
@@ -256,6 +300,12 @@ class ReservoirNetwork:
         self._en_busy_until: Dict[Any, float] = {n: 0.0 for n in self.en_nodes}
         self.en_batch_window_s = float(en_batch_window_s)
         self._en_pending: Dict[Any, List[Interest]] = {n: [] for n in self.en_nodes}
+
+        # --- PIT aging: event-driven sweep, activity-gated like the gossip
+        # chain (ticks while any PIT holds entries, stops at idle so
+        # drain-to-idle run() terminates).  kick()ed by every task arrival.
+        self._pit_sweep = self.loop.every(float(pit_sweep_interval_s),
+                                          self._pit_sweep_tick)
 
         # --- compute backend (EN execute-path seam; DESIGN.md §Co-sim)
         self.backend: ComputeBackend = backend or InlineBackend()
@@ -392,6 +442,80 @@ class ReservoirNetwork:
         for interest in self._en_pending.pop(node, []):
             self._failover_interest(node, interest)
 
+    def crash_en(self, node: Any) -> None:
+        """Crash-stop (fail-stop, no drain) — the adversarial counterpart of
+        graceful ``remove_en``:
+
+        * the reuse store and all EN-side state are LOST (no failover of
+          window-buffered tasks, no draining of in-flight completions);
+        * pending TTC ready entries die with the node — fetches for them are
+          dropped by ``_deliver_app``'s crash guard;
+        * the routing fabric is NOT re-partitioned and no federation peer is
+          notified: rFIB entries keep naming the dead EN until the
+          federation layer's staleness detector declares it dead
+          (``on_peer_dead``), which is exactly the blackout window a
+          recovery benchmark measures;
+        * the compute backend rejects every in-flight execution future with
+          ``ExecAborted`` so waiters resolve (error path) instead of
+          dangling past drain-to-idle.
+        """
+        en = self.edge_nodes.pop(node)
+        self.en_nodes.remove(node)
+        self._crashed[node] = en
+        self.fault_stats["crashed_ens"] += 1
+        self._icedge_store.pop(node, None)
+        self._en_pending.pop(node, None)
+        for key in [k for k in self._en_ready if k[0] == node]:
+            entry = self._en_ready.pop(key)
+            if entry.timer is not None:
+                entry.timer.cancel()
+        for key in [k for k in self._en_inflight if k[0] == node]:
+            self._en_inflight.pop(key, None)
+        self.backend.on_en_crash(node)
+
+    def on_peer_dead(self, node: Any) -> None:
+        """Failure-detector verdict (federation layer, telemetry staleness):
+        route around a crashed EN by re-partitioning every service's rFIB
+        bucket ranges across the survivors.  Consumer retransmissions that
+        kept timing out against the dead prefix then reach the new owner
+        (cold store — the reuse-hit dip the recovery benchmark measures).
+        No-op unless the node actually crashed: graceful leaves already
+        re-partitioned in ``remove_en``."""
+        if node not in self._crashed or node in self.edge_nodes:
+            return
+        for svc in self.services:
+            self.rebalance_service(svc, _notify_backend=False)
+        self.backend.on_partition_change()
+        self.fault_stats["crash_recoveries"] += 1
+
+    def exec_inflation(self, node: Any) -> float:
+        """Slow-node fault: multiplier on sampled execution times (1.0 when
+        no chaos controller is attached or no rule is active)."""
+        if self.chaos is None:
+            return 1.0
+        return self.chaos.exec_factor(node, self._now)
+
+    def _pit_sweep_tick(self) -> bool:
+        """Periodic PIT aging on the event loop (was dead code: ``expire``
+        existed but nothing ticked it, so unsatisfied entries leaked).
+        Returns truthy while any PIT still holds entries, keeping the
+        activity-gated chain alive exactly until the tables drain."""
+        if self.pit_lifetime_s == math.inf:
+            return False  # nothing can ever expire; keeping the chain alive
+                          # on a stranded entry would make run() never drain
+        now = self._now
+        alive = False
+        for node, fwd in self.forwarders.items():
+            n = fwd.expire(now)
+            if n:
+                en = (self.edge_nodes.get(node) or self._departed.get(node)
+                      or self._crashed.get(node))
+                if en is not None:
+                    en.stats["pit_expired"] += n
+            if len(fwd.pit):
+                alive = True
+        return alive
+
     def _departed_receive(self, node: Any, interest: Interest) -> None:
         """App-face Interest at a departed EN's node (still a forwarder)."""
         if "service" not in interest.app_params:
@@ -477,6 +601,7 @@ class ReservoirNetwork:
         self.forwarders[node] = Forwarder(
             f"/user/{user_id}", cs_capacity=self._user_cs_capacity,
             seed=self._rng.randrange(1 << 30),
+            pit_lifetime_s=self.pit_lifetime_s,
         )
         self._face_count[node] = APP_FACE + 1
         self.graph.add_edge(node, attach_to, delay=self.user_link_delay_s)
@@ -516,6 +641,13 @@ class ReservoirNetwork:
                 if link is None:
                     continue
                 peer, peer_face, delay = link
+                if self.chaos is not None:
+                    # fault seam: loss/partition (None) or added jitter.
+                    # App-face deliveries above are node-internal and exempt.
+                    extra = self.chaos.on_link(node, peer, act.packet, t_out)
+                    if extra is None:
+                        continue
+                    delay += extra
                 self.at(t_out + delay, self._deliver, peer, peer_face, act.packet)
 
     def _deliver(self, node: Any, face: int, packet) -> None:
@@ -534,6 +666,12 @@ class ReservoirNetwork:
         self._emit(node, actions, self._now)
 
     def _deliver_app(self, node: Any, packet) -> None:
+        if node in self._crashed:
+            # crash-stop: the EN application is gone (no drain, no NACK —
+            # silence is the failure signal); the co-located forwarder keeps
+            # routing transit traffic, only app-face deliveries die here.
+            self.fault_stats["crash_drops"] += 1
+            return
         if isinstance(packet, Interest):
             if node in self.edge_nodes:
                 self._en_receive(node, packet)
@@ -564,6 +702,9 @@ class ReservoirNetwork:
             # delegating EN already searched — and coalesces in-flight
             # duplicates onto one leader execution.
             self.federator.handle_remote(node, interest)
+            return
+        if interest.retx and self.mode == "reservoir" \
+                and self._en_retx_coalesce(node, interest):
             return
         if self.mode == "reservoir" and self.en_batch_window_s > 0:
             # batch window (DESIGN.md §Array-native store): buffer tasks
@@ -603,6 +744,65 @@ class ReservoirNetwork:
             data = Data(interest.name, content=result,
                         meta={"reuse": None, "en": en.prefix, "cacheable": False})
             self._send_from_en(node, data, done - self._now)
+
+    def _en_retx_coalesce(self, node: Any, interest: Interest) -> bool:
+        """EN-side retransmission dedup (no duplicate execution).
+
+        Nonce-level duplicates die at the PIT; a consumer *retransmission*
+        carries a fresh nonce, so the EN itself must recognise work already
+        in flight for the same name — otherwise every retry past the
+        forwarders would execute the task again.  TTC-protocol tasks are
+        recognised by their ready entry (answered with a refreshed TTC, the
+        original answer may have been lost); direct-protocol tasks by the
+        pending execution future (the single completion Data satisfies the
+        retransmission-refreshed PIT trail) or the EN batch window buffer.
+        Post-completion retransmissions fall through to the reuse store,
+        which answers them as an honest store hit."""
+        en = self.edge_nodes[node]
+        key = (node, interest.name)
+        if self.protocol == "ttc":
+            entry = self._en_ready.get(key)
+            if entry is not None:
+                en.stats["retx_coalesced"] += 1
+                ttc = (max(entry.done - self._now, 1e-4) if entry.resolved
+                       else self._backend_ttc(node, interest.name, entry))
+                data = Data(interest.name,
+                            content={"ttc": ttc, "en_prefix": en.prefix},
+                            meta={"control": "ttc", "cacheable": False,
+                                  "en": en.prefix})
+                self._send_from_en(node, data, 0.0)
+                return True
+        if key in self._en_inflight:
+            en.stats["retx_coalesced"] += 1
+            return True
+        if any(p.name == interest.name
+               for p in self._en_pending.get(node, ())):
+            en.stats["retx_coalesced"] += 1
+            return True
+        return False
+
+    def _track_inflight(self, node: Any, name: str, fut: Future) -> None:
+        """Register a pending execution for retransmission dedup.
+
+        The entry must outlive the future's *resolution* up to the result's
+        ``t_done``: the inline backend resolves at submit time with a future
+        completion timestamp, and a retransmission arriving in between must
+        coalesce (the result does not exist yet — a store hit now would be
+        time travel)."""
+        key = (node, name)
+        self._en_inflight[key] = fut
+
+        def clear() -> None:
+            if self._en_inflight.get(key) is fut:
+                self._en_inflight.pop(key, None)
+
+        def on_done(f: Future) -> None:
+            if f.exception is not None:
+                clear()
+            else:
+                self.at(max(f.result.t_done, self._now), clear)
+
+        fut.add_done_callback(on_done)
 
     def _process_reservoir_task(
         self,
@@ -648,6 +848,10 @@ class ReservoirNetwork:
         fut = self._submit_execution(node, svc_name, interest, emb,
                                      threshold, search_t + pull_delay,
                                      defer_inserts=defer_inserts)
+        if self.protocol != "ttc":
+            # ttc tasks are deduped via their ready entry; direct tasks via
+            # the pending future (retransmission coalescing).
+            self._track_inflight(node, interest.name, fut)
         if self.protocol == "ttc":
             # Fig. 3b: answer the task Interest with a TTC estimate; the
             # user fetches the result at /<EN-prefix>/<name> after TTC-RTT.
@@ -773,6 +977,8 @@ class ReservoirNetwork:
         name = interest.name
 
         def deliver(fut: Future) -> None:
+            if fut.exception is not None:
+                return  # leader aborted (crash-stop); consumers re-express
             comp = fut.result
             data = Data(name, content=comp.result,
                         meta={"reuse": "en", "similarity": sim,
@@ -811,6 +1017,16 @@ class ReservoirNetwork:
         its TTL guard; the user's scheduled fetch delivers from it."""
         if self._en_ready.get(key) is not entry:
             return  # TTL-expired or superseded before completion
+        if fut.exception is not None:
+            # execution aborted (engine torn down / offload dead-ended):
+            # drop the entry so the user's fetch is NACKed and re-expresses
+            # the task instead of waiting out a TTC that will never land.
+            self._en_ready.pop(key, None)
+            en = (self.edge_nodes.get(key[0]) or self._departed.get(key[0])
+                  or self._crashed.get(key[0]))
+            if en is not None:
+                en.stats["exec_failed"] += 1
+            return
         comp = fut.result
         entry.done = comp.t_done
         entry.result = comp.result
@@ -833,7 +1049,18 @@ class ReservoirNetwork:
                             fut: Future) -> None:
         """Direct protocol: the backend's result exists — answer the task
         Interest through the EN's forwarder at ``t_done`` (immediately when
-        the future resolved at completion time, i.e. the engine path)."""
+        the future resolved at completion time, i.e. the engine path).
+        A rejected future (``ExecAborted``) answers with a NACK instead so
+        downstream PIT state unwinds and consumers re-express promptly."""
+        if fut.exception is not None:
+            en = (self.edge_nodes.get(node) or self._departed.get(node)
+                  or self._crashed.get(node))
+            if en is not None:
+                en.stats["exec_failed"] += 1
+            if node in self._crashed:
+                return  # the EN app died with the work; silence
+            self._send_nack(node, name, str(fut.exception))
+            return
         comp = fut.result
         en = self._en_of(node)
         meta = {"reuse": comp.reuse, "en": en.prefix, "fwd_error": fwd_err}
@@ -859,7 +1086,10 @@ class ReservoirNetwork:
         orig = interest.name[len(en.prefix):]
         entry = self._en_ready.get((node, orig))
         if entry is None:
-            en.stats["fetch_drops"] += 1  # unsolicited or expired; drop
+            # unsolicited or expired: answer with a NACK (was a silent drop)
+            # so the consumer re-expresses the task instead of timing out.
+            en.stats["fetch_drops"] += 1
+            self._send_nack(node, interest.name, "no-ready-entry")
             return
         en.stats["fetches"] += 1
         if entry.resolved and entry.done <= self._now + 1e-9:
@@ -885,10 +1115,29 @@ class ReservoirNetwork:
             return max(self.backend.ttc_estimate(node, entry.service), 1e-4)
         return max(entry.done - self._now, 1e-4)
 
+    def _send_nack(self, node: Any, name: str, reason: str) -> None:
+        """Application-level NACK: a non-cacheable Data naming a dead-end
+        exchange (aborted execution, expired ready entry), so downstream PIT
+        state unwinds and the consumer re-expresses immediately instead of
+        waiting out its retransmission timer."""
+        if node in self._crashed:
+            return
+        en = self.edge_nodes.get(node) or self._departed.get(node)
+        self.fault_stats["nacks_sent"] += 1
+        data = Data(name, content=None,
+                    meta={"control": "nack", "reason": reason,
+                          "cacheable": False,
+                          "en": en.prefix if en is not None else ""})
+        self._send_from_en(node, data, 0.0)
+
     def _send_from_en(self, node: Any, data: Data, delay: float) -> None:
         fwd = self.forwarders[node]
 
         def emit():
+            if node in self._crashed:
+                # the result died with the EN (in-flight at crash time)
+                self.fault_stats["crash_drops"] += 1
+                return
             actions = fwd.on_data(data, APP_FACE, self._now)
             self._emit(node, actions, self._now)
 
@@ -958,26 +1207,152 @@ class ReservoirNetwork:
             # estimate grew each round and the fetch wait collapsed toward 0
             # (fetch spam) instead of tracking the actual interest RTT.
             sent_at = [t0]
+            # --- consumer retransmission (DESIGN.md §Fault model): one timer
+            # guards the outstanding exchange ("task" Interest or TTC result
+            # "fetch"); any response cancels it, a timeout re-expresses the
+            # Interest with a fresh nonce + retx flag under exponential
+            # backoff.  tries is cumulative across the task's exchanges.
+            # Disabled (the lossless-fabric default) this adds no events.
+            state = {"tries": 0, "timer": None, "phase": "task",
+                     "fetch": None, "task_cb": False, "fetch_cb": None}
+
+            def cancel_timer():
+                if state["timer"] is not None:
+                    state["timer"].cancel()
+                    state["timer"] = None
+
+            def arm(phase):
+                if self.retx_timeout_s <= 0:
+                    return
+                cancel_timer()
+                timeout = self.retx_timeout_s * (
+                    self.retx_backoff ** state["tries"])
+                state["timer"] = self.at(self._now + timeout, on_timeout,
+                                         phase, state["tries"])
+
+            def give_up():
+                rec.failed = True
+                self.fault_stats["retx_give_ups"] += 1
+
+            def retransmit():
+                """Re-express the original task Interest (fresh nonce, retx
+                flag).  Uniform recovery for every lost exchange: a live EN
+                coalesces the re-expression onto its in-flight/ready state
+                (refreshed TTC or store hit), and if the owner died the
+                re-partitioned rFIB routes it to the new one — retrying a
+                result-*fetch* name could only ever reach the dead prefix."""
+                if state["tries"] >= self.retx_max:
+                    give_up()
+                    return
+                state["tries"] += 1
+                rec.retx += 1
+                self.fault_stats["retx_sent"] += 1
+                state["phase"] = "task"
+                state["fetch"] = None
+                send_task()
+                arm("task")
+
+            def on_timeout(phase, seen_tries):
+                state["timer"] = None
+                if rec.t_complete >= 0 or rec.failed:
+                    return
+                if state["phase"] != phase or state["tries"] != seen_tries:
+                    return  # the exchange moved on; stale timer
+                retransmit()
+
+            def on_task_response(data: Data, t: float):
+                state["task_cb"] = False
+                on_result(data, t)
+
+            def on_fetch_response(data: Data, t: float):
+                state["fetch_cb"] = None
+                on_result(data, t)
+
+            def send_task():
+                if self.federator is not None:
+                    # heartbeat for the failure detector: hits and
+                    # retransmissions are traffic too, not just misses
+                    self.federator.note_activity()
+                interest = Interest(
+                    name,
+                    app_params={
+                        "service": service.strip("/"),
+                        "input": emb,
+                        "threshold": threshold,
+                        "user_prefix": fwd.node_id,
+                        "input_size": input_size,
+                    },
+                    forwarding_hint=hint,
+                    retx=state["tries"],
+                )
+                state["phase"] = "task"
+                if not state["task_cb"]:
+                    self._pending_cb.setdefault(
+                        (node, name), []).append(on_task_response)
+                    state["task_cb"] = True
+                actions = fwd.on_interest(interest, APP_FACE, self._now)
+                if state["tries"] == 0:
+                    # the input is hashed once; retries reuse the name
+                    for a in actions:
+                        a.delay_s += hash_t
+                self._emit(node, actions, self._now)
+
+            def send_fetch(fetch_name, retx: Optional[int] = None):
+                if fetch_name is None:
+                    return
+                sent_at[0] = self._now
+                state["phase"] = "fetch"
+                state["fetch"] = fetch_name
+                if state["fetch_cb"] != fetch_name:
+                    self._pending_cb.setdefault(
+                        (node, fetch_name), []).append(on_fetch_response)
+                    state["fetch_cb"] = fetch_name
+                actions = fwd.on_interest(
+                    Interest(fetch_name,
+                             retx=state["tries"] if retx is None else retx),
+                    APP_FACE, self._now)
+                self._emit(node, actions, self._now)
 
             def on_result(data: Data, t: float):
-                if rec.t_complete >= 0:
+                if rec.t_complete >= 0 or rec.failed:
+                    return
+                if data.meta.get("control") == "nack":
+                    # the exchange dead-ended at the EN (aborted execution,
+                    # lost ready entry): re-express the original task — the
+                    # (possibly re-partitioned) rFIB picks the owner afresh.
+                    self.fault_stats["nacks_received"] += 1
+                    cancel_timer()
+                    state["phase"] = "task"
+                    state["fetch"] = None
+                    if self.retx_timeout_s > 0:
+                        retransmit()
+                    else:
+                        give_up()
                     return
                 if data.meta.get("control") == "ttc":
                     # Fig. 3b: schedule the result fetch at TTC - RTT
+                    cancel_timer()
                     rtt = max(t - sent_at[0], 1e-4)
                     wait = max(float(data.content["ttc"]) - rtt, 0.0)
                     fetch_name = data.content["en_prefix"] + name
+                    state["phase"] = "fetch"
+                    state["fetch"] = fetch_name
 
                     def fetch():
-                        sent_at[0] = self._now
-                        self._pending_cb.setdefault(
-                            (node, fetch_name), []).append(on_result)
-                        actions = fwd.on_interest(
-                            Interest(fetch_name), APP_FACE, self._now)
-                        self._emit(node, actions, self._now)
+                        if rec.t_complete >= 0 or rec.failed:
+                            return
+                        # Carry the task's retx count: if an earlier fetch for
+                        # this name was lost in flight, the consumer's own PIT
+                        # still holds a pending entry and a fresh-nonce fetch
+                        # would be aggregated into it (black-holed); the retx
+                        # flag forces the "retransmit" verdict so every hop
+                        # re-forwards past the stale entry.
+                        send_fetch(fetch_name)
+                        arm("fetch")
 
                     self.at(t + wait, fetch)
                     return
+                cancel_timer()
                 rec.t_complete = t
                 rec.result = data.content
                 reuse = data.meta.get("reuse")
@@ -997,24 +1372,11 @@ class ReservoirNetwork:
                 if rec.reuse is not None:
                     rec.correct = results_match(rec.result, rec.true_result)
 
-            interest = Interest(
-                name,
-                app_params={
-                    "service": service.strip("/"),
-                    "input": emb,
-                    "threshold": threshold,
-                    "user_prefix": fwd.node_id,
-                    "input_size": input_size,
-                },
-                forwarding_hint=hint,
-            )
             # The completion callback fires when Data reaches this user's
             # APP_FACE (via the PIT return path).
-            self._pending_cb.setdefault((node, name), []).append(on_result)
-            actions = fwd.on_interest(interest, APP_FACE, self._now)
-            for a in actions:
-                a.delay_s += hash_t
-            self._emit(node, actions, self._now)
+            send_task()
+            arm("task")
+            self._pit_sweep.kick()
 
         self.at(t0, start)
         return rec

@@ -24,6 +24,12 @@ class Interest:
     - ``input``: task input embedding (small inputs ride in the Interest)
     - ``input_size``: estimated input size (bytes) for the pull path (§IV-C)
     - ``user_prefix``: requester prefix for direct communication (§IV-C)
+
+    ``retx`` is the consumer's retry counter (0 = first transmission).  A
+    retransmission carries a *fresh* nonce — exact (face, nonce) duplicates
+    are dropped at the PIT — but the flag lets forwarders distinguish a
+    deliberate re-expression (forward it upstream, the first copy may be
+    lost) from an independent same-name request (aggregate it).
     """
 
     name: str
@@ -31,6 +37,7 @@ class Interest:
     forwarding_hint: Optional[str] = None  # attached after the one rFIB lookup
     nonce: int = dataclasses.field(default_factory=lambda: next(_nonce))
     hop_limit: int = 64
+    retx: int = 0
 
     def copy(self) -> "Interest":
         return dataclasses.replace(self, app_params=dict(self.app_params))

@@ -23,24 +23,49 @@ class PendingInterestTable:
         self.lifetime_s = lifetime_s
         self._table: Dict[str, PitEntry] = {}
         self.aggregations = 0
+        self.retransmits = 0
+        self.duplicates = 0
 
     def __len__(self) -> int:
         return len(self._table)
 
-    def insert(self, interest: Interest, in_face: int, now: float) -> bool:
-        """Returns True if this is a NEW entry (Interest must be forwarded);
-        False if aggregated with an existing pending entry."""
+    def admit(self, interest: Interest, in_face: int, now: float) -> str:
+        """Classify an incoming Interest against pending state.
+
+        Returns one of:
+
+        * ``"new"``         — no live entry; one was created, forward it.
+        * ``"aggregate"``   — joins a live entry; do not forward, the
+                              pending upstream exchange will satisfy it.
+        * ``"retransmit"``  — consumer re-expression (``interest.retx``) of
+                              a still-pending name: recorded on the entry
+                              and the lifetime refreshed, but the caller
+                              must forward it upstream — the first copy may
+                              have been lost on a link.
+        * ``"duplicate"``   — exact (face, nonce) already seen; drop (the
+                              NDN nonce loop/duplicate check).
+        """
         entry = self._table.get(interest.name)
         if entry is not None and now <= entry.expiry:
-            if (in_face, interest.nonce) not in entry.in_faces:
-                entry.in_faces.append((in_face, interest.nonce))
+            if (in_face, interest.nonce) in entry.in_faces:
+                self.duplicates += 1
+                return "duplicate"
+            entry.in_faces.append((in_face, interest.nonce))
             entry.expiry = now + self.lifetime_s
+            if interest.retx:
+                self.retransmits += 1
+                return "retransmit"
             self.aggregations += 1
-            return False
+            return "aggregate"
         self._table[interest.name] = PitEntry(
             interest.name, [(in_face, interest.nonce)], now + self.lifetime_s
         )
-        return True
+        return "new"
+
+    def insert(self, interest: Interest, in_face: int, now: float) -> bool:
+        """Returns True if this is a NEW entry (Interest must be forwarded);
+        False if aggregated with an existing pending entry."""
+        return self.admit(interest, in_face, now) == "new"
 
     def satisfy(self, name: str) -> Optional[List[int]]:
         """Data arrived: pop the entry, return downstream faces to send to."""

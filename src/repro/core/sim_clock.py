@@ -144,12 +144,20 @@ class Future:
     resolves the future and fires the callbacks inline; later callers get
     ``False`` and must treat their result as redundant (e.g. a backup
     request finishing after the primary).
+
+    Futures can also *fail*: ``try_set_exception`` rejects every waiter with
+    the given exception instead of a value, so a crashed backend or a dead
+    remote EN resolves its followers deterministically rather than leaving
+    them pending forever.  ``result`` raises the stored exception;
+    done-callbacks fire either way and must consult ``exception`` (or use
+    ``propagate``/``then``, which route errors for them).
     """
 
-    __slots__ = ("_result", "_done", "_callbacks", "resolved_at")
+    __slots__ = ("_result", "_exception", "_done", "_callbacks", "resolved_at")
 
     def __init__(self):
         self._result: Any = None
+        self._exception: Optional[BaseException] = None
         self._done = False
         self._callbacks: List[Callable[["Future"], None]] = []
         self.resolved_at: Optional[float] = None
@@ -159,24 +167,48 @@ class Future:
         return self._done
 
     @property
+    def exception(self) -> Optional[BaseException]:
+        return self._exception
+
+    @property
     def result(self) -> Any:
         if not self._done:
             raise RuntimeError("Future not resolved yet")
+        if self._exception is not None:
+            raise self._exception
         return self._result
+
+    def _finish(self) -> None:
+        self._done = True
+        callbacks, self._callbacks = self._callbacks, []
+        for cb in callbacks:
+            cb(self)
 
     def try_set_result(self, value: Any, now: Optional[float] = None) -> bool:
         if self._done:
             return False
         self._result = value
-        self._done = True
         self.resolved_at = now
-        callbacks, self._callbacks = self._callbacks, []
-        for cb in callbacks:
-            cb(self)
+        self._finish()
         return True
 
     def set_result(self, value: Any, now: Optional[float] = None) -> None:
         if not self.try_set_result(value, now):
+            raise RuntimeError("Future already resolved")
+
+    def try_set_exception(self, exc: BaseException,
+                          now: Optional[float] = None) -> bool:
+        """Reject the future (first-outcome-wins, same as try_set_result)."""
+        if self._done:
+            return False
+        self._exception = exc
+        self.resolved_at = now
+        self._finish()
+        return True
+
+    def set_exception(self, exc: BaseException,
+                      now: Optional[float] = None) -> None:
+        if not self.try_set_exception(exc, now):
             raise RuntimeError("Future already resolved")
 
     def add_done_callback(self, fn: Callable[["Future"], None]) -> None:
@@ -185,14 +217,36 @@ class Future:
         else:
             self._callbacks.append(fn)
 
+    def propagate(self, out: "Future") -> bool:
+        """Forward this (resolved) future's outcome — value or exception —
+        to ``out``.  The safe way to chain futures from a done-callback:
+        ``f.add_done_callback(lambda f: f.propagate(out))`` never raises,
+        unlike touching ``f.result`` directly."""
+        if self._exception is not None:
+            return out.try_set_exception(self._exception, now=self.resolved_at)
+        return out.try_set_result(self._result, now=self.resolved_at)
+
     def then(self, fn: Callable[[Any], Any]) -> "Future":
         """Derived future resolving with ``fn(result)`` when this one does.
 
         The adaptation seam between result vocabularies (e.g. a serving
         engine's ``ServeResult`` -> the network's ``ExecCompletion``): the
         derived future inherits ``resolved_at``, so virtual-time attribution
-        survives the mapping.  Resolves inline if this future is done."""
+        survives the mapping.  Resolves inline if this future is done.
+        Errors propagate: if this future fails, or ``fn`` raises, the
+        derived future fails with that exception instead of resolving."""
         out = Future()
-        self.add_done_callback(
-            lambda f: out.try_set_result(fn(f._result), now=f.resolved_at))
+
+        def _chain(f: "Future") -> None:
+            if f._exception is not None:
+                out.try_set_exception(f._exception, now=f.resolved_at)
+                return
+            try:
+                value = fn(f._result)
+            except Exception as exc:  # adapter failure rejects followers
+                out.try_set_exception(exc, now=f.resolved_at)
+                return
+            out.try_set_result(value, now=f.resolved_at)
+
+        self.add_done_callback(_chain)
         return out

@@ -34,7 +34,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import networkx as nx
 import numpy as np
 
-from repro.core.edge_node import ExecCompletion
+from repro.core.edge_node import ExecAborted, ExecCompletion
 from repro.core.lsh import normalize
 from repro.core.namespace import TASK_KEYWORD, decode_task_hash, parse_task_name
 from repro.core.network import APP_FACE
@@ -42,7 +42,7 @@ from repro.core.packets import Data, Interest
 from repro.core.sim_clock import Future
 
 from .policy import LocalOnlyPolicy, OffloadContext, OffloadPolicy, get_policy
-from .telemetry import TelemetryGossip
+from .telemetry import PeerHealth, TelemetryGossip
 
 # mid-range forwarder processing charge per hop for the RTT estimate
 _HOP_PROC_S = 86e-6
@@ -61,6 +61,8 @@ class _Offload:
     threshold: float
     out: Future                  # resolves with the ExecCompletion
     send_timer: Any = None       # lead-delay timer; cancelled on dst leave
+    timeout_timer: Any = None    # re-dispatch deadline (fault layer)
+    cancelled: bool = False      # re-dispatched elsewhere; do not send/retry
 
 
 class Federator:
@@ -77,12 +79,28 @@ class Federator:
         rebalance_skew: float = 2.5,        # max/mean miss-rate ratio
         rebalance_persistence: int = 3,     # consecutive skewed checks
         rebalance_min_tasks: int = 64,      # misses per check window
+        offload_timeout_s: float = 0.0,     # delegated-offload re-dispatch
+                                            # deadline (0 = off: a fixed
+                                            # deadline is workload-sensitive
+                                            # — deep-backlog peers are slow,
+                                            # not dead — so fault configs
+                                            # opt in explicitly)
+        dead_peer_detection: bool = True,   # telemetry-staleness detector
+        suspect_after_s: Optional[float] = None,  # default 5x gossip interval
+        dead_after_s: Optional[float] = None,     # default 12x gossip interval
     ):
         self.net = net
         self.policy: OffloadPolicy = get_policy(policy)
         self.gossip = TelemetryGossip(net, interval_s=gossip_interval_s,
                                       prop_delay_s=prop_delay_s)
         self.gossip.on_round = self._on_gossip_round
+        self.offload_timeout_s = float(offload_timeout_s)
+        self.health: Optional[PeerHealth] = None
+        if dead_peer_detection:
+            self.health = PeerHealth(net, self.gossip,
+                                     suspect_after_s=suspect_after_s,
+                                     dead_after_s=dead_after_s,
+                                     on_dead=self._peer_dead)
         self.rebalance_enabled = bool(rebalance)
         self.rebalance_every_rounds = int(rebalance_every_rounds)
         self.rebalance_skew = float(rebalance_skew)
@@ -98,9 +116,23 @@ class Federator:
             "decisions": 0, "offloads": 0, "remote_hits": 0,
             "remote_execs": 0, "remote_coalesced": 0, "rebalances": 0,
             "leave_redispatched": 0, "dropped_at_departed": 0,
+            "offload_timeouts": 0, "timeout_redispatched": 0,
+            "peers_dead": 0, "dead_redispatched": 0,
         }
 
     # ----------------------------------------------------------- decisions
+    def note_activity(self) -> None:
+        """A task Interest was expressed (first send or retransmission):
+        keep the activity-gated gossip chain — and with it the failure
+        detector / rebalance checker — alive while traffic flows.  Gating
+        on *misses* alone (``decide``) left a hole: a hit-heavy workload
+        stops calling ``decide`` once its clusters are warm, the chain
+        dies, ``PeerHealth.check`` never runs again, and a crashed EN is
+        never declared dead even while consumers retransmit against its
+        prefix.  No-op when nothing consumes the rounds."""
+        if self.rebalance_enabled or self.health is not None:
+            self.gossip.kick()
+
     def decide(self, node: Any, svc_name: str, interest: Interest,
                emb: np.ndarray, threshold: float) -> Any:
         """Pick the EN a miss should execute on (``node`` = stay local)."""
@@ -108,16 +140,20 @@ class Federator:
         self._miss_counts[node] = self._miss_counts.get(node, 0) + 1
         if isinstance(self.policy, LocalOnlyPolicy):
             # parity fast path: skip the context build (normalize, task-hash
-            # decode, live load snapshot) a local-only choose() would
-            # ignore; gossip only keeps ticking if the rebalance checker —
-            # the one local-only consumer of rounds — is enabled
-            if self.rebalance_enabled:
-                self.gossip.kick()
+            # decode, live load snapshot) a local-only choose() would ignore
+            self.note_activity()
             return node
         self.gossip.kick()
         if len(self.net.edge_nodes) < 2:
             return node
         views = self.gossip.views(node)
+        if self.health is not None:
+            # exclude suspect/dead peers from the candidate set (telemetry
+            # -staleness detection); an unsuspected crashed EN remains a
+            # candidate on purpose — offloading to it and timing out IS the
+            # detection path, there is no omniscient membership check
+            views = {n: s for n, s in views.items()
+                     if not self.health.excluded(n)}
         if not views:
             return node
         ctx = OffloadContext(
@@ -127,8 +163,12 @@ class Federator:
             now=self.net.loop.now, local_view=self.gossip.self_view(node),
             views=views, federator=self)
         target = self.policy.choose(ctx)
-        if target == node or target not in self.net.edge_nodes:
+        if target == node:
             return node
+        if target not in self.net.edge_nodes \
+                and target not in self.net._crashed:
+            return node  # unknown or announced-gone target; crashed targets
+                         # stay eligible (the timeout path detects them)
         return target
 
     def _buckets_of(self, interest: Interest) -> Optional[np.ndarray]:
@@ -140,6 +180,14 @@ class Federator:
                 comp, self.net.lsh_params.index_size_bytes))
         except ValueError:
             return None
+
+    def _en_any(self, node: Any):
+        """EdgeNode object regardless of membership state (live, departed,
+        or crashed).  Policy inputs read crashed ENs' retained objects as
+        *stale sketches* — the delegator cannot know the state is gone."""
+        return (self.net.edge_nodes.get(node)
+                or self.net._departed.get(node)
+                or self.net._crashed.get(node))
 
     # -------------------------------------------------------- policy inputs
     def rtt_s(self, a: Any, b: Any) -> float:
@@ -164,7 +212,10 @@ class Federator:
         entries = self.net.forwarders[local].rfib.entries(service)
         if not entries:
             return 0.0
-        prefix = self.net.edge_nodes[node].prefix
+        en = self._en_any(node)
+        if en is None:
+            return 0.0
+        prefix = en.prefix
         owned = sum(
             any(e.en_prefix == prefix and e.covers(t, int(b))
                 for e in entries)
@@ -175,14 +226,16 @@ class Federator:
                  threshold: float) -> bool:
         """Would ``node``'s store reuse this task?  Pure ``peek=True`` read
         (no LRU refresh, no statistics) — models a gossiped store sketch."""
-        store = self.net.edge_nodes[node].stores.get(service)
+        en = self._en_any(node)
+        store = en.stores.get(service) if en is not None else None
         if store is None or not len(store):
             return False
         (_, _, idx), = store.query_batch(emb[None], threshold, peek=True)
         return idx is not None
 
     def search_s(self, node: Any, service: str) -> float:
-        store = self.net.edge_nodes[node].stores.get(service)
+        en = self._en_any(node)
+        store = en.stores.get(service) if en is not None else None
         size = len(store) if store is not None else 1
         return self.net.delays.search_time_s(
             self.net.lsh_params.num_tables, max(size, 1))
@@ -201,7 +254,7 @@ class Federator:
         Interest leaves, exactly like the local execute path."""
         net = self.net
         en_src = net.edge_nodes[src]
-        fed_name = net.edge_nodes[dst].prefix + interest.name
+        fed_name = self._en_any(dst).prefix + interest.name
         out = Future()
         rec = _Offload(src, dst, fed_name, svc_name, interest,
                        np.asarray(emb, np.float32), threshold, out)
@@ -213,20 +266,24 @@ class Federator:
             recs = self._offloads_by_dst.get(rec.dst, [])
             if rec in recs:
                 recs.remove(rec)
+            if rec.timeout_timer is not None:
+                rec.timeout_timer.cancel()
+                rec.timeout_timer = None
             reuse = data.meta.get("reuse")
             comp = ExecCompletion(
                 data.content, t,
                 reuse="en" if reuse is not None else None,
                 similarity=float(data.meta.get("similarity", 1.0)),
-                remote_en=data.meta.get("en", net.edge_nodes.get(
-                    rec.dst, en_src).prefix))
+                remote_en=data.meta.get("en", en_src.prefix))
             out.try_set_result(comp, now=t)
 
         def send() -> None:
             rec.send_timer = None
-            if rec.dst not in net.edge_nodes:
-                return  # target left during the lead delay; on_en_leave
-                        # already re-dispatched this task
+            if rec.cancelled:
+                return  # re-dispatched (leave or peer-dead) during the lead
+                        # delay; a crashed-but-undetected dst is NOT skipped
+                        # here — the Interest goes out and the offload
+                        # timeout is the recovery path
             fed_int = Interest(fed_name, app_params={
                 "service": svc_name, "input": rec.emb,
                 "threshold": threshold, "federated": True,
@@ -237,11 +294,66 @@ class Federator:
             actions = fwd.on_interest(fed_int, APP_FACE, net.loop.now)
             net._emit(src, actions, net.loop.now)
 
+        if self.offload_timeout_s > 0:
+            rec.timeout_timer = net.loop.call_later(
+                lead_delay_s + self.offload_timeout_s,
+                self._offload_timeout, rec)
         if lead_delay_s > 0:
             rec.send_timer = net.loop.call_later(lead_delay_s, send)
         else:
             send()
         return out
+
+    def _offload_timeout(self, rec: _Offload) -> None:
+        """Re-dispatch deadline fired: the remote reply is overdue.
+
+        Suspects the target (direct evidence for the failure detector) and
+        re-executes the task *locally* via the raw compute backend —
+        guaranteed progress even when every peer looks unhealthy.  The
+        pending Data callback stays registered: a merely-slow remote reply
+        can still win the race (first outcome resolves ``rec.out``)."""
+        rec.timeout_timer = None
+        if rec.out.done or rec.cancelled:
+            return
+        self.stats["offload_timeouts"] += 1
+        if self.health is not None:
+            self.health.note_timeout(rec.dst)
+        recs = self._offloads_by_dst.get(rec.dst, [])
+        if rec in recs:
+            recs.remove(rec)
+        if rec.src not in self.net.edge_nodes:
+            rec.out.try_set_exception(
+                ExecAborted("offload source %r gone at timeout" % (rec.src,)),
+                now=self.net.loop.now)
+            return
+        self.stats["timeout_redispatched"] += 1
+        fut = self.net.backend.submit(
+            rec.src, rec.service, rec.interest, rec.emb, 0.0)
+        fut.add_done_callback(lambda f, out=rec.out: f.propagate(out))
+
+    def _peer_dead(self, node: Any) -> None:
+        """PeerHealth declared ``node`` dead: purge every structure that
+        still references it and re-dispatch its in-flight offloads."""
+        self.stats["peers_dead"] += 1
+        self._rtt_cache.clear()
+        for key in [k for k in self._remote_inflight if k[0] == node]:
+            self._remote_inflight.pop(key, None)
+        for rec in self._offloads_by_dst.pop(node, []):
+            rec.cancelled = True
+            if rec.send_timer is not None:
+                rec.send_timer.cancel()
+                rec.send_timer = None
+            if rec.timeout_timer is not None:
+                rec.timeout_timer.cancel()
+                rec.timeout_timer = None
+            self.net._pending_cb.pop((rec.src, rec.fed_name), None)
+            if rec.out.done or rec.src not in self.net.edge_nodes:
+                continue
+            self.stats["dead_redispatched"] += 1
+            fut = self.net.backend.submit(
+                rec.src, rec.service, rec.interest, rec.emb, 0.0)
+            fut.add_done_callback(lambda f, out=rec.out: f.propagate(out))
+        self.net.on_peer_dead(node)
 
     # --------------------------------------------------- executing-EN side
     def handle_remote(self, node: Any, interest: Interest) -> None:
@@ -268,7 +380,8 @@ class Federator:
             en.stats["remote_coalesced"] += 1
             self.stats["remote_coalesced"] += 1
             leader.add_done_callback(
-                lambda f: self._reply_remote(node, name, f.result))
+                lambda f: None if f.exception is not None
+                else self._reply_remote(node, name, f.result))
             return
         store = en.stores[svc_name]
         search_t = net.delays.search_time_s(
@@ -290,6 +403,9 @@ class Federator:
 
         def done(f: Future) -> None:
             self._remote_inflight.pop(key, None)
+            if f.exception is not None:
+                return  # executor crashed mid-run: no reply, the
+                        # delegator's offload timeout recovers the task
             self._reply_remote(node, name, f.result)
 
         fut.add_done_callback(done)
@@ -313,9 +429,13 @@ class Federator:
         for key in [k for k in self._remote_inflight if k[0] == node]:
             self._remote_inflight.pop(key, None)
         for rec in self._offloads_by_dst.pop(node, []):
+            rec.cancelled = True
             if rec.send_timer is not None:  # Interest not even sent yet
                 rec.send_timer.cancel()
                 rec.send_timer = None
+            if rec.timeout_timer is not None:
+                rec.timeout_timer.cancel()
+                rec.timeout_timer = None
             self.net._pending_cb.pop((rec.src, rec.fed_name), None)
             if rec.out.done:
                 continue
@@ -323,12 +443,12 @@ class Federator:
             fut = self.net._submit_execution(
                 rec.src, rec.service, rec.interest, rec.emb, rec.threshold,
                 0.0)
-            fut.add_done_callback(
-                lambda f, out=rec.out: out.try_set_result(
-                    f.result, now=f.resolved_at))
+            fut.add_done_callback(lambda f, out=rec.out: f.propagate(out))
 
     # ----------------------------------------------------------- rebalance
     def _on_gossip_round(self) -> None:
+        if self.health is not None:
+            self.health.check()  # live ENs just published: age ~0 for them
         if not self.rebalance_enabled:
             return
         self._rounds_since_check += 1

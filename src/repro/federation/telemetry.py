@@ -16,7 +16,7 @@ drain-to-idle ``EventLoop.run()`` still terminates.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Set
 
 from repro.core.edge_node import LoadSnapshot
 from repro.core.sim_clock import RepeatingTimer
@@ -39,6 +39,19 @@ class TelemetryGossip:
                              else float(prop_delay_s))
         self._views: Dict[Any, Dict[Any, LoadSnapshot]] = {}
         self._active = False
+        # honest membership: views drop ENs that *gracefully announced* a
+        # leave (forget()), never ENs that merely stopped publishing — a
+        # crashed EN stays visible (and increasingly stale) until the
+        # failure detector (PeerHealth) declares it dead.  The old filter
+        # consulted live net membership, which made every observer
+        # omnisciently crash-aware.
+        self._gone: Set[Any] = set()
+        # central per-EN last-publish time: heartbeat absence is the
+        # failure detector's staleness signal.  Deliberately NOT routed
+        # through the lossy gossip seam — a publish is the EN being alive;
+        # per-observer delivery loss must not fake a peer death.
+        self.last_publish: Dict[Any, float] = {}
+        self.gossip_dropped = 0  # chaos-injected snapshot delivery drops
         self.rounds = 0
         self.on_round = None  # optional per-round hook (federation rebalance)
         self._timer: RepeatingTimer = net.loop.every(self.interval_s,
@@ -64,17 +77,25 @@ class TelemetryGossip:
         now = self.net.loop.now
         snaps = {node: self.net.backend.load_snapshot(node, now)
                  for node in self.net.en_nodes}
+        for node in snaps:
+            self.last_publish[node] = now
         if self.prop_delay_s > 0 and now > 0:
             self.net.loop.call_later(self.prop_delay_s, self._apply, snaps)
         else:  # epoch-0 seeding (and zero-delay configs) apply inline
             self._apply(snaps)
 
     def _apply(self, snaps: Dict[Any, LoadSnapshot]) -> None:
+        chaos = getattr(self.net, "chaos", None)
+        now = self.net.loop.now
         for obs in list(snaps):
             view = self._views.setdefault(obs, {})
             for subj, snap in snaps.items():
-                if subj != obs:
-                    view[subj] = snap
+                if subj == obs:
+                    continue
+                if chaos is not None and chaos.gossip_drop(subj, obs, now):
+                    self.gossip_dropped += 1
+                    continue
+                view[subj] = snap
 
     # --------------------------------------------------------------- views
     def self_view(self, node: Any) -> LoadSnapshot:
@@ -82,10 +103,15 @@ class TelemetryGossip:
         return self.net.backend.load_snapshot(node, self.net.loop.now)
 
     def views(self, observer: Any) -> Dict[Any, LoadSnapshot]:
-        """Latest *received* snapshot per remote EN (may be stale)."""
+        """Latest *received* snapshot per remote EN (may be stale).
+
+        Filters only ENs that *announced* a leave (``forget``) — a crashed
+        EN keeps its last snapshot here and, because ``wait_s`` decays with
+        age, looks increasingly idle and attractive until the failure
+        detector suspects it.  Candidate filtering against suspects is the
+        Federator's job (``decide``)."""
         view = self._views.get(observer, {})
-        # drop ENs that have left since the snapshot was delivered
-        return {n: s for n, s in view.items() if n in self.net.edge_nodes}
+        return {n: s for n, s in view.items() if n not in self._gone}
 
     def staleness_s(self, observer: Any) -> float:
         """Age of the oldest remote view (diagnostics)."""
@@ -96,7 +122,78 @@ class TelemetryGossip:
         return max(now - s.t for s in view.values())
 
     def forget(self, node: Any) -> None:
-        """EN leave: drop its outbound views and everyone's view of it."""
+        """EN leave (announced) or dead verdict: drop its outbound views,
+        everyone's view of it, and its heartbeat record."""
+        self._gone.add(node)
         self._views.pop(node, None)
+        self.last_publish.pop(node, None)
         for view in self._views.values():
             view.pop(node, None)
+
+
+class PeerHealth:
+    """Staleness-driven failure detector over the gossip heartbeat
+    (DESIGN.md §Fault model).
+
+    An EN that stops publishing (crash-stop leaves no announcement) ages out
+    of ``TelemetryGossip.last_publish``:
+
+    * age >= ``suspect_after_s`` — *suspect*: excluded from offload
+      candidate views, but routing is untouched (cheap, reversible: a fresh
+      publish clears the suspicion).  Offload timeouts also suspect their
+      target immediately (``note_timeout``) — direct evidence beats waiting
+      for staleness.
+    * age >= ``dead_after_s``   — *dead*: irreversible verdict.  The peer is
+      forgotten from gossip, its pending offloads re-dispatched and routing
+      re-partitioned via ``on_dead`` (Federator._peer_dead ->
+      ReservoirNetwork.on_peer_dead).
+
+    ``check()`` runs on every gossip round, right after the live ENs
+    publish, so a live EN's age is ~0 at check time and false verdicts need
+    the EN to actually miss ``suspect_after_s / interval_s`` consecutive
+    publishes.  Thresholds default to 5x / 12x the gossip interval."""
+
+    def __init__(self, net, gossip: TelemetryGossip,
+                 suspect_after_s: Optional[float] = None,
+                 dead_after_s: Optional[float] = None,
+                 on_dead: Optional[Callable[[Any], None]] = None):
+        self.net = net
+        self.gossip = gossip
+        self.suspect_after_s = (gossip.interval_s * 5.0
+                                if suspect_after_s is None
+                                else float(suspect_after_s))
+        self.dead_after_s = (gossip.interval_s * 12.0
+                             if dead_after_s is None else float(dead_after_s))
+        self.on_dead = on_dead
+        self.suspects: Set[Any] = set()
+        self.dead: Dict[Any, float] = {}  # node -> virtual declare time
+
+    def note_timeout(self, node: Any) -> None:
+        """Direct evidence (an offload to ``node`` timed out): suspect it
+        now instead of waiting for staleness.  A live node clears itself on
+        its next publish round."""
+        if node not in self.dead:
+            self.suspects.add(node)
+
+    def excluded(self, node: Any) -> bool:
+        return node in self.suspects or node in self.dead
+
+    def check(self) -> None:
+        now = self.net.loop.now
+        for node, last in list(self.gossip.last_publish.items()):
+            age = now - last
+            if age >= self.dead_after_s:
+                self.declare_dead(node)
+            elif age >= self.suspect_after_s:
+                self.suspects.add(node)
+            else:
+                self.suspects.discard(node)
+
+    def declare_dead(self, node: Any) -> None:
+        if node in self.dead:
+            return
+        self.dead[node] = self.net.loop.now
+        self.suspects.discard(node)
+        self.gossip.forget(node)
+        if self.on_dead is not None:
+            self.on_dead(node)

@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.core.edge_node import (
     ComputeBackend,
+    ExecAborted,
     ExecCompletion,
     LoadSnapshot,
     _ewma_service_s,
@@ -295,6 +296,29 @@ class AsyncServingEngine:
         self.engine_stats["backups"] += 1
         self._dispatch(rid, task.service, [task], self.loop.now)
 
+    # ------------------------------------------------------------ crash-stop
+    def abort_all(self, exc: Optional[BaseException] = None) -> None:
+        """Crash-stop teardown: reject every in-flight future with ``exc``.
+
+        Pending batches never execute, armed flush/backup timers are torn
+        down, and leader + follower futures fail with the exception — which
+        ``Future`` error propagation carries to whoever awaited them (the
+        network layer NACKs or drops on the EN's behalf).  The engine is
+        unusable afterwards; the caller must also stop admitting."""
+        exc = exc or ExecAborted("serving engine aborted")
+        now = self.loop.now
+        for timer in self._flush_timers.values():
+            timer.cancel()
+        self._flush_timers.clear()
+        self.batcher.queues.clear()
+        self._queued.clear()
+        for task in list(self._inflight.values()):
+            self.backup.cancel(task.key)
+            task.future.try_set_exception(exc, now=now)
+            for _, _, ffut in task.followers:
+                ffut.try_set_exception(exc, now=now)
+        self._inflight.clear()
+
     # -------------------------------------------------------------- running
     def drain(self, until: float = float("inf")) -> float:
         """Run the loop until idle (or ``until``); returns the clock."""
@@ -472,8 +496,15 @@ class EngineBackend(ComputeBackend):
                                   replica=sr.replica, backup=sr.backup)
 
         def admit() -> None:
+            if self.engines.get(node) is not engine:
+                # EN crashed during the lead delay: its engine is gone, the
+                # task dies with it (the consumer's retransmission or the
+                # federator's offload timeout recovers it elsewhere)
+                out.try_set_exception(
+                    ExecAborted(f"EN {node!r} crashed before admit"))
+                return
             engine.submit(req).then(adapt).add_done_callback(
-                lambda f: out.try_set_result(f.result, now=f.resolved_at))
+                lambda f: f.propagate(out))
 
         if lead_delay_s > 0:
             net.loop.call_later(lead_delay_s, admit)
@@ -527,6 +558,15 @@ class EngineBackend(ComputeBackend):
                 lo, hi = 0, net.lsh_params.effective_buckets
             engine.router.bucket_range = (lo, hi)
             engine.router.rescale(len(engine.replicas))
+
+    def on_en_crash(self, node) -> None:
+        """Crash-stop (``ReservoirNetwork.crash_en``): the EN's engine dies
+        with it — queued batches are lost, in-flight futures fail with
+        ``ExecAborted`` (no graceful drain, unlike an announced leave where
+        the departed engine keeps running until its work completes)."""
+        engine = self.engines.pop(node, None)
+        if engine is not None:
+            engine.abort_all(ExecAborted(f"EN {node!r} crashed"))
 
     # ------------------------------------------------------------- metrics
     def stats(self) -> Dict[str, int]:

@@ -27,6 +27,7 @@ from repro.core.sim_clock import Future
 from repro.core.topology import line_topology
 from repro.core.topology import testbed_topology as _testbed_topology
 from repro.data import DATASETS, dataset_service, make_stream
+from repro.faults import ChaosController, FaultPlan
 from repro.serving import EngineBackend
 from repro.training.elastic import BackupPolicy
 
@@ -94,12 +95,14 @@ class LegacyNet(ReservoirNetwork):
 
 
 def _trace(cls, protocol, window, n_tasks=500, backend=None,
-           offload_policy=None):
+           offload_policy=None, chaos_plan=None):
     params = LSHParams(dim=64, num_tables=5, num_probes=8)
     g, ens = _testbed_topology()
     net = cls(g, ens, params, seed=0, protocol=protocol,
               en_batch_window_s=window, measure_fwd_errors=True,
               backend=backend, offload_policy=offload_policy)
+    if chaos_plan is not None:
+        ChaosController(net, chaos_plan)
     spec = DATASETS["stanford_ar"]
     net.register_service(dataset_service(spec))
     for u in range(3):
@@ -189,6 +192,26 @@ class TestInlineParity:
             assert _key(a) == _key(b)
         assert plain.metrics.summary() == fed.metrics.summary()
         s = fed.metrics.summary()
+        for k, v in GOLDEN[protocol].items():
+            assert s[k] == pytest.approx(v, rel=1e-9), k
+
+    @pytest.mark.parametrize("protocol", ("direct", "ttc"))
+    def test_zero_fault_chaos_bit_for_bit(self, protocol):
+        """ISSUE 6 acceptance: a ``ChaosController`` armed with an *empty*
+        ``FaultPlan`` must reproduce the seeded 500-task trace bit-for-bit.
+        The chaos seam sits on every link traversal, so this proves the
+        fault layer consumes zero randomness and perturbs zero event timing
+        unless a rule actually matches."""
+        plain = _trace(ReservoirNetwork, protocol, 0.0)
+        chaotic = _trace(ReservoirNetwork, protocol, 0.0,
+                         chaos_plan=FaultPlan())
+        assert chaotic.chaos is not None
+        assert chaotic.chaos.plan.empty
+        for a, b in zip(plain.metrics.records, chaotic.metrics.records):
+            assert _key(a) == _key(b)
+        assert plain.metrics.summary() == chaotic.metrics.summary()
+        assert all(v == 0 for v in chaotic.chaos.stats.values())
+        s = chaotic.metrics.summary()
         for k, v in GOLDEN[protocol].items():
             assert s[k] == pytest.approx(v, rel=1e-9), k
 

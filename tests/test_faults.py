@@ -1,0 +1,518 @@
+"""Fault-injection layer tests (ISSUE 6): Future error path, FaultPlan /
+ChaosController semantics, consumer retransmission + backoff + nonce dedup,
+PIT aging, NACKs, EN crash-stop, telemetry-staleness dead-peer detection,
+offload timeout re-dispatch, slow-node inflation, and gossip loss.
+
+The zero-fault bit-for-bit parity acceptance lives in tests/test_cosim.py
+(it extends the seeded 500-task golden traces); this file covers behaviour
+*under* faults.
+"""
+import math
+
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core import LSHParams, ReservoirNetwork
+from repro.core.edge_node import ExecAborted, Service
+from repro.core.lsh import normalize
+from repro.core.namespace import make_task_name, parse_task_name
+from repro.core.packets import Interest
+from repro.core.sim_clock import Future
+from repro.faults import (ChaosController, CrashEvent, FaultPlan, LinkFault,
+                          Partition)
+
+
+# ------------------------------------------------------------------ fixtures
+def _star(n_ens, link=0.005):
+    g = nx.Graph()
+    ens = [f"en{i}" for i in range(n_ens)]
+    for en in ens:
+        g.add_edge("core", en, delay=link)
+    return g, ens
+
+
+def _make_net(n_ens=1, exec_time=0.02, protocol="direct", policy=None,
+              fkw=None, plan=None, dim=16, **net_kw):
+    params = LSHParams(dim=dim, num_tables=5, num_probes=8)
+    g, ens = _star(n_ens)
+    net = ReservoirNetwork(g, ens, params, seed=0, protocol=protocol,
+                           offload_policy=policy, federation_kw=fkw,
+                           **net_kw)
+    chaos = ChaosController(net, plan) if plan is not None else None
+    net.register_service(Service(
+        "/svc", execute=lambda x: round(float(np.sum(x)), 5),
+        exec_time_s=exec_time, input_dim=dim))
+    net.add_user("u1", "core")
+    net.add_user("u2", "core")
+    return net, chaos
+
+
+def _emb_routed_to(net, en_node, seed=0, dim=16):
+    """Find an embedding whose task the rFIB routes to ``en_node``."""
+    rng = np.random.default_rng(seed)
+    fwd = net.users["u1"][1]
+    want = net.edge_nodes[en_node].prefix
+    for _ in range(512):
+        emb = normalize(rng.standard_normal(dim).astype(np.float32))
+        name = make_task_name("svc", net.lsh.hash_one(emb),
+                              net.lsh_params.index_size_bytes)
+        entry = fwd.rfib.lookup("/svc", parse_task_name(name)[2])
+        if entry is not None and entry.en_prefix == want:
+            return emb
+    raise AssertionError(f"no embedding routed to {en_node}")
+
+
+# ------------------------------------------------------------ Future errors
+class TestFutureExceptions:
+    def test_set_exception_rejects_and_result_raises(self):
+        f = Future()
+        exc = ExecAborted("boom")
+        f.set_exception(exc, now=1.5)
+        assert f.done
+        assert f.exception is exc
+        assert f.resolved_at == 1.5
+        with pytest.raises(ExecAborted):
+            _ = f.result
+
+    def test_first_outcome_wins_across_kinds(self):
+        f = Future()
+        assert f.try_set_exception(ExecAborted("x"))
+        assert not f.try_set_result(42)
+        g = Future()
+        g.set_result(42)
+        assert not g.try_set_exception(ExecAborted("late"))
+        assert g.result == 42
+
+    def test_done_callbacks_fire_on_exception(self):
+        f = Future()
+        seen = []
+        f.add_done_callback(lambda fut: seen.append(fut.exception))
+        f.set_exception(ExecAborted("y"))
+        assert len(seen) == 1 and isinstance(seen[0], ExecAborted)
+
+    def test_then_propagates_source_exception(self):
+        f = Future()
+        out = f.then(lambda v: v + 1)
+        f.set_exception(ExecAborted("z"), now=2.0)
+        assert out.done and isinstance(out.exception, ExecAborted)
+        assert out.resolved_at == 2.0
+
+    def test_then_captures_adapter_failure(self):
+        f = Future()
+        out = f.then(lambda v: 1 / v)
+        f.set_result(0)
+        assert out.done and isinstance(out.exception, ZeroDivisionError)
+
+    def test_propagate_forwards_value_and_error(self):
+        a, b = Future(), Future()
+        a.set_result(7, now=3.0)
+        assert a.propagate(b)
+        assert b.result == 7 and b.resolved_at == 3.0
+        c, d = Future(), Future()
+        c.set_exception(ExecAborted("q"))
+        assert c.propagate(d)
+        assert isinstance(d.exception, ExecAborted)
+
+
+# ----------------------------------------------------------------- the plan
+class TestFaultPlan:
+    def test_empty_and_builders(self):
+        assert FaultPlan().empty
+        plan = FaultPlan.uniform_loss(0.05, jitter_s=0.001, seed=3)
+        assert not plan.empty
+        assert plan.links[0].loss == 0.05
+        plan.with_crash("en0", 1.0).with_gossip_loss(0.2)
+        assert plan.crashes == [CrashEvent("en0", 1.0)]
+        assert len(plan.gossip) == 1
+
+    def test_link_fault_matching_is_symmetric_and_windowed(self):
+        rule = LinkFault(a="u", b="v", loss=1.0, t_start=1.0, t_end=2.0)
+        assert rule.matches("u", "v", "data", 1.5)
+        assert rule.matches("v", "u", "interest", 1.5)
+        assert not rule.matches("u", "w", "data", 1.5)
+        assert not rule.matches("u", "v", "data", 2.0)  # end exclusive
+        pin = LinkFault(a="u", loss=1.0)
+        assert pin.matches("u", "anything", "data", 0.0)
+        assert pin.matches("anything", "u", "data", 0.0)
+        assert not pin.matches("x", "y", "data", 0.0)
+        kind = LinkFault(kinds="interest", loss=1.0)
+        assert kind.matches("x", "y", "interest", 0.0)
+        assert not kind.matches("x", "y", "data", 0.0)
+
+    def test_partition_separates_across_boundary_only(self):
+        p = Partition(frozenset({"a", "b"}), 0.0, 10.0)
+        assert p.separates("a", "c", 5.0)
+        assert p.separates("c", "b", 5.0)
+        assert not p.separates("a", "b", 5.0)
+        assert not p.separates("c", "d", 5.0)
+        assert not p.separates("a", "c", 10.0)
+
+    def test_same_plan_same_seed_same_fault_trace(self):
+        def run(seed):
+            plan = FaultPlan.uniform_loss(0.3, seed=seed)
+            net, chaos = _make_net(plan=plan, retx_timeout_s=0.05)
+            rng = np.random.default_rng(2)
+            for i, x in enumerate(rng.standard_normal((40, 16))):
+                net.submit_task("u1", "svc", normalize(
+                    x.astype(np.float32)), 0.9, at_time=i * 0.01)
+            net.run()
+            return dict(chaos.stats), net.fault_stats["retx_sent"]
+
+        assert run(11) == run(11)
+        assert run(11) != run(12)  # different seed, different trace
+
+
+# -------------------------------------------------------- retransmission
+class TestRetransmission:
+    def test_interest_loss_recovered_by_retx(self):
+        """A deterministic Interest drop window: the first expression dies
+        on the user link, the backoff timer re-expresses it, the task
+        completes.  Retry count is pinned (loss=1.0 window, no RNG race)."""
+        plan = FaultPlan(links=[LinkFault(a="user:u1", loss=1.0,
+                                          kinds="interest", t_end=0.02)])
+        net, chaos = _make_net(plan=plan, retx_timeout_s=0.05)
+        rec = net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        net.run()
+        assert chaos.stats["interest_drops"] == 1
+        assert rec.t_complete >= 0.05          # paid one timeout
+        assert rec.retx == 1 and not rec.failed
+        assert net.fault_stats["retx_sent"] == 1
+        assert net.metrics.completion_rate() == 1.0
+
+    def test_data_loss_recovered_without_duplicate_execution(self):
+        """Drop the returning Data: the consumer re-expresses, the EN's
+        store answers the retransmission — executed exactly once."""
+        plan = FaultPlan(links=[LinkFault(loss=1.0, kinds="data",
+                                          t_end=0.04)])
+        net, chaos = _make_net(plan=plan, retx_timeout_s=0.08,
+                               exec_time=0.02)
+        rec = net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        net.run()
+        assert chaos.stats["data_drops"] >= 1
+        assert rec.t_complete >= 0.08 and not rec.failed
+        en = net.edge_nodes[net.en_nodes[0]]
+        assert en.stats["executed"] == 1       # nonce/name dedup held
+        assert net.metrics.completion_rate() == 1.0
+
+    def test_spurious_retx_coalesces_on_inflight_execution(self):
+        """Timeout shorter than the execution: the retransmission reaches
+        the EN while the original is still executing and must coalesce onto
+        it (no second execution), via the in-flight dedup window."""
+        net, _ = _make_net(retx_timeout_s=0.05, exec_time=0.2)
+        rec = net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        net.run()
+        en = net.edge_nodes[net.en_nodes[0]]
+        assert en.stats["executed"] == 1
+        assert en.stats["retx_coalesced"] >= 1
+        assert rec.retx >= 1 and not rec.failed
+        assert rec.t_complete == pytest.approx(0.2, abs=0.1)
+        # the core forwarder passed the retransmission upstream (PIT
+        # refresh), it did not aggregate it away
+        assert net.forwarders["core"].stats.retx_forwarded >= 1
+
+    def test_backoff_doubles_each_retry(self):
+        """Total blackout + retx_max: retry times follow the exponential
+        schedule and the task is abandoned (failed) afterwards."""
+        plan = FaultPlan(links=[LinkFault(loss=1.0, kinds="interest")])
+        net, chaos = _make_net(plan=plan, retx_timeout_s=0.05,
+                               retx_backoff=2.0, retx_max=3)
+        rec = net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        net.run()
+        # expressions at 0, 0.05, 0.15, 0.35; give-up at 0.75
+        assert chaos.stats["interest_drops"] == 4
+        assert rec.retx == 3 and rec.failed
+        assert net.fault_stats["retx_give_ups"] == 1
+        assert net.metrics.completion_rate() == 0.0
+        # expressions at 0 / 0.05 / 0.15 / 0.35; the give-up timeout at 0.75
+        # is the last retransmission event the loop ever sees
+        assert net.loop.now >= 0.75
+
+    def test_partitioned_user_gives_up(self):
+        plan = FaultPlan(partitions=[Partition(frozenset({"user:u1"}))])
+        net, chaos = _make_net(plan=plan, retx_timeout_s=0.02, retx_max=2)
+        rec = net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        net.run()
+        assert rec.failed and rec.t_complete < 0
+        assert chaos.stats["partition_drops"] == 3  # initial + 2 retries
+        assert net.metrics.completion_rate() == 0.0
+
+    def test_retx_flag_distinct_from_independent_resubmission(self):
+        """A same-name task submitted independently (retx=0) must aggregate
+        in the PIT, not be forwarded as a retransmission."""
+        net, _ = _make_net(exec_time=0.1)
+        net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.01)
+        net.run()
+        fwd = net.users["u1"][1]
+        assert fwd.pit.aggregations >= 1
+        assert fwd.stats.retx_forwarded == 0
+
+
+# ----------------------------------------------------------------- PIT aging
+class TestPitAging:
+    def test_entries_expire_and_are_counted(self):
+        """Finite PIT lifetime + permanent Data loss: the sweep reclaims the
+        stranded entries (they were leaking before the sweep existed)."""
+        plan = FaultPlan(links=[LinkFault(loss=1.0, kinds="data")])
+        net, _ = _make_net(plan=plan, pit_lifetime_s=0.1,
+                           pit_sweep_interval_s=0.05)
+        net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        net.run()
+        user_fwd = net.users["u1"][1]
+        assert user_fwd.stats.pit_expired >= 1
+        assert len(user_fwd.pit) == 0
+        assert len(net.forwarders["core"].pit) == 0
+
+    def test_default_lifetime_is_infinite(self):
+        net, _ = _make_net()
+        assert net.pit_lifetime_s == math.inf
+        assert net.forwarders["core"].pit.lifetime_s == math.inf
+
+
+# --------------------------------------------------------------------- NACKs
+class TestNacks:
+    def test_unsolicited_fetch_gets_nack(self):
+        net, _ = _make_net(protocol="ttc")
+        en_node = net.en_nodes[0]
+        en = net.edge_nodes[en_node]
+        net._en_fetch(en_node, Interest(en.prefix + "/svc/task/00"))
+        assert en.stats["fetch_drops"] == 1
+        assert net.fault_stats["nacks_sent"] == 1
+
+    def test_nack_without_retx_fails_the_task(self):
+        """A consumer whose fetch dead-ends gets a NACK; with
+        retransmission off it marks the task failed instead of hanging."""
+        net, _ = _make_net(protocol="ttc", exec_time=0.05,
+                           en_ready_ttl_s=60.0)
+        rec = net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        # sabotage: drop the ready entry after the TTC answer is sent but
+        # before the fetch arrives, forcing the fetch-miss NACK path
+        def drop_ready():
+            for key in list(net._en_ready):
+                entry = net._en_ready.pop(key)
+                if entry.timer is not None:
+                    entry.timer.cancel()
+        net.loop.at(0.04, drop_ready)
+        net.run()
+        assert net.fault_stats["nacks_sent"] >= 1
+        assert net.fault_stats["nacks_received"] >= 1
+        assert rec.failed and rec.t_complete < 0
+
+    def test_nack_with_retx_reexpresses_and_completes(self):
+        net, _ = _make_net(protocol="ttc", exec_time=0.05,
+                           retx_timeout_s=0.05)
+        rec = net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        def drop_ready():
+            for key in list(net._en_ready):
+                entry = net._en_ready.pop(key)
+                if entry.timer is not None:
+                    entry.timer.cancel()
+        net.loop.at(0.04, drop_ready)
+        net.run()
+        assert net.fault_stats["nacks_received"] >= 1
+        # the re-expressed task Interest hits the EN store (the execution
+        # already inserted its result) and completes
+        assert not rec.failed and rec.t_complete >= 0
+        assert rec.retx >= 1
+        assert net.metrics.completion_rate() == 1.0
+
+
+# ---------------------------------------------------------------- crash-stop
+class TestCrashStop:
+    def test_crash_drops_state_and_inflight_results(self):
+        """Crash mid-execution: the in-flight completion never leaves the
+        node, the store is lost, and (without retx) the task just fails —
+        exactly the non-drain contrast to graceful remove_en."""
+        plan = FaultPlan().with_crash("en0", 0.01)
+        net, chaos = _make_net(plan=plan, exec_time=0.05)
+        rec = net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        net.run()
+        assert chaos.stats["crashes"] == 1
+        assert net.fault_stats["crashed_ens"] == 1
+        assert "en0" not in net.edge_nodes and "en0" in net._crashed
+        assert net.fault_stats["crash_drops"] >= 1
+        assert rec.t_complete < 0
+        assert net.metrics.completion_rate() == 0.0
+
+    def test_crash_is_not_a_graceful_leave(self):
+        """crash_en must NOT re-partition at crash time — silence is the
+        signal; rFIB entries keep naming the dead EN until detection."""
+        net, _ = _make_net(n_ens=2)
+        dead_prefix = net.edge_nodes["en0"].prefix
+        net.crash_en("en0")
+        entries = net.forwarders["core"].rfib.entries("/svc")
+        assert any(e.en_prefix == dead_prefix for e in entries)
+        assert net.fault_stats["crash_recoveries"] == 0
+
+    def test_detection_recovers_routing_and_tasks(self):
+        """End-to-end recovery: EN crashes mid-stream; the telemetry
+        staleness detector declares it dead; the rFIB re-partitions; the
+        consumers' retransmissions reach the new owner; everything
+        completes."""
+        plan = FaultPlan().with_crash("en0", 0.10)
+        net, chaos = _make_net(
+            n_ens=3, plan=plan, exec_time=0.01, policy="local-only",
+            fkw={"gossip_interval_s": 0.02},
+            retx_timeout_s=0.06, retx_max=6)
+        rng = np.random.default_rng(4)
+        X = normalize(rng.standard_normal((120, 16)).astype(np.float32))
+        t = 0.0
+        for i, x in enumerate(X):
+            net.submit_task("u1" if i % 2 else "u2", "svc", x, 0.99,
+                            at_time=t)
+            t += 0.005
+        net.run()
+        assert chaos.stats["crashes"] == 1
+        fed = net.federator
+        assert fed.health is not None
+        assert "en0" in fed.health.dead
+        assert fed.stats["peers_dead"] == 1
+        assert net.fault_stats["crash_recoveries"] == 1
+        # detection time: dead_after_s = 12 x 0.02 past the last publish
+        detect_t = fed.health.dead["en0"]
+        assert 0.10 < detect_t < 0.45
+        # the dead EN's prefix is gone from the routing fabric
+        dead_prefix = net._crashed["en0"].prefix
+        entries = net.forwarders["core"].rfib.entries("/svc")
+        assert not any(e.en_prefix == dead_prefix for e in entries)
+        # every task completed; the blackout-window ones needed retries
+        assert net.metrics.completion_rate() == 1.0
+        assert any(r.retx > 0 for r in net.metrics.records)
+        assert net.fault_stats["crash_drops"] >= 1
+
+    def test_hit_heavy_workload_still_detects_crash(self):
+        """Regression: the failure-detector heartbeat rides task *arrivals*
+        (``Federator.note_activity`` from ``send_task``), not just store
+        misses.  A warm-cluster workload stops missing almost immediately;
+        if only ``decide`` kicked the activity-gated gossip chain it would
+        die, ``PeerHealth.check`` would never run again, and the crashed
+        EN's tasks would burn every retry against the dead prefix."""
+        plan = FaultPlan().with_crash("en1", 0.50)
+        net, chaos = _make_net(
+            n_ens=2, plan=plan, exec_time=0.005, policy="local-only",
+            fkw={"gossip_interval_s": 0.05},
+            retx_timeout_s=0.05, retx_max=6,
+            cs_capacity=0, user_cs_capacity=0)
+        rng = np.random.default_rng(6)
+        base = normalize(rng.standard_normal((8, 16)).astype(np.float32))
+        for i in range(120):
+            x = base[i % 8] + 0.01 * rng.standard_normal(16).astype(
+                np.float32)
+            net.submit_task("u1" if i % 2 else "u2", "svc",
+                            normalize(x), 0.9, at_time=i * 0.01)
+        net.run()
+        assert chaos.stats["crashes"] == 1
+        # warm clusters: the stream is mostly reuse hits (the crash itself
+        # cold-restarts half the clusters), so the miss path (``decide``)
+        # alone could not have kept gossip alive
+        done = [r for r in net.metrics.records if r.t_complete >= 0]
+        assert sum(r.reuse is not None for r in done) / len(done) > 0.5
+        assert net.federator.stats["peers_dead"] == 1
+        assert net.fault_stats["crash_recoveries"] == 1
+        assert net.fault_stats["retx_give_ups"] == 0
+        assert net.metrics.completion_rate() == 1.0
+
+    def test_live_peers_are_never_suspected(self):
+        net, _ = _make_net(n_ens=3, exec_time=0.01, policy="local-only",
+                           fkw={"gossip_interval_s": 0.02})
+        rng = np.random.default_rng(5)
+        for i, x in enumerate(rng.standard_normal((60, 16))):
+            net.submit_task("u1", "svc", normalize(x.astype(np.float32)),
+                            0.9, at_time=i * 0.01)
+        net.run()
+        assert net.federator.health.suspects == set()
+        assert net.federator.health.dead == {}
+        assert net.metrics.completion_rate() == 1.0
+
+
+# ----------------------------------------------------------- offload timeout
+class TestOffloadTimeout:
+    def test_timed_out_offload_redispatches_locally(self):
+        net, _ = _make_net(n_ens=2, exec_time=0.02, policy="local-only",
+                           fkw={"offload_timeout_s": 0.05})
+        fed = net.federator
+        emb = normalize(np.ones(16, np.float32))
+        name = make_task_name("svc", net.lsh.hash_one(emb),
+                              net.lsh_params.index_size_bytes)
+        interest = Interest(name, app_params={
+            "service": "svc", "input": emb, "threshold": 0.9})
+        net.crash_en("en1")  # silent: en0 does not know
+        out = fed.offload("en0", "en1", "svc", interest, emb, 0.9, 0.0)
+        net.run()
+        assert out.done and out.exception is None
+        assert out.result.result == pytest.approx(np.sum(emb), abs=1e-3)
+        assert fed.stats["offload_timeouts"] == 1
+        assert fed.stats["timeout_redispatched"] == 1
+        assert fed.health.excluded("en1")      # direct-evidence suspicion
+        en0 = net.edge_nodes["en0"]
+        assert en0.stats["executed"] == 1      # local re-dispatch ran here
+
+    def test_slow_remote_reply_still_wins_if_first(self):
+        """The timeout only fires for genuinely missing replies: a reply
+        arriving before the deadline cancels the timer — no spurious
+        duplicate execution."""
+        net, _ = _make_net(n_ens=2, exec_time=0.02, policy="local-only",
+                           fkw={"offload_timeout_s": 5.0})
+        fed = net.federator
+        emb = normalize(np.ones(16, np.float32))
+        name = make_task_name("svc", net.lsh.hash_one(emb),
+                              net.lsh_params.index_size_bytes)
+        interest = Interest(name, app_params={
+            "service": "svc", "input": emb, "threshold": 0.9})
+        out = fed.offload("en0", "en1", "svc", interest, emb, 0.9, 0.0)
+        net.run()
+        assert out.done and out.exception is None
+        assert fed.stats["offload_timeouts"] == 0
+        assert not fed.health.excluded("en1")
+        assert net.edge_nodes["en1"].stats["executed"] == 1
+        assert net.edge_nodes["en0"].stats["executed"] == 0
+
+
+# ------------------------------------------------------- slow nodes + gossip
+class TestSlowNodesAndGossip:
+    def test_slow_node_inflates_execution(self):
+        base_net, _ = _make_net(exec_time=0.02)
+        r0 = base_net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        base_net.run()
+        plan = FaultPlan().with_slow_node("en0", factor=5.0)
+        slow_net, chaos = _make_net(plan=plan, exec_time=0.02)
+        r1 = slow_net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        slow_net.run()
+        assert chaos.stats["slow_samples"] == 1
+        # 0.02 s of work became 0.1 s; network overheads are identical
+        assert r1.t_complete - r0.t_complete == pytest.approx(0.08, abs=1e-3)
+
+    def test_gossip_loss_starves_views_but_not_heartbeat(self):
+        """Total telemetry loss: observers learn nothing about peers, but
+        the failure detector (central heartbeat, deliberately not routed
+        through the lossy delivery seam) must not declare anyone dead."""
+        plan = FaultPlan().with_gossip_loss(1.0)
+        net, chaos = _make_net(n_ens=3, exec_time=0.01, plan=plan,
+                               policy="local-only",
+                               fkw={"gossip_interval_s": 0.02})
+        rng = np.random.default_rng(6)
+        for i, x in enumerate(rng.standard_normal((60, 16))):
+            net.submit_task("u1", "svc", normalize(x.astype(np.float32)),
+                            0.9, at_time=i * 0.01)
+        net.run()
+        assert chaos.stats["gossip_drops"] > 0
+        # only the epoch-0 seeding round (pre-attach) ever got through:
+        # every view is frozen at t=0, nothing was learned under the fault
+        assert all(s.t == 0.0
+                   for s in net.federator.gossip.views("en0").values())
+        assert net.federator.health.dead == {}
+        assert net.metrics.completion_rate() == 1.0
+
+    def test_jitter_delays_but_completes(self):
+        plan = FaultPlan(links=[LinkFault(jitter_s=0.01)])
+        net, chaos = _make_net(plan=plan, exec_time=0.02)
+        rec = net.submit_task("u1", "svc", np.ones(16), 0.9, at_time=0.0)
+        net.run()
+        base_net, _ = _make_net(exec_time=0.02)
+        base = base_net.submit_task("u1", "svc", np.ones(16), 0.9,
+                                    at_time=0.0)
+        base_net.run()
+        assert chaos.stats["jitter_added"] > 0
+        assert rec.t_complete > base.t_complete
+        assert net.metrics.completion_rate() == 1.0
