@@ -25,6 +25,7 @@ BENCHES = (
     "serving_reuse",      # beyond-paper: reuse-aware LM serving
     "multiprobe",         # beyond-paper: probe depth vs recall vs cost
     "reuse_store_scale",  # beyond-paper: batched vs scalar reuse pipeline
+    "fused_query",        # beyond-paper: one-dispatch fused vs staged query
     "async_serving",      # beyond-paper: event-driven serving core sweep
     "cosim",              # beyond-paper: edge-to-TPU co-simulation sweep
     "federation",         # beyond-paper: cross-EN offload policy sweep

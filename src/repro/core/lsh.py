@@ -89,6 +89,90 @@ def _orthogonalize(m: np.ndarray) -> np.ndarray:
     return (q * np.sign(np.diag(r))).astype(np.float32)
 
 
+# ---------------------------------------------------------------------------
+# Pure hash/probe math, shared verbatim by LSH and the fused one-dispatch
+# query pipeline (repro.kernels.fused_query).  These are module-level so the
+# fused jit can close over *traced* rotation/plane arguments and a hashable
+# static config instead of a per-store bound method — one compilation serves
+# every store whose table/probe shapes match, regardless of LSH seed.
+# ---------------------------------------------------------------------------
+
+def mix_vertex_ids(vids: Array, radix: int, num_buckets: int) -> Array:
+    """Fold K per-rotation vertex ids (..., K) into one bucket id (...,)."""
+    val = jnp.zeros(vids.shape[:-1], jnp.int32)
+    for k in range(vids.shape[-1]):
+        val = (val * radix + vids[..., k]) % num_buckets
+    return val
+
+
+def cp_vertex_scores(x: Array, rotations: Array) -> Array:
+    """Cross-polytope vertex scores: (B, T, K, 2D); vertex v<D is +e_v."""
+    proj = jnp.einsum("tkde,be->btkd", rotations, x)
+    return jnp.concatenate([proj, -proj], axis=-1)
+
+
+def multiprobe_buckets(
+    x: Array,
+    proj: Array,
+    *,
+    family: str,
+    dim: int,
+    rotations_per_table: int,
+    num_probes: int,
+    num_buckets: int,
+) -> Tuple[Array, Array]:
+    """Ranked multi-probe buckets: (B, T, P) ids + (B, T, P) losses.
+
+    ``proj`` is the family's projection parameter — ``(T, K, D, D)``
+    rotations for cross-polytope, ``(T, bits, D)`` unit planes for
+    hyperplane.  This is the body of ``LSH._probe_impl``; the class method
+    delegates here so the fused query pipeline probes bit-identically.
+    """
+    x = x.astype(jnp.float32)
+    if family == "cross_polytope":
+        scores = cp_vertex_scores(x, proj)  # (B,T,K,2D)
+        k = rotations_per_table
+        m = min(max(2, num_probes // max(k, 1) + 1), 2 * dim)
+        top_v, top_i = jax.lax.top_k(scores, m)  # (B,T,K,m)
+        base_ids = top_i[..., 0]  # (B,T,K)
+        radix = 2 * dim
+        base_bucket = mix_vertex_ids(base_ids, radix, num_buckets)  # (B,T)
+        # weight of rotation k in the mixing polynomial
+        w = jnp.asarray(
+            [pow(radix, k - 1 - i, num_buckets) for i in range(k)], jnp.int32
+        )
+        # single-swap candidates: rotation r -> its j-th best vertex
+        alt_loss = top_v[..., :1] - top_v  # (B,T,K,m), loss_j = s_0 - s_j >= 0
+        delta = (top_i - base_ids[..., None]) % num_buckets  # (B,T,K,m)
+        cand = (base_bucket[..., None, None] + delta * w[:, None]) % num_buckets
+        flat_loss = alt_loss[..., 1:].reshape(*alt_loss.shape[:2], -1)
+        flat_cand = cand[..., 1:].reshape(*cand.shape[:2], -1)
+        nprob = min(num_probes - 1, flat_loss.shape[-1])
+        neg_loss, order = jax.lax.top_k(-flat_loss, nprob)
+        picked = jnp.take_along_axis(flat_cand, order, axis=-1)
+        buckets = jnp.concatenate([base_bucket[..., None], picked], axis=-1)
+        losses = jnp.concatenate(
+            [jnp.zeros_like(base_bucket, jnp.float32)[..., None], -neg_loss], axis=-1
+        )
+        return buckets.astype(jnp.int32), losses
+    # hyperplane: flip bits ranked by |margin|
+    margins = jnp.einsum("tbd,nd->ntb", proj, x)  # (B,T,bits)
+    bits = (margins > 0).astype(jnp.int32)
+    base_bucket = mix_vertex_ids(bits, 2, num_buckets)
+    nbits = margins.shape[-1]
+    w = jnp.asarray([1 << (nbits - 1 - i) for i in range(nbits)], jnp.int32)
+    flipped = (base_bucket[..., None] ^ w) % num_buckets  # (B,T,bits)
+    loss = jnp.abs(margins)
+    nprob = min(num_probes - 1, nbits)
+    neg_loss, order = jax.lax.top_k(-loss, nprob)
+    picked = jnp.take_along_axis(flipped, order, axis=-1)
+    buckets = jnp.concatenate([base_bucket[..., None], picked], axis=-1)
+    losses = jnp.concatenate(
+        [jnp.zeros_like(base_bucket, jnp.float32)[..., None], -neg_loss], axis=-1
+    )
+    return buckets.astype(jnp.int32), losses
+
+
 class LSH:
     """An instantiated LSH family: rotation/plane parameters + hash/probe ops."""
 
@@ -115,17 +199,13 @@ class LSH:
     # ------------------------------------------------------------------ hash
     def _cp_scores(self, x: Array) -> Array:
         """Cross-polytope vertex scores: (B, T, K, 2D); vertex v<D is +e_v."""
-        proj = jnp.einsum("tkde,be->btkd", self.rotations, x)
-        return jnp.concatenate([proj, -proj], axis=-1)
+        return cp_vertex_scores(x, self.rotations)
 
     def _mix(self, vids: Array) -> Array:
         """Fold K per-rotation vertex ids into one bucket id (mod num_buckets)."""
         p = self.params
         radix = 2 * p.dim if p.family == "cross_polytope" else 2
-        val = jnp.zeros(vids.shape[:-1], jnp.int32)
-        for k in range(vids.shape[-1]):
-            val = (val * radix + vids[..., k]) % p.num_buckets
-        return val
+        return mix_vertex_ids(vids, radix, p.num_buckets)
 
     def _hash_impl(self, x: Array) -> Array:
         p = self.params
@@ -146,49 +226,16 @@ class LSH:
     def _probe_impl(self, x: Array) -> Tuple[Array, Array]:
         """Ranked multi-probe buckets: (B, T, P) ids + (B, T, P) losses."""
         p = self.params
-        x = x.astype(jnp.float32)
-        if p.family == "cross_polytope":
-            scores = self._cp_scores(x)  # (B,T,K,2D)
-            k = p.rotations_per_table
-            m = min(max(2, p.num_probes // max(k, 1) + 1), 2 * p.dim)
-            top_v, top_i = jax.lax.top_k(scores, m)  # (B,T,K,m)
-            base_ids = top_i[..., 0]  # (B,T,K)
-            base_bucket = self._mix(base_ids)  # (B,T)
-            radix = 2 * p.dim
-            # weight of rotation k in the mixing polynomial
-            w = jnp.asarray(
-                [pow(radix, k - 1 - i, p.num_buckets) for i in range(k)], jnp.int32
-            )
-            # single-swap candidates: rotation r -> its j-th best vertex
-            alt_loss = top_v[..., :1] - top_v  # (B,T,K,m), loss_j = s_0 - s_j >= 0
-            delta = (top_i - base_ids[..., None]) % p.num_buckets  # (B,T,K,m)
-            cand = (base_bucket[..., None, None] + delta * w[:, None]) % p.num_buckets
-            flat_loss = alt_loss[..., 1:].reshape(*alt_loss.shape[:2], -1)
-            flat_cand = cand[..., 1:].reshape(*cand.shape[:2], -1)
-            nprob = min(p.num_probes - 1, flat_loss.shape[-1])
-            neg_loss, order = jax.lax.top_k(-flat_loss, nprob)
-            picked = jnp.take_along_axis(flat_cand, order, axis=-1)
-            buckets = jnp.concatenate([base_bucket[..., None], picked], axis=-1)
-            losses = jnp.concatenate(
-                [jnp.zeros_like(base_bucket, jnp.float32)[..., None], -neg_loss], axis=-1
-            )
-            return buckets.astype(jnp.int32), losses
-        # hyperplane: flip bits ranked by |margin|
-        margins = jnp.einsum("tbd,nd->ntb", self.planes, x)  # (B,T,bits)
-        bits = (margins > 0).astype(jnp.int32)
-        base_bucket = self._mix(bits)
-        nbits = margins.shape[-1]
-        w = jnp.asarray([1 << (nbits - 1 - i) for i in range(nbits)], jnp.int32)
-        flipped = (base_bucket[..., None] ^ w) % p.num_buckets  # (B,T,bits)
-        loss = jnp.abs(margins)
-        nprob = min(p.num_probes - 1, nbits)
-        neg_loss, order = jax.lax.top_k(-loss, nprob)
-        picked = jnp.take_along_axis(flipped, order, axis=-1)
-        buckets = jnp.concatenate([base_bucket[..., None], picked], axis=-1)
-        losses = jnp.concatenate(
-            [jnp.zeros_like(base_bucket, jnp.float32)[..., None], -neg_loss], axis=-1
+        proj = self.rotations if p.family == "cross_polytope" else self.planes
+        return multiprobe_buckets(
+            x,
+            proj,
+            family=p.family,
+            dim=p.dim,
+            rotations_per_table=p.rotations_per_table,
+            num_probes=p.num_probes,
+            num_buckets=p.num_buckets,
         )
-        return buckets.astype(jnp.int32), losses
 
     def probe_batch(self, x: Array) -> Array:
         """(B, D) -> (B, T, P) ranked probe bucket ids (probe 0 == hash)."""

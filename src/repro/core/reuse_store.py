@@ -27,6 +27,18 @@ pages and doubles the device allocation with a device-side copy — the host
 matrix is never reallocated-and-copied.  ``sync_pages_total`` /
 ``sync_bytes_total`` / ``last_sync_pages`` account every upload.
 
+One-dispatch query path (DESIGN.md §One-dispatch query path): the bucket
+tables get the same treatment as the embeddings — ``_slots`` is mirrored on
+device as a flat ``(T * num_buckets, bucket_cap)`` int32 array, dirtied in
+fixed-size row slabs by every table mutation and synced O(dirty slabs) by
+``sync_device``.  With both mirrors resident, ``query_batch`` routes large
+cosine batches through ``kernels.ops.reuse_query_top1``: LSH probe math,
+slot-table gather, masked cosine top-1 and candidate counting in a single
+jitted device dispatch, with zero host-side candidate-matrix construction.
+``_fill`` is *not* mirrored — the tables maintain the invariant that every
+slot at position >= fill holds -1 (property-tested), so validity is readable
+from the slot values alone.
+
 Capacity-bounded with LRU eviction (the paper's §V-C cache-size study applies
 the same policy at user devices, forwarders, and ENs).  Removal tombstones
 the entry's page row (zeros it and dirties the page) so a stale embedding can
@@ -52,6 +64,12 @@ _MAX_TABLE_SLOTS = 1 << 25
 DEFAULT_PAGE_SIZE = 4096
 
 _PAGE_UPDATER = None  # lazily-built jitted page writer (shared by all stores)
+_TABLE_UPDATER = None  # jitted slot-table slab writer (shared by all stores)
+
+# Target int32 slots per table-mirror sync slab (~64 KiB): small enough that
+# a single insert's <= T dirty rows upload a sliver of the tables, big
+# enough that a full resync is a few hundred slabs at the size ceiling.
+_TABLE_SLAB_SLOTS = 16384
 
 
 def _page_updater():
@@ -69,6 +87,22 @@ def _page_updater():
 
         _PAGE_UPDATER = _upd
     return _PAGE_UPDATER
+
+
+def _table_updater():
+    """Jitted slot-table slab write (same donation scheme as pages)."""
+    global _TABLE_UPDATER
+    if _TABLE_UPDATER is None:
+        import functools
+
+        import jax
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def _upd(buf, slab, start):
+            return jax.lax.dynamic_update_slice(buf, slab, (start, 0))
+
+        _TABLE_UPDATER = _upd
+    return _TABLE_UPDATER
 
 
 def _auto_bucket_cap(params: LSHParams, capacity: int) -> int:
@@ -94,6 +128,8 @@ class ReuseStore:
         bucket_cap: Optional[int] = None,
         page_size: int = DEFAULT_PAGE_SIZE,
         full_resync: bool = False,
+        fused: bool = True,
+        fused_min_batch: int = 64,
     ):
         self.lsh: LSH = get_lsh(lsh_params)
         self.params = lsh_params
@@ -106,8 +142,10 @@ class ReuseStore:
             raise ValueError("page_size must be >= 1")
         # paged embedding storage: host truth is a list of (page_size, dim)
         # pages (growth appends, never reallocates); the device mirror is one
-        # (alloc_pages, page_size, dim) array synced page-at-a-time
-        self.page_size = int(page_size)
+        # (alloc_pages, page_size, dim) array synced page-at-a-time.  Pages
+        # are rounded up to a multiple of 8 rows so they always tile cleanly
+        # on TPU (f32 min sublane tile) — the kernels rely on this.
+        self.page_size = -(-int(page_size) // 8) * 8
         # debug/bench knob: a dirty sync re-uploads every page (the seed's
         # whole-matrix invalidation); clean syncs stay free in both modes
         self.full_resync = bool(full_resync)
@@ -129,6 +167,17 @@ class ReuseStore:
         self._slots = np.full((t, nb, self.bucket_cap), -1, np.int32)
         self._fill = np.zeros((t, nb), np.int32)
         self._cursor = np.zeros((t, nb), np.int32)  # ring position when full
+        # --- device mirror of the slot tables (one-dispatch query path):
+        # flat (t*nb, bucket_cap) int32, synced in _table_slab_rows-row slabs
+        self.fused = bool(fused)
+        self.fused_min_batch = int(fused_min_batch)
+        self._table_rows = t * nb
+        self._table_slab_rows = min(
+            max(8, -(-_TABLE_SLAB_SLOTS // self.bucket_cap)), self._table_rows)
+        self._slots_dev: Any = None
+        self._tdirty: set = set()  # dirty table slab indices
+        self.table_sync_pages_total = 0
+        self.last_table_sync_pages = 0
         self.overflows = 0
         self.inserts = 0
         self.queries = 0
@@ -192,16 +241,59 @@ class ReuseStore:
 
     def sync_device(self, ensure: bool = False) -> int:
         """Upload dirty host pages into the device mirror; returns the number
-        of pages uploaded.
+        of embedding pages uploaded.
 
         A no-op until the batched kernel path has materialized the device
         buffer (small stores never pay for device residency); ``ensure=True``
         forces allocation — benchmarks and the serving commit path use it to
-        move the upload off the query critical path.
+        move the upload off the query critical path.  Also drains the slot
+        tables' dirty slabs once the fused query path has materialized the
+        table mirror, so a post-insert eager sync covers both mirrors and
+        steady-state fused queries are sync-free.
         """
         if self._emb_dev is None and not ensure:
+            self._sync_tables()
             return 0
-        return self._sync_device()
+        n = self._sync_device()
+        self._sync_tables()
+        return n
+
+    def _sync_tables(self, ensure: bool = False) -> int:
+        """Upload dirty slot-table slabs into the device table mirror.
+
+        First sync uploads the whole flat (T * num_buckets, bucket_cap)
+        array in one transfer; afterwards each table mutation dirties only
+        the slab(s) holding its bucket rows, so sync cost is O(dirty slabs).
+        ``_fill`` is intentionally not mirrored: the tables keep every slot
+        at position >= fill equal to -1 (property-tested invariant), so the
+        device side reads validity from the slot values alone.
+        """
+        if self._slots_dev is None and not ensure:
+            return 0
+        import jax.numpy as jnp
+
+        n_rows = self._table_rows
+        flat = self._slots.reshape(n_rows, self.bucket_cap)
+        if self._slots_dev is None:
+            self._slots_dev = jnp.asarray(flat)
+            self._tdirty.clear()
+            pages = -(-n_rows // self._table_slab_rows)
+        elif self._tdirty:
+            upd = _table_updater()
+            rows = self._table_slab_rows
+            uploaded = sorted(self._tdirty)
+            for p in uploaded:
+                start = min(p * rows, max(n_rows - rows, 0))
+                self._slots_dev = upd(
+                    self._slots_dev, jnp.asarray(flat[start:start + rows]),
+                    jnp.int32(start))
+            self._tdirty.clear()
+            pages = len(uploaded)
+        else:
+            pages = 0
+        self.last_table_sync_pages = pages
+        self.table_sync_pages_total += pages
+        return pages
 
     def _sync_device(self) -> int:
         import jax.numpy as jnp
@@ -243,10 +335,15 @@ class ReuseStore:
         return len(uploaded)
 
     # ---------------------------------------------------------------- tables
+    def _tslab(self, t: int, b: int) -> int:
+        """Table-mirror sync slab holding bucket row (t, b)."""
+        return (t * self.params.num_buckets + b) // self._table_slab_rows
+
     def _table_add(self, idx: int, buckets: np.ndarray) -> None:
         cap = self.bucket_cap
         for t in range(self.params.num_tables):
             b = int(buckets[t])
+            self._tdirty.add(self._tslab(t, b))
             f = int(self._fill[t, b])
             if f < cap:
                 self._slots[t, b, f] = idx
@@ -269,6 +366,7 @@ class ReuseStore:
                 row[p] = row[f - 1]
                 row[f - 1] = -1
                 self._fill[t, b] = f - 1
+                self._tdirty.add(self._tslab(t, b))
 
     def _candidate_matrix(self, probes: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """(B, T, P) probe buckets -> ((B, C) slot ids, (B,) counts).
@@ -412,6 +510,9 @@ class ReuseStore:
             self._cursor[t, uniq] = np.where(
                 over_g > 0, (cur_g + over_g) % cap, cur_g)
             self.overflows += int(over_g.sum())
+            self._tdirty.update(
+                ((t * self._slots.shape[1] + uniq)
+                 // self._table_slab_rows).tolist())
 
     # ----------------------------------------------------------------- query
     def candidates(self, embedding: np.ndarray) -> List[int]:
@@ -452,7 +553,15 @@ class ReuseStore:
         thresholds: Union[float, Sequence[float], np.ndarray] = 0.0,
         peek: bool = False,
     ) -> List[Tuple[Optional[Any], float, Optional[int]]]:
-        """Batched ``query``: one probe dispatch + one fused gather/score call.
+        """Batched ``query``: a single fused device dispatch on the hot path.
+
+        Large cosine batches (``len >= fused_min_batch`` and enough gather
+        work to clear ``use_kernel_threshold``) run the one-dispatch pipeline
+        (``kernels.ops.reuse_query_top1``): LSH probe math, slot-table
+        gather, masked cosine top-1 and candidate counting all inside one
+        jit over the device mirrors.  Small batches and non-cosine stores
+        keep the host-staged path (probe dispatch + host candidate matrix +
+        gather/score call), which doubles as the fused path's test oracle.
 
         ``thresholds`` is a scalar or per-query sequence.  Returns one
         (result, similarity, idx) triple per query with the same hit/miss
@@ -475,31 +584,19 @@ class ReuseStore:
             if not peek:
                 self.candidate_counts.extend([0] * n)
             return [(None, -1.0, None)] * n
-        probes = np.asarray(self.lsh.probe_batch(embs))  # (B, T, P)
-        cand, counts = self._candidate_matrix(probes)
-        # Dedup per-table duplicates: sort each row, keep first occurrences,
-        # re-compact.  This matches the scalar path both in candidate_counts
-        # stats and in argmax tie-breaking (candidates() returns ascending
-        # unique ids), and shrinks the kernel's candidate dimension.
-        srt = np.sort(cand, axis=1)
-        uniq = np.ones(srt.shape, bool)
-        uniq[:, 1:] = srt[:, 1:] != srt[:, :-1]
-        uniq &= srt >= 0
-        counts = uniq.sum(axis=1).astype(np.int64)
+        if self._use_fused(n):
+            # peek reads record no statistics, so the fused path skips the
+            # candidate-count epilogue entirely (counts is None)
+            val, idx, counts = self._query_fused(embs, need_counts=not peek)
+        else:
+            val, idx, counts = self._query_staged(embs)
         if not peek:
             self.candidate_counts.extend(int(c) for c in counts)
-        if counts.max() == 0:
-            return [(None, -1.0, None)] * n
-        width = max(int(counts.max()), 1)
-        dedup = np.full((n, width), -1, np.int32)
-        rows, cols = np.nonzero(uniq)
-        starts = np.zeros(n + 1, np.int64)
-        np.cumsum(counts, out=starts[1:])
-        dedup[rows, np.arange(rows.size) - starts[rows]] = srt[rows, cols]
-        val, idx = self._score_batch(embs, dedup, counts)
         out: List[Tuple[Optional[Any], float, Optional[int]]] = []
         for i in range(n):
-            if counts[i] == 0 or idx[i] < 0:
+            # idx < 0 iff the query had zero live candidates (tables hold
+            # only live ids, so every gathered candidate is scoreable)
+            if idx[i] < 0:
                 out.append((None, -1.0, None))
                 continue
             sim = float(val[i])
@@ -511,6 +608,67 @@ class ReuseStore:
                 self._lru.move_to_end(j)
             out.append((self._results[j], sim, j))
         return out
+
+    def _use_fused(self, n: int) -> bool:
+        """Route a batch of ``n`` queries through the one-dispatch pipeline?
+
+        Cosine only (the fused kernel is a dot-product top-1), and only when
+        the batch is big enough that one jit dispatch beats the host-staged
+        path: ``fused_min_batch`` gates out small simulator windows (whose
+        varying batch sizes would also churn compilations), and the raw
+        gather work n * T * P * bucket_cap must clear the same
+        ``use_kernel_threshold`` the staged kernel path uses.
+        """
+        if not (self.fused and self.similarity_name == "cosine"):
+            return False
+        width = (self.params.num_tables * self.params.num_probes
+                 * self.bucket_cap)
+        return (n >= self.fused_min_batch
+                and n * width >= self.use_kernel_threshold)
+
+    def _query_fused(
+        self, embs: np.ndarray, need_counts: bool = True
+    ) -> Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]:
+        """One-dispatch query over the device mirrors (see _use_fused)."""
+        from repro.kernels import ops as _kops
+
+        self.sync_device(ensure=True)   # embeddings: O(dirty pages)
+        self._sync_tables(ensure=True)  # slot tables: O(dirty slabs)
+        val, idx, counts = _kops.reuse_query_top1(
+            embs, self.lsh, self._slots_dev, self._emb_dev,
+            need_counts=need_counts)
+        return (np.asarray(val), np.asarray(idx),
+                None if counts is None else np.asarray(counts, np.int64))
+
+    def _query_staged(
+        self, embs: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Host-staged query: probe dispatch + host candidate matrix +
+        gather/score call.  Oracle for the fused path; default for small
+        batches and non-cosine similarities."""
+        n = embs.shape[0]
+        probes = np.asarray(self.lsh.probe_batch(embs))  # (B, T, P)
+        cand, counts = self._candidate_matrix(probes)
+        # Dedup per-table duplicates: sort each row, keep first occurrences,
+        # re-compact.  This matches the scalar path both in candidate_counts
+        # stats and in argmax tie-breaking (candidates() returns ascending
+        # unique ids), and shrinks the kernel's candidate dimension.
+        srt = np.sort(cand, axis=1)
+        uniq = np.ones(srt.shape, bool)
+        uniq[:, 1:] = srt[:, 1:] != srt[:, :-1]
+        uniq &= srt >= 0
+        counts = uniq.sum(axis=1).astype(np.int64)
+        if counts.max() == 0:
+            return (np.full(n, -np.inf, np.float32),
+                    np.full(n, -1, np.int64), counts)
+        width = max(int(counts.max()), 1)
+        dedup = np.full((n, width), -1, np.int32)
+        rows, cols = np.nonzero(uniq)
+        starts = np.zeros(n + 1, np.int64)
+        np.cumsum(counts, out=starts[1:])
+        dedup[rows, np.arange(rows.size) - starts[rows]] = srt[rows, cols]
+        val, idx = self._score_batch(embs, dedup, counts)
+        return val, idx, counts
 
     def _score_batch(
         self, embs: np.ndarray, cand: np.ndarray, counts: np.ndarray

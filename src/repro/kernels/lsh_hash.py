@@ -37,6 +37,62 @@ def _lsh_hash_kernel(x_ref, rot_ref, out_ref):
     out_ref[...] = out[:, None, None]
 
 
+def _lsh_hash_mix_kernel(x_ref, rot_ref, out_ref, *, radix: int, num_buckets: int):
+    """Hash + modular-mixing epilogue: out revisited across the K grid steps.
+
+    The K axis is innermost (sequential on TPU), and the out block's index map
+    ignores it, so the (bB, 1) bucket accumulator stays resident in VMEM while
+    each rotation folds its vertex id in:  acc = (acc * radix + vid) % NB.
+    This removes the K host-side mixing steps `ops.lsh_buckets` used to run.
+    """
+    k = pl.program_id(2)
+    x = x_ref[...].astype(jnp.float32)           # (bB, D)
+    rot = rot_ref[0, 0].astype(jnp.float32)      # (D, D)
+    proj = jax.lax.dot_general(
+        x, rot, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)      # (bB, D)
+    absp = jnp.abs(proj)
+    vid = jnp.argmax(absp, axis=-1)              # (bB,)
+    sign_neg = jnp.take_along_axis(proj, vid[:, None], axis=-1)[:, 0] < 0
+    d = proj.shape[-1]
+    vid = jnp.where(sign_neg, vid + d, vid).astype(jnp.int32)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    acc = out_ref[...][:, 0]
+    out_ref[...] = ((acc * radix + vid) % num_buckets)[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_buckets", "block_b", "interpret"))
+def lsh_hash_mix(x: jax.Array, rotations: jax.Array, *, num_buckets: int,
+                 block_b: int = 128, interpret: bool = True) -> jax.Array:
+    """x: (B, D); rotations: (T, K, D, D) -> (B, T) int32 mixed bucket ids.
+
+    One dispatch for the whole cross-polytope hash including the bucket
+    mixing that previously ran as K Python-level modular steps on host.
+    """
+    B, D = x.shape
+    T, K = rotations.shape[:2]
+    bB = min(block_b, B)
+    grid = (pl.cdiv(B, bB), T, K)
+    kernel = functools.partial(
+        _lsh_hash_mix_kernel, radix=2 * D, num_buckets=num_buckets)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bB, D), lambda b, t, k: (b, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, t, k: (t, k, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bB, 1), lambda b, t, k: (b, t)),
+        out_shape=jax.ShapeDtypeStruct((B, T), jnp.int32),
+        interpret=interpret,
+    )(x, rotations)
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
 def lsh_hash(x: jax.Array, rotations: jax.Array, *, block_b: int = 128,
              interpret: bool = True) -> jax.Array:

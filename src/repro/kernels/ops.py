@@ -8,6 +8,7 @@ correctness), and dtype plumbing.  Every op has a pure-jnp oracle in
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional, Tuple
 
 import jax
@@ -17,9 +18,23 @@ import numpy as np
 from . import ref
 from .decode_attention import decode_attention as _decode_kernel
 from .flash_attention import flash_attention as _flash_kernel
+from .fused_query import fused_query as _fused_query
 from .lsh_hash import lsh_hash as _lsh_kernel
+from .lsh_hash import lsh_hash_mix as _lsh_mix_kernel
 from .sim_topk import gather_top1 as _gather_kernel
+from .sim_topk import reuse_top1 as _reuse_kernel
 from .sim_topk import sim_top1 as _sim_kernel
+
+# Device dispatches issued by the fused one-dispatch query path (one per
+# ``reuse_query_top1`` call).  Paired with ``fused_query.FUSED_TRACE_COUNT``
+# this lets tests assert "exactly one dispatch, zero retraces" on the hot
+# path.
+FUSED_DISPATCH_COUNT = 0
+
+
+def _env_int(name: str, default: int) -> int:
+    v = os.environ.get(name)
+    return int(v) if v else default
 
 
 def _on_tpu() -> bool:
@@ -49,13 +64,19 @@ def lsh_hash_ids(x: jax.Array, rotations: jax.Array) -> jax.Array:
 
 
 def lsh_buckets(x: jax.Array, rotations: jax.Array, num_buckets: int) -> jax.Array:
-    """Fused hash + per-table bucket mixing -> (B, T) int32."""
-    vids = lsh_hash_ids(x, rotations)
-    radix = 2 * x.shape[-1]
-    val = jnp.zeros(vids.shape[:-1], jnp.int32)
-    for kk in range(vids.shape[-1]):
-        val = (val * radix + vids[..., kk]) % num_buckets
-    return val
+    """Fused hash + per-table bucket mixing -> (B, T) int32, one dispatch.
+
+    The K modular-mixing steps run inside the kernel epilogue (the bucket
+    accumulator block stays VMEM-resident across the sequential K grid axis)
+    instead of as host-side jnp ops after the hash kernel returned.
+    ``RESERVOIR_HASH_BLOCK_B`` tunes the batch tile.
+    """
+    xp, b = _pad_to(x, 0, 8)
+    out = _lsh_mix_kernel(
+        xp, rotations, num_buckets=num_buckets,
+        block_b=_env_int("RESERVOIR_HASH_BLOCK_B", 128),
+        interpret=_interpret())
+    return out[:b]
 
 
 # ------------------------------------------------------------------- sim_topk
@@ -100,17 +121,13 @@ def gathered_top1(q: jax.Array, store: jax.Array, cand_ids: jax.Array):
     Candidate width is padded to a multiple of 64 (queries to 8) so repeated
     calls with drifting candidate counts reuse a small set of compilations.
     A paged store is passed through unpadded: its row count is
-    num_pages * page_size, already a hardware-friendly multiple (the store
-    allocates whole pages; keep page_size a multiple of 8 on TPU).
+    num_pages * page_size, already a hardware-friendly multiple — the reuse
+    store rounds page_size up to a multiple of 8 at allocation, so pages
+    always tile cleanly on TPU and no flatten-copy valve is needed here.
     """
     q = jnp.atleast_2d(q)
     nq = q.shape[0]
     paged = store.ndim == 3
-    if paged and store.shape[1] % 8 and not _interpret():
-        # tiny (test-sized) pages misalign TPU tiles; flatten — a copy, but
-        # a correctness valve only: production page sizes are multiples of 8
-        store = store.reshape(-1, store.shape[-1])
-        paged = False
     n_rows = (store.shape[0] * store.shape[1]) if paged else store.shape[0]
     if n_rows == 0 or cand_ids.shape[1] == 0:
         return (jnp.full((nq,), -jnp.inf, jnp.float32),
@@ -124,6 +141,79 @@ def gathered_top1(q: jax.Array, store: jax.Array, cand_ids: jax.Array):
     blocks = {"block_q": 128, "block_c": 512} if _interpret() else {}
     val, idx = _gather_kernel(qp, sp, ids, interpret=_interpret(), **blocks)
     return val[:nq], idx[:nq]
+
+
+# --------------------------------------------------------- fused reuse query
+def unique_counts(cand: "np.ndarray") -> "np.ndarray":
+    """Exact unique-candidate counts from a raw (B, W) candidate-id matrix.
+
+    Host-side twin of fused_query's device count epilogue: -1 pads sort to
+    the front, a run-length count of the valid tail matches the scalar
+    path's sorted-unique statistics bit-exactly.  numpy sorts ~10x faster
+    than XLA:CPU, so the interpret-mode fused path counts here instead of
+    in-jit (TPU keeps the device-side epilogue).
+    """
+    import numpy as np
+
+    srt = np.sort(cand, axis=1)
+    first = np.concatenate(
+        [np.ones((srt.shape[0], 1), bool), srt[:, 1:] != srt[:, :-1]], axis=1)
+    return ((srt >= 0) & first).sum(axis=1).astype(np.int32)
+
+
+def reuse_query_top1(embs, lsh, slots_dev: jax.Array, pages_dev: jax.Array,
+                     *, block_q: Optional[int] = None,
+                     block_c: Optional[int] = None,
+                     gather_mode: Optional[str] = None,
+                     need_counts: bool = True):
+    """One-dispatch batched reuse query over the device-resident store.
+
+    embs: (B, D) unit rows (host or device); lsh: the store's ``core.lsh.LSH``
+    instance (only its params + rotation/plane arrays are read); slots_dev:
+    (T * num_buckets, bucket_cap) int32 device slot tables; pages_dev: paged
+    (num_pages, page_size, D) device embedding mirror.
+
+    Returns (best (B,) f32, idx (B,) int32, counts) — idx is a store row id
+    (-1 = no candidate, lowest id wins similarity ties, matching the host
+    path); counts are exact unique-candidate statistics, or None when the
+    caller passes ``need_counts=False`` (peek reads record no statistics,
+    and ``idx < 0`` already identifies the zero-candidate rows).  On TPU the
+    counts come from the in-dispatch sort epilogue; under interpret mode
+    they are counted host-side (``unique_counts``) from the returned raw
+    candidate matrix — still a single device dispatch either way.
+
+    Knobs: ``RESERVOIR_FUSED_BLOCK_Q`` / ``RESERVOIR_FUSED_BLOCK_C`` tune the
+    kernel tiles, ``RESERVOIR_GATHER_MODE=onehot`` selects the one-hot matmul
+    candidate gather for TPU targets where the Mosaic dynamic row gather does
+    not lower (small stores only — it is O(C * N * D) MXU work).
+
+    B is padded to a multiple of 8; everything else in the signature is
+    static per store config, so steady-state traffic reuses one compilation.
+    """
+    import numpy as np
+
+    global FUSED_DISPATCH_COUNT
+    p = lsh.params
+    proj = lsh.rotations if p.family == "cross_polytope" else lsh.planes
+    x = jnp.atleast_2d(jnp.asarray(embs, jnp.float32))
+    nq = x.shape[0]
+    xp, _ = _pad_to(x, 0, 8)
+    interp = _interpret()
+    val, idx, extra = _fused_query(
+        xp, proj, slots_dev, pages_dev,
+        family=p.family, num_probes=p.num_probes,
+        gather_mode=gather_mode or os.environ.get("RESERVOIR_GATHER_MODE", "take"),
+        block_q=block_q or _env_int("RESERVOIR_FUSED_BLOCK_Q", 128),
+        block_c=block_c or _env_int("RESERVOIR_FUSED_BLOCK_C", 512),
+        interpret=interp, with_counts=not interp)
+    FUSED_DISPATCH_COUNT += 1
+    if not need_counts:
+        counts = None
+    elif interp:
+        counts = unique_counts(np.asarray(extra[:nq]))
+    else:
+        counts = extra[:nq]
+    return val[:nq], idx[:nq], counts
 
 
 # ------------------------------------------------------------ flash attention

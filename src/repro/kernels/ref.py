@@ -73,6 +73,37 @@ def gather_top1_ref(q: jax.Array, store: jax.Array, cand_ids: jax.Array):
     return best, idx
 
 
+def reuse_top1_ref(q: jax.Array, store: jax.Array, cand_ids: jax.Array):
+    """Lexicographic (max cosine, min row id) top-1 over raw table candidates.
+
+    Same contract as ``gather_top1_ref`` except candidate lists may be
+    unsorted and contain duplicates (they come straight from the slot
+    tables), and ties on similarity resolve to the *lowest* store row id —
+    the semantics of the host path's argmax over sorted-unique candidates.
+    """
+    ids = cand_ids.astype(jnp.int32)
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    qf = q.astype(jnp.float32)
+    qn = qf / jnp.maximum(jnp.linalg.norm(qf, axis=-1, keepdims=True), 1e-12)
+    sf = store.astype(jnp.float32)
+    sn = sf / jnp.maximum(jnp.linalg.norm(sf, axis=-1, keepdims=True), 1e-12)
+    if store.ndim == 3:  # paged: (page, offset) decomposition, same as kernel
+        page_size = store.shape[1]
+        pg = jnp.clip(safe // page_size, 0, store.shape[0] - 1)
+        cand = sn[pg, safe % page_size]                 # (Q, C, D)
+    else:
+        cand = jnp.take(sn, safe, axis=0)               # (Q, C, D)
+    scores = jnp.einsum("qd,qcd->qc", qn, cand)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    best = jnp.max(scores, axis=-1)
+    imax = jnp.iinfo(jnp.int32).max
+    elig = valid & (scores >= best[:, None])
+    idx = jnp.min(jnp.where(elig, ids, imax), axis=-1)
+    idx = jnp.where(jnp.isfinite(best), idx, -1).astype(jnp.int32)
+    return best, idx
+
+
 # ------------------------------------------------------------ flash attention
 def flash_attention_ref(
     q: jax.Array,                  # (B, S, H, D)

@@ -22,6 +22,17 @@ similarity is a plain matmul.  Two kernels:
   gathers through (page, offset), so the caller never has to flatten (=
   copy) the paged residency.  The gather lowers to a Mosaic dynamic row
   gather on TPU; on CPU the kernels run in interpret mode (see ops.py).
+
+* ``reuse_top1`` — the one-dispatch query path's top-1 stage (DESIGN.md
+  §One-dispatch query path).  Same gather + masked cosine scheme as
+  ``gather_top1`` but with an explicit *lexicographic* (max similarity,
+  then min store row id) running best: candidate lists arrive straight
+  from the device slot tables — unsorted, with duplicates — and the
+  lowest-id-wins rule reproduces the host path's argmax-over-sorted-unique
+  semantics without sorting.  ``gather_mode`` selects the Mosaic dynamic
+  row gather (``"take"``) or a one-hot matmul fallback (``"onehot"``) for
+  TPU generations where the dynamic gather does not lower; the fallback is
+  O(C * N * D) MXU work and only sensible for small stores.
 """
 from __future__ import annotations
 
@@ -181,3 +192,125 @@ def gather_top1(q: jax.Array, store: jax.Array, cand_ids: jax.Array,
         interpret=interpret,
     )(q, cand_ids.astype(jnp.int32), store)
     return val, idx
+
+
+def _gather_rows(store, flat_ids, *, gather_mode: str):
+    """Gather store rows by flat slot id -> (len(flat_ids), D) f32.
+
+    ``take``: Mosaic dynamic row gather (paged stores go through the
+    (page, offset) decomposition).  ``onehot``: one-hot matmul fallback for
+    targets where the dynamic gather does not lower — builds a
+    (len(ids), N) selector and hits the MXU; fine for small stores only.
+    """
+    if gather_mode == "onehot":
+        flat_store = store.reshape(-1, store.shape[-1]) if store.ndim == 3 else store
+        n = flat_store.shape[0]
+        sel = (flat_ids[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (1, n), 1)).astype(jnp.float32)
+        return jax.lax.dot_general(
+            sel, flat_store.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    if store.ndim == 3:
+        page_size = store.shape[1]
+        pg = jnp.clip(flat_ids // page_size, 0, store.shape[0] - 1)
+        return store[pg, flat_ids % page_size].astype(jnp.float32)
+    return jnp.take(store, flat_ids, axis=0, mode="clip").astype(jnp.float32)
+
+
+def _reuse_top1_kernel(q_ref, ids_ref, store_ref, val_ref, idx_ref,
+                       best_val, best_idx, *, gather_mode: str,
+                       block_q: int, block_c: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+    imax = jnp.iinfo(jnp.int32).max
+
+    @pl.when(j == 0)
+    def _init():
+        best_val[...] = jnp.full_like(best_val, -jnp.inf)
+        best_idx[...] = jnp.full_like(best_idx, imax)
+
+    # q and ids live in ANY memory space and are tile-loaded here by
+    # program id: blocked operands are carried through the grid loop with a
+    # full-array copy per step, which turns O(B * C) inputs quadratic in
+    # the batch — the explicit load keeps each step O(block).
+    q = pl.load(q_ref, (pl.dslice(i * block_q, block_q),
+                        slice(None))).astype(jnp.float32)   # (bQ, D)
+    ids = pl.load(ids_ref, (pl.dslice(i * block_q, block_q),
+                            pl.dslice(j * block_c, block_c)))  # (bQ, bC)
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    store = store_ref[...]                             # (N, D) | (P, S, D)
+    cand = _gather_rows(store, safe.reshape(-1), gather_mode=gather_mode)
+    cand = cand.reshape(safe.shape + (q.shape[-1],))
+    scores = jnp.einsum("qd,qcd->qc", q, cand)         # (bQ, bC)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    tile_val = jnp.max(scores, axis=-1)                # (bQ,)
+    # lexicographic running best: duplicate ids score bit-equal, so taking
+    # the *minimum* id among this tile's maxima reproduces the host path's
+    # argmax-over-sorted-unique tie-break without sorting candidates.
+    elig = valid & (scores >= tile_val[:, None])
+    tile_idx = jnp.min(jnp.where(elig, ids, imax), axis=-1)
+    bv, bi = best_val[...], best_idx[...]
+    better = (tile_val > bv) | ((tile_val == bv) & (tile_idx < bi))
+    best_val[...] = jnp.where(better, tile_val, bv)
+    best_idx[...] = jnp.where(better, tile_idx, bi)
+
+    @pl.when(j == nj - 1)
+    def _done():
+        val_ref[...] = best_val[...]
+        idx_ref[...] = jnp.where(
+            best_val[...] > -jnp.inf, best_idx[...], -1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_q", "block_c", "interpret", "gather_mode"))
+def reuse_top1(q: jax.Array, store: jax.Array, cand_ids: jax.Array,
+               *, block_q: int = 128, block_c: int = 512,
+               interpret: bool = True, gather_mode: str = "take"):
+    """Masked cosine top-1 with lowest-id tie-break over raw table candidates.
+
+    q: (Q, D) unit rows; store: flat (N, D) or paged
+    (num_pages, page_size, D) device buffer; cand_ids: (Q, C) int32 store row
+    ids straight from the slot tables — unsorted, duplicated, -1 = empty
+    slot.  Returns (best (Q,), idx (Q,)): idx is the lowest store row id
+    among the maximum-similarity candidates (-1 / -inf when a query has no
+    valid candidate), matching the host path's sorted-unique argmax.
+    """
+    Q, D = q.shape
+    C = cand_ids.shape[1]
+    bQ, bC = min(block_q, Q), min(block_c, C)
+    # q/ids are manually tile-loaded from ANY memory space (see kernel), so
+    # pad them to block multiples up front; padded rows have no valid
+    # candidate and fall out as (-inf, -1), sliced off below.
+    Qp, Cp = -(-Q // bQ) * bQ, -(-C // bC) * bC
+    if Qp != Q:
+        q = jnp.pad(q, ((0, Qp - Q), (0, 0)))
+    ids = cand_ids.astype(jnp.int32)
+    if Qp != Q or Cp != C:
+        ids = jnp.pad(ids, ((0, Qp - Q), (0, Cp - C)), constant_values=-1)
+    grid = (Qp // bQ, Cp // bC)
+    val, idx = pl.pallas_call(
+        functools.partial(_reuse_top1_kernel, gather_mode=gather_mode,
+                          block_q=bQ, block_c=bC),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((bQ,), lambda i, j: (i,)),
+            pl.BlockSpec((bQ,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp,), jnp.float32),
+            jax.ShapeDtypeStruct((Qp,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bQ,), jnp.float32),
+            pltpu.VMEM((bQ,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, ids, store)
+    return val[:Q], idx[:Q]

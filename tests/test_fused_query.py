@@ -1,0 +1,193 @@
+"""Store-level tests for the one-dispatch fused reuse query (ISSUE 7).
+
+Covers: staged-vs-fused result parity (hits, similarities, tie-break ids,
+candidate-count stats, LRU order), the exactly-one-device-dispatch /
+zero-retrace hot-path contract, O(dirty) table-mirror sync invariants,
+routing gates (peek, small batches, non-cosine, fused=False), and
+tombstone correctness through the fused path.
+"""
+import numpy as np
+import pytest
+
+import repro.kernels.fused_query as fused_query_mod
+from repro.core import LSHParams, ReuseStore, normalize
+from repro.kernels import ops
+
+PARAMS = LSHParams(dim=16, num_tables=3, num_probes=4, num_buckets=64, seed=3)
+RNG = np.random.default_rng(7)
+
+
+def _pair(n=300, **kw):
+    """Identically-filled (staged, fused) stores."""
+    a = ReuseStore(PARAMS, capacity=1000, page_size=8, fused=False, **kw)
+    b = ReuseStore(PARAMS, capacity=1000, page_size=8, fused=True,
+                   fused_min_batch=1, use_kernel_threshold=1, **kw)
+    X = normalize(RNG.standard_normal((n, 16)).astype(np.float32))
+    a.insert_batch(X, [f"r{i}" for i in range(n)])
+    b.insert_batch(X, [f"r{i}" for i in range(n)])
+    return a, b, X
+
+
+class TestParity:
+    def test_fused_matches_staged_exactly(self):
+        a, b, X = _pair()
+        Q = normalize(RNG.standard_normal((96, 16)).astype(np.float32))
+        Q[5] = X[10]  # exact hit
+        thrs = RNG.choice([0.0, 0.5, 0.9], 96).astype(np.float32)
+        ra = a.query_batch(Q, thrs)
+        rb = b.query_batch(Q, thrs)
+        for i, (x, y) in enumerate(zip(ra, rb)):
+            assert x[2] == y[2], i              # identical tie-break index
+            assert abs(x[1] - y[1]) < 1e-4, i   # fp32-tolerance similarity
+            assert (x[0] is None) == (y[0] is None), i
+        assert a.candidate_counts == b.candidate_counts
+        assert list(a._lru) == list(b._lru)     # identical LRU refresh order
+
+    def test_parity_after_remove_and_slot_reuse(self):
+        a, b, X = _pair()
+        for k in (3, 50, 120):
+            idx = a.live_ids()[k]
+            a.remove(idx)
+            b.remove(idx)
+        Y = normalize(RNG.standard_normal((8, 16)).astype(np.float32))
+        a.insert_batch(Y, [f"n{i}" for i in range(8)])
+        b.insert_batch(Y, [f"n{i}" for i in range(8)])
+        Q = np.concatenate([Y, X[:56]])
+        ra = a.query_batch(Q, 0.5)
+        rb = b.query_batch(Q, 0.5)
+        assert [r[2] for r in ra] == [r[2] for r in rb]
+
+    def test_duplicate_embedding_lowest_id_wins(self):
+        """Two live entries with identical embeddings: both paths must hit
+        the lower slot id (the scalar path's sorted-unique argmax)."""
+        a = ReuseStore(PARAMS, capacity=64, page_size=8, fused=False)
+        b = ReuseStore(PARAMS, capacity=64, page_size=8, fused=True,
+                       fused_min_batch=1, use_kernel_threshold=1)
+        v = normalize(RNG.standard_normal(16).astype(np.float32))
+        w = normalize(RNG.standard_normal(16).astype(np.float32))
+        for s in (a, b):
+            s.insert(w, "w")
+            i1 = s.insert(v, "dup1")
+            i2 = s.insert(v.copy(), "dup2")
+            assert i1 < i2
+        [out_a] = a.query_batch(v[None], 0.9)
+        [out_b] = b.query_batch(v[None], 0.9)
+        assert out_a[2] == out_b[2] == 1
+        assert out_a[0] == out_b[0] == "dup1"
+
+    def test_peek_large_batch_parity_and_no_mutation(self):
+        a, b, X = _pair()
+        lru_before = list(b._lru)
+        stats_before = list(b.candidate_counts)
+        ra = a.query_batch(X[:64], 0.5, peek=True)
+        rb = b.query_batch(X[:64], 0.5, peek=True)
+        assert [r[2] for r in ra] == [r[2] for r in rb]
+        assert list(b._lru) == lru_before
+        assert b.candidate_counts == stats_before
+
+
+class TestOneDispatch:
+    def test_exactly_one_dispatch_and_no_retrace_on_hot_path(self):
+        """Steady state (mirrors synced): each query_batch is exactly one
+        fused device dispatch, with no staged host work and no retracing."""
+        _, b, X = _pair()
+        b.query_batch(X[:32], 0.5)      # materialize mirrors + compile
+        b.sync_device()                 # drain any leftover dirt
+        # the staged path must never run on the hot path
+        def boom(*a, **k):
+            raise AssertionError("staged path invoked on fused hot path")
+        b._query_staged = boom
+        b._candidate_matrix = boom
+        d0 = ops.FUSED_DISPATCH_COUNT
+        t0 = fused_query_mod.FUSED_TRACE_COUNT
+        for _ in range(3):
+            b.query_batch(X[:32], 0.5)
+        assert ops.FUSED_DISPATCH_COUNT - d0 == 3   # one dispatch per call
+        assert fused_query_mod.FUSED_TRACE_COUNT == t0  # jit-persistent
+        assert b.last_sync_pages == 0               # no page uploads
+        assert b.last_table_sync_pages == 0         # no table uploads
+
+    def test_batch_size_padding_bounds_compiles(self):
+        """B pads to a multiple of 8, so nearby batch sizes share one trace."""
+        _, b, X = _pair()
+        b.query_batch(X[:24], 0.5)
+        t0 = fused_query_mod.FUSED_TRACE_COUNT
+        for n in (17, 18, 23, 24):
+            b.query_batch(X[:n], 0.5)
+        assert fused_query_mod.FUSED_TRACE_COUNT == t0
+
+
+class TestTableMirrorSync:
+    def test_first_sync_uploads_all_then_o_dirty(self):
+        _, b, X = _pair(n=200)
+        b.query_batch(X[:32], 0.5)      # first fused call: full table upload
+        total_slabs = -(-b._table_rows // b._table_slab_rows)
+        assert b.table_sync_pages_total >= total_slabs
+        before = b.table_sync_pages_total
+        v = normalize(RNG.standard_normal(16).astype(np.float32))
+        b.insert(v, "x")                # dirties <= T bucket rows
+        b.query_batch(X[:32], 0.5)
+        delta = b.table_sync_pages_total - before
+        assert 1 <= delta <= PARAMS.num_tables
+        # clean steady state afterwards
+        b.query_batch(X[:32], 0.5)
+        assert b.last_table_sync_pages == 0
+
+    def test_sync_device_drains_table_dirt_off_query_path(self):
+        """The serving commit path calls sync_device() after inserts; once
+        the table mirror exists that must cover table dirt too, keeping the
+        next fused query sync-free."""
+        _, b, X = _pair(n=200)
+        b.query_batch(X[:32], 0.5)      # materialize both mirrors
+        v = normalize(RNG.standard_normal(16).astype(np.float32))
+        b.insert(v, "x")
+        assert b._tdirty and b._dirty
+        b.sync_device()                 # eager post-commit sync
+        assert not b._tdirty and not b._dirty
+        b.query_batch(X[:32], 0.5)
+        assert b.last_table_sync_pages == 0 and b.last_sync_pages == 0
+
+    def test_remove_dirties_tables_and_fused_forgets_entry(self):
+        _, b, X = _pair(n=100)
+        [hit] = b.query_batch(X[10][None], 0.99)
+        assert hit[2] is not None
+        b.remove(hit[2])
+        assert b._tdirty               # table mutation tracked
+        [out] = b.query_batch(X[10][None], 0.99)
+        assert out[2] != hit[2]        # tombstoned entry cannot win again
+
+    def test_mirror_matches_host_tables_after_churn(self):
+        _, b, X = _pair(n=150)
+        b.query_batch(X[:32], 0.5)
+        for k in (2, 30, 70):
+            b.remove(b.live_ids()[k])
+        Y = normalize(RNG.standard_normal((20, 16)).astype(np.float32))
+        b.insert_batch(Y, list(range(20)))
+        b.query_batch(X[:32], 0.5)     # syncs dirty slabs
+        flat = b._slots.reshape(b._table_rows, b.bucket_cap)
+        assert (np.asarray(b._slots_dev) == flat).all()
+
+
+class TestRouting:
+    def test_small_batches_and_non_cosine_stay_staged(self):
+        store = ReuseStore(PARAMS, capacity=100, page_size=8)  # defaults
+        assert not store._use_fused(4)            # below fused_min_batch
+        assert store._use_fused(4096)
+        struct = ReuseStore(PARAMS, capacity=100, similarity="structural",
+                            fused=True, fused_min_batch=1,
+                            use_kernel_threshold=1)
+        assert not struct._use_fused(4096)        # cosine only
+        off = ReuseStore(PARAMS, capacity=100, fused=False)
+        assert not off._use_fused(1 << 20)
+
+    def test_work_threshold_gate(self):
+        store = ReuseStore(PARAMS, capacity=100, fused=True, fused_min_batch=1,
+                           use_kernel_threshold=1 << 30)
+        assert not store._use_fused(64)
+
+    def test_page_size_rounds_to_multiple_of_8(self):
+        for ps, want in ((1, 8), (4, 8), (8, 8), (12, 16), (4096, 4096)):
+            s = ReuseStore(PARAMS, capacity=10, page_size=ps)
+            assert s.page_size == want, ps
+        with pytest.raises(ValueError):
+            ReuseStore(PARAMS, capacity=10, page_size=0)

@@ -11,8 +11,9 @@ import pytest
 from repro.kernels import ops, ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.lsh_hash import lsh_hash
-from repro.kernels.sim_topk import gather_top1, sim_top1
+from repro.kernels.fused_query import fused_query
+from repro.kernels.lsh_hash import lsh_hash, lsh_hash_mix
+from repro.kernels.sim_topk import gather_top1, reuse_top1, sim_top1
 
 RNG = np.random.default_rng(42)
 
@@ -50,6 +51,24 @@ class TestLshHash:
         x, rot = randn(50, 64), randn(2, 1, 64, 64)
         a = np.asarray(lsh_hash(x, rot, block_b=8))
         b = np.asarray(lsh_hash(x, rot, block_b=64))
+        assert (a == b).all()
+
+    @pytest.mark.parametrize("T,K,NB", [(1, 1, 64), (4, 2, 256), (3, 3, 100)])
+    def test_mix_epilogue_matches_host_mixing(self, T, K, NB):
+        """lsh_hash_mix (in-kernel mixing) == lsh_hash + host modular steps."""
+        x, rot = randn(20, 32), randn(T, K, 32, 32)
+        vids = np.asarray(lsh_hash(x, rot))
+        radix = 2 * 32
+        want = np.zeros(vids.shape[:-1], np.int32)
+        for kk in range(K):
+            want = (want * radix + vids[..., kk]) % NB
+        got = np.asarray(lsh_hash_mix(x, rot, num_buckets=NB))
+        assert (got == want).all()
+
+    def test_mix_epilogue_block_invariance(self):
+        x, rot = randn(50, 32), randn(2, 2, 32, 32)
+        a = np.asarray(lsh_hash_mix(x, rot, num_buckets=128, block_b=8))
+        b = np.asarray(lsh_hash_mix(x, rot, num_buckets=128, block_b=64))
         assert (a == b).all()
 
 
@@ -182,6 +201,139 @@ class TestGatherTop1:
         bv, bi = ops.nearest_neighbor(q, s)
         np.testing.assert_allclose(np.asarray(gv), np.asarray(bv), atol=1e-5)
         assert (np.asarray(gi) == np.asarray(bi)).all()
+
+
+# ------------------------------------------------------------- reuse_top1
+class TestReuseQueryTop1:
+    """Sweeps for the one-dispatch query path: the lexicographic top-1
+    kernel (reuse_top1) and the full fused pipeline (fused_query)."""
+
+    def _unit(self, *shape):
+        x = randn(*shape)
+        return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+    @pytest.mark.parametrize("Q,N,C,D", [(8, 64, 16, 32), (33, 1000, 200, 64),
+                                         (128, 4096, 700, 128), (5, 50, 7, 256)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, Q, N, C, D, dtype):
+        q = self._unit(Q, D).astype(dtype)
+        s = self._unit(N, D).astype(dtype)
+        ids = jnp.asarray(RNG.integers(-1, N, (Q, C)), jnp.int32)
+        val, idx = reuse_top1(q, s, ids)
+        wv, wi = ref.reuse_top1_ref(q, s, ids)
+        fin = np.isfinite(np.asarray(wv))
+        tol = 1e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(val)[fin], np.asarray(wv)[fin],
+                                   atol=tol)
+        if dtype == jnp.float32:
+            assert (np.asarray(idx) == np.asarray(wi)).all()
+
+    def test_lowest_id_wins_ties_regardless_of_order(self):
+        """Duplicate embeddings at different ids: the lowest id must win no
+        matter where it sits in the (unsorted, duplicated) candidate list."""
+        s = np.array(self._unit(64, 32))
+        s[40] = s[3]
+        s[57] = s[3]
+        q = jnp.asarray(s[3:4])
+        for order in ([40, 7, 3, 57, -1, 3], [57, 40, 3, 3, 7, -1],
+                      [3, 57, 40, -1, -1, 7]):
+            ids = jnp.asarray([order], jnp.int32)
+            _, idx = reuse_top1(q, jnp.asarray(s), ids)
+            assert int(idx[0]) == 3, order
+            _, wi = ref.reuse_top1_ref(q, jnp.asarray(s), ids)
+            assert int(wi[0]) == 3, order
+
+    def test_tie_break_across_candidate_tiles(self):
+        """The winning (lowest) id sits in a *later* candidate tile than an
+        equal-similarity duplicate: the cross-tile lexicographic merge must
+        still pick it (a plain strictly-greater merge would not)."""
+        s = np.array(self._unit(256, 32))
+        s[200] = s[5]
+        q = jnp.asarray(s[5:6])
+        ids = np.full((1, 128), -1, np.int32)
+        ids[0, 0] = 200            # tile 0 (block_c=64): high id first
+        ids[0, 100] = 5            # tile 1: the lower equal-sim id
+        _, idx = reuse_top1(q, jnp.asarray(s), jnp.asarray(ids),
+                            block_c=64)
+        assert int(idx[0]) == 5
+
+    def test_onehot_gather_matches_take(self):
+        q = self._unit(16, 32)
+        s = self._unit(128, 32)
+        ids = jnp.asarray(RNG.integers(-1, 128, (16, 40)), jnp.int32)
+        v1, i1 = reuse_top1(q, s, ids, gather_mode="take")
+        v2, i2 = reuse_top1(q, s, ids, gather_mode="onehot")
+        np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-5)
+        assert (np.asarray(i1) == np.asarray(i2)).all()
+
+    @pytest.mark.parametrize("gather_mode", ["take", "onehot"])
+    def test_paged_store_matches_flat(self, gather_mode):
+        P, S, D, C = 8, 32, 32, 40
+        flat = self._unit(P * S, D)
+        paged = flat.reshape(P, S, D)
+        q = self._unit(12, D)
+        ids = jnp.asarray(RNG.integers(-1, P * S, (12, C)), jnp.int32)
+        fv, fi = reuse_top1(q, flat, ids, gather_mode=gather_mode)
+        pv, pi = reuse_top1(q, paged, ids, gather_mode=gather_mode)
+        np.testing.assert_allclose(np.asarray(pv), np.asarray(fv), atol=1e-6)
+        assert (np.asarray(pi) == np.asarray(fi)).all()
+
+    def test_no_candidates_row(self):
+        q, s = self._unit(4, 32), self._unit(64, 32)
+        ids = jnp.full((4, 10), -1, jnp.int32)
+        val, idx = reuse_top1(q, s, ids)
+        assert (np.asarray(idx) == -1).all()
+        assert np.isneginf(np.asarray(val)).all()
+
+    def test_block_invariance(self):
+        q, s = self._unit(40, 64), self._unit(500, 64)
+        ids = jnp.asarray(RNG.integers(-1, 500, (40, 130)), jnp.int32)
+        v1, i1 = reuse_top1(q, s, ids, block_q=8, block_c=32)
+        v2, i2 = reuse_top1(q, s, ids, block_q=64, block_c=256)
+        np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-6)
+        assert (np.asarray(i1) == np.asarray(i2)).all()
+
+    @pytest.mark.parametrize("family,T,P_probe,NB,cap", [
+        ("cross_polytope", 3, 4, 64, 4),
+        ("cross_polytope", 2, 6, 128, 8),
+        ("hyperplane", 4, 8, 64, 4),
+    ])
+    def test_pipeline_matches_staged_oracle(self, family, T, P_probe, NB, cap):
+        """fused_query == probe_batch + table gather + reuse_top1_ref +
+        sorted-unique candidate counts, end to end."""
+        from repro.core.lsh import LSHParams, get_lsh
+
+        D, B, pages_n, page_s = 16, 24, 4, 8
+        lsh = get_lsh(LSHParams(dim=D, num_tables=T, num_probes=P_probe,
+                                num_buckets=NB, family=family, seed=11))
+        n_rows = pages_n * page_s
+        pages = self._unit(n_rows, D).reshape(pages_n, page_s, D)
+        slots = RNG.integers(-1, n_rows, (T * NB, cap)).astype(np.int32)
+        embs = self._unit(B, D)
+        proj = lsh.rotations if family == "cross_polytope" else lsh.planes
+        val, idx, counts = fused_query(
+            jnp.asarray(embs), proj, jnp.asarray(slots), jnp.asarray(pages),
+            family=family, num_probes=P_probe, with_counts=True)
+        # the with_counts=False variant hands the raw candidate matrix back
+        # for host-side counting — same results, bit-identical counts
+        val2, idx2, cand2 = fused_query(
+            jnp.asarray(embs), proj, jnp.asarray(slots), jnp.asarray(pages),
+            family=family, num_probes=P_probe, with_counts=False)
+        assert (np.asarray(idx2) == np.asarray(idx)).all()
+        assert (np.asarray(val2) == np.asarray(val)).all()
+        assert (ops.unique_counts(np.asarray(cand2))
+                == np.asarray(counts)).all()
+        probes = np.asarray(lsh.probe_batch(np.asarray(embs)))  # (B, T, P)
+        t_idx = np.arange(T)[None, :, None]
+        raw = slots.reshape(T, NB, cap)[t_idx, probes].reshape(B, -1)
+        wv, wi = ref.reuse_top1_ref(jnp.asarray(embs), jnp.asarray(pages),
+                                    jnp.asarray(raw))
+        want_counts = [len({i for i in row if i >= 0}) for row in raw]
+        fin = np.isfinite(np.asarray(wv))
+        np.testing.assert_allclose(np.asarray(val)[fin], np.asarray(wv)[fin],
+                                   atol=1e-5)
+        assert (np.asarray(idx) == np.asarray(wi)).all()
+        assert np.asarray(counts).tolist() == want_counts
 
 
 # --------------------------------------------------------- flash attention

@@ -88,6 +88,24 @@ class TestMultiProbe:
         assert miss_direct > 0.0  # the probes must be doing real work
 
 
+class TestKernelMixingParity:
+    """Pin: the in-kernel bucket mixing (ops.lsh_buckets, one dispatch) is
+    bit-identical to the core jnp hash across K and non-power-of-two bucket
+    counts — the fused query path relies on this equivalence."""
+
+    @pytest.mark.parametrize("K,NB", [(1, 256), (2, 256), (3, 100)])
+    def test_kernel_buckets_bit_identical(self, K, NB):
+        from repro.kernels import ops
+
+        lsh = get_lsh(LSHParams(dim=32, num_tables=3, rotations_per_table=K,
+                                num_buckets=NB, seed=21))
+        x = _rand(37, 32, seed=8)
+        got = np.asarray(ops.lsh_buckets(x, lsh.rotations, NB))
+        want = np.asarray(lsh.hash_batch(x))
+        assert got.dtype == want.dtype == np.int32
+        assert (got == want).all()
+
+
 class TestProperties:
     @settings(max_examples=25, deadline=None)
     @given(st.integers(0, 2**31 - 1))

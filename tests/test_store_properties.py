@@ -200,8 +200,16 @@ def _check_query(store: ReuseStore, model: RefStore, emb: np.ndarray,
         assert want_sim < thr + SIM_TOL
 
 
-def run_interleaving(seed: int, kernel: bool = False) -> None:
-    """One random op interleaving, store vs model, state-checked per op."""
+def run_interleaving(seed: int, kernel: bool = False,
+                     fused: bool = False) -> None:
+    """One random op interleaving, store vs model, state-checked per op.
+
+    ``kernel=True`` routes every batched score through the staged
+    ``gather_top1`` device path; ``fused=True`` routes every ``query_batch``
+    through the one-dispatch ``reuse_query_top1`` pipeline (device slot
+    tables + paged buffer), checking hit/miss, similarity, tie-break,
+    tombstone, and LRU parity against the RefStore per op.
+    """
     rng = np.random.default_rng(seed)
     params = LSHParams(dim=DIM, num_tables=int(rng.integers(2, 4)),
                        num_probes=4, num_buckets=32,
@@ -212,7 +220,8 @@ def run_interleaving(seed: int, kernel: bool = False) -> None:
     store = ReuseStore(
         params, capacity=capacity, bucket_cap=bucket_cap,
         page_size=page_size,
-        use_kernel_threshold=1 if kernel else 1 << 30)
+        use_kernel_threshold=1 if (kernel or fused) else 1 << 30,
+        fused=fused, fused_min_batch=1 if fused else 64)
     model = RefStore(params, capacity, bucket_cap)
     inserted: List[np.ndarray] = []
     uid = 0
@@ -224,7 +233,7 @@ def run_interleaving(seed: int, kernel: bool = False) -> None:
                              .astype(np.float32))
         return normalize(rng.standard_normal(DIM).astype(np.float32))
 
-    n_ops = 18 if kernel else 30
+    n_ops = 18 if (kernel or fused) else 30
     for _ in range(n_ops):
         op = rng.choice(["insert", "insert_batch", "query", "query_batch",
                          "remove"], p=[0.3, 0.2, 0.15, 0.25, 0.1])
@@ -275,6 +284,14 @@ class TestStoreProperties:
         # use_kernel_threshold=1: every batched score runs the fused
         # gather_top1 kernel against the paged device buffer
         run_interleaving(1000 + seed, kernel=True)
+
+    @pytest.mark.parametrize("seed", range(200))
+    def test_interleaving_parity_fused(self, seed):
+        # fused_min_batch=1 + use_kernel_threshold=1: every query_batch is
+        # one reuse_query_top1 dispatch over the device slot tables + paged
+        # buffer (ISSUE 7 acceptance: hit/miss, similarity, tie-break,
+        # tombstone and LRU parity on the 200-seed harness)
+        run_interleaving(2000 + seed, fused=True)
 
     @settings(max_examples=40, deadline=None)
     @given(seed=st.integers(0, 2**31 - 1))
