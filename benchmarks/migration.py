@@ -1,0 +1,315 @@
+"""Store-migration benchmark (ISSUE 8): warm-state churn on a Zipf fleet.
+
+The stranded-store bug, measured: a warm 6-EN fleet whose rFIB partition is
+Zipf-weighted (EN0 owns the lion's share) is re-partitioned to uniform
+weights mid-run — a weighted rebalance that moves a large fraction of the
+(table, bucket) ownership cells.  Entries admitted under the old partition
+used to stay behind, so every post-rebalance near-duplicate routed to the
+*new* owner missed and re-executed from scratch.  Bucket-granular store
+migration ships exactly the moved ranges to their new owners over the NDN
+fabric (``DESIGN.md`` §Store migration).
+
+Arms (all share the same warm phase and the same measure stream):
+
+  * baseline           — no churn: the steady-state local reuse-hit ceiling.
+  * rebalance/stranded — weighted rebalance with ``store_migration=False``:
+                         the bug, quantified (local hits collapse).
+  * rebalance/migrate  — the same rebalance with migration on: local hits
+                         return to the no-churn baseline.
+  * autoscale          — ``AutoscalePolicy`` grows and shrinks the fleet
+                         under a burst-then-trickle load while migration
+                         keeps the reuse state warm; the row records the
+                         reuse-hit / p99 trajectory across the run plus the
+                         scaling events.
+
+"Local reuse-hit" is the fraction of measure-phase tasks served from reuse
+state *without* crossing to a remote EN — user-side cache, in-network CS, or
+the routed EN's own store (named-data reuse at every layer is the point of
+the paper; a rebalance that strands stores degrades exactly the EN-store
+component while the name-exact caches are unaffected).  The raw EN-store
+local-hit is reported alongside for the decomposition.
+
+Acceptance (ISSUE 8), asserted outside ``--smoke``:
+  * the weighted rebalance moves >= 25% of (table, bucket) ownership cells;
+  * with migration, measure-phase local reuse-hit is within 5% (relative)
+    of the no-churn baseline — and strictly above the stranded arm's;
+  * the autoscale arm scales up AND back down, every task completes.
+
+Standalone: ``python -m benchmarks.migration [--smoke] [--json PATH]``
+(CI runs ``--smoke``); also registered in ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import networkx as nx
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import LSHParams, ReservoirNetwork
+from repro.core.edge_node import Service
+from repro.core.lsh import normalize
+from repro.federation.policy import AutoscalePolicy
+
+N_WARM = 400
+N_MEAS = 600
+N_ENS = 6
+DIM = 64
+THRESHOLD = 0.9
+LOAD_HZ = 50.0
+EN_SKEW = 1.0        # Zipf exponent of the initial bucket-partition weights
+CONTENT_CENTERS = 48
+CONTENT_SKEW = 1.1
+CONTENT_NOISE = 0.02
+EXEC_S = (0.030, 0.045)
+
+
+def _topology(n_ens: int, link_delay_s: float = 0.005):
+    g = nx.Graph()
+    ens = [f"en{i}" for i in range(n_ens)]
+    for en in ens:
+        g.add_edge("core", en, delay=link_delay_s)
+    return g, ens
+
+
+def _zipf_stream(n: int, seed: int) -> np.ndarray:
+    """Zipf-popular cluster stream.  The cluster *centers* are fixed across
+    calls — the measure phase must be near-duplicates of the warm phase's
+    content, or the warm store (the thing migration preserves) is moot."""
+    base = normalize(np.random.default_rng(42).standard_normal(
+        (CONTENT_CENTERS, DIM)).astype(np.float32))
+    rng = np.random.default_rng(seed)
+    p = 1.0 / np.arange(1, CONTENT_CENTERS + 1) ** CONTENT_SKEW
+    p /= p.sum()
+    picks = rng.choice(CONTENT_CENTERS, n, p=p)
+    return normalize(base[picks] + CONTENT_NOISE * rng.standard_normal(
+        (n, DIM)).astype(np.float32))
+
+
+def _owner_cells(entries, num_tables: int, num_buckets: int) -> np.ndarray:
+    """(T, B) matrix of per-cell owner index (-1 = unowned): the ownership
+    map whose churn the 'buckets moved' acceptance is measured on."""
+    prefixes = sorted({e.en_prefix for e in entries})
+    idx = {p: i for i, p in enumerate(prefixes)}
+    cells = np.full((num_tables, num_buckets), -1, np.int64)
+    for e in reversed(entries):  # first entry wins, like first-covering vote
+        for t, (lo, hi) in e.ranges.items():
+            cells[t, lo:hi + 1] = idx[e.en_prefix]
+    return cells
+
+
+def _make_net(n_ens: int, migration: bool, **kw) -> ReservoirNetwork:
+    params = LSHParams(dim=DIM, num_tables=5, num_probes=8, seed=11)
+    g, ens = _topology(n_ens)
+    net = ReservoirNetwork(g, ens, params, seed=0,
+                           store_migration=migration, **kw)
+    net.register_service(Service(
+        "/svc", execute=lambda x: round(float(np.sum(x)), 5),
+        exec_time_s=EXEC_S, input_dim=DIM))
+    net.add_user("u0", "core")
+    net.add_user("u1", "core")
+    return net
+
+
+def _submit(net, X, t0: float, load_hz: float, seed: int) -> float:
+    rng = np.random.default_rng(seed)
+    ts = t0 + np.cumsum(rng.exponential(1.0 / load_hz, len(X)))
+    for i, (t, x) in enumerate(zip(ts, X)):
+        net.submit_task(f"u{i % 2}", "svc", x, THRESHOLD, at_time=float(t))
+    return float(ts[-1])
+
+
+def _measure(records) -> dict:
+    cts = np.asarray([r.completion_time for r in records])
+    n = max(len(records), 1)
+    local = sum(1 for r in records
+                if r.reuse is not None and r.remote_en is None)
+    en_local = sum(1 for r in records
+                   if r.reuse == "en" and r.remote_en is None)
+    return {
+        "n": len(records),
+        "local_hit_pct": 100.0 * local / n,
+        "en_hit_pct": 100.0 * en_local / n,
+        "reuse_pct": 100.0 * sum(1 for r in records
+                                 if r.reuse is not None) / n,
+        "p99_ms": float(np.percentile(cts, 99)) * 1e3,
+        "mean_ms": float(cts.mean()) * 1e3,
+    }
+
+
+def _run_churn(mode: str, n_warm: int, n_meas: int, n_ens: int) -> dict:
+    """One arm: Zipf-partitioned warm phase, optional rebalance, measure."""
+    net = _make_net(n_ens, migration=(mode == "migrate"))
+    w = 1.0 / np.arange(1, n_ens + 1) ** EN_SKEW
+    net.rebalance_service("svc", weights=list(w / w.sum()))
+    t_end = _submit(net, _zipf_stream(n_warm, seed=7), 0.0, LOAD_HZ, seed=2)
+    net.run()
+
+    moved_frac = 0.0
+    if mode != "baseline":
+        before = _owner_cells(net.forwarders["core"].rfib.entries("svc"),
+                              net.lsh_params.num_tables,
+                              net.lsh_params.effective_buckets)
+        net.rebalance_service("svc")  # uniform weights: undo the Zipf skew
+        net.run()                     # drain the migration exchange
+        after = _owner_cells(net.forwarders["core"].rfib.entries("svc"),
+                             net.lsh_params.num_tables,
+                             net.lsh_params.effective_buckets)
+        moved_frac = float(np.mean(before != after))
+
+    _submit(net, _zipf_stream(n_meas, seed=9), net.loop.now + 0.5,
+            LOAD_HZ, seed=4)
+    net.run()
+    done = [r for r in net.metrics.records if r.t_complete >= 0]
+    assert len(done) == n_warm + n_meas, "tasks incomplete"
+    out = _measure(done[n_warm:])
+    out["moved_bucket_pct"] = moved_frac * 100.0
+    fs = net.federator.stats if net.federator is not None else {}
+    out["migrated_entries"] = fs.get("migrated_entries", 0)
+    out["migrate_batches"] = fs.get("migrate_batches", 0)
+    del t_end
+    return out
+
+
+def _run_autoscale(n_tasks: int, windows: int = 8) -> dict:
+    """Burst-then-trickle load under the autoscaler: the fleet grows, then
+    shrinks, and migration keeps reuse-hit pinned through both."""
+    net = _make_net(3, migration=True, offload_policy="least-loaded",
+                    federation_kw={"gossip_interval_s": 0.05,
+                                   "rebalance": False})
+    net.rebalance_service("svc")
+    policy = AutoscalePolicy(high_wait_s=0.02, low_wait_s=0.004,
+                             persistence=2, cooldown_rounds=8,
+                             min_ens=2, max_ens=6)
+    events = []
+    counter = [0]
+
+    def up():
+        counter[0] += 1
+        node = f"auto{counter[0]}"
+        net.add_en(node, attach_to="core")
+        events.append((round(net.loop.now, 3), "add", len(net.en_nodes)))
+
+    def down():
+        node = net.en_nodes[-1]
+        net.remove_en(node)
+        events.append((round(net.loop.now, 3), "remove", len(net.en_nodes)))
+
+    net.federator.attach_autoscaler(policy, up, down)
+    X = _zipf_stream(n_tasks, seed=13)
+    n_burst = int(n_tasks * 0.6)
+    t1 = _submit(net, X[:n_burst], 0.0, 140.0, seed=5)     # overload burst
+    _submit(net, X[n_burst:], t1 + 0.2, 12.0, seed=6)      # trickle: cool off
+    net.run()
+    done = [r for r in net.metrics.records if r.t_complete >= 0]
+    assert len(done) == n_tasks, "autoscale arm: tasks incomplete"
+    # reuse-hit / p99 trajectory over equal-duration submit windows
+    t_lo = min(r.t_submit for r in done)
+    t_hi = max(r.t_submit for r in done)
+    edges = np.linspace(t_lo, t_hi + 1e-9, windows + 1)
+    traj = []
+    for lo, hi in zip(edges[:-1], edges[1:]):
+        win = [r for r in done if lo <= r.t_submit < hi]
+        if not win:
+            continue
+        m = _measure(win)
+        traj.append({"t": round(float(lo), 2), "n": m["n"],
+                     "reuse_pct": round(m["reuse_pct"], 1),
+                     "p99_ms": round(m["p99_ms"], 1)})
+    fs = net.federator.stats
+    return {
+        "scale_ups": fs["scale_ups"], "scale_downs": fs["scale_downs"],
+        "migrated_entries": fs["migrated_entries"], "events": events,
+        "trajectory": traj, "overall": _measure(done),
+        "final_ens": len(net.en_nodes),
+    }
+
+
+def _derived(r: dict) -> str:
+    return (f"local_hit_pct={r['local_hit_pct']:.1f};"
+            f"en_hit_pct={r['en_hit_pct']:.1f};"
+            f"reuse_pct={r['reuse_pct']:.1f};p99_ms={r['p99_ms']:.1f};"
+            f"mean_ms={r['mean_ms']:.1f};"
+            f"moved_bucket_pct={r['moved_bucket_pct']:.1f};"
+            f"migrated={r['migrated_entries']}")
+
+
+def run(smoke: bool = False) -> list:
+    rows: list[Row] = []
+    n_warm = 150 if smoke else N_WARM
+    n_meas = 150 if smoke else N_MEAS
+    n_ens = 4 if smoke else N_ENS
+    arms = {mode: _run_churn(mode, n_warm, n_meas, n_ens)
+            for mode in ("baseline", "stranded", "migrate")}
+    for mode, r in arms.items():
+        rows.append((f"migration/{mode}", r["p99_ms"] * 1e3, _derived(r)))
+
+    auto = _run_autoscale(200 if smoke else 500)
+    traj = "|".join(f"t{p['t']}:reuse={p['reuse_pct']}%"
+                    f",p99={p['p99_ms']}ms" for p in auto["trajectory"])
+    rows.append((
+        "migration/autoscale", auto["overall"]["p99_ms"] * 1e3,
+        f"scale_ups={auto['scale_ups']};scale_downs={auto['scale_downs']};"
+        f"final_ens={auto['final_ens']};"
+        f"migrated={auto['migrated_entries']};"
+        f"events={auto['events']};traj={traj}"))
+
+    base, stranded, mig = (arms[m] for m in ("baseline", "stranded",
+                                             "migrate"))
+    ratio = (mig["local_hit_pct"] / base["local_hit_pct"]
+             if base["local_hit_pct"] else float("nan"))
+    ok = (mig["moved_bucket_pct"] >= 25.0
+          and ratio >= 0.95
+          and mig["local_hit_pct"] > stranded["local_hit_pct"]
+          and auto["scale_ups"] >= 1 and auto["scale_downs"] >= 1)
+    rows.append((
+        "migration/acceptance", 0.0,
+        f"moved_bucket_pct={mig['moved_bucket_pct']:.1f}(accept>=25);"
+        f"local_hit_migrate/baseline={ratio:.3f}(accept>=0.95);"
+        f"local_hit_stranded={stranded['local_hit_pct']:.1f}%<"
+        f"migrate={mig['local_hit_pct']:.1f}%;"
+        f"scale_ups={auto['scale_ups']};scale_downs={auto['scale_downs']};"
+        f"{'PASS' if ok else 'FAIL'}"))
+    if not ok and not smoke:
+        raise AssertionError(
+            f"migration acceptance: moved {mig['moved_bucket_pct']:.1f}%, "
+            f"local-hit ratio {ratio:.3f}, stranded "
+            f"{stranded['local_hit_pct']:.1f}% vs migrate "
+            f"{mig['local_hit_pct']:.1f}%, scale {auto['scale_ups']}up/"
+            f"{auto['scale_downs']}down")
+    if smoke:
+        # CI guard: the machinery demonstrably engaged on the small config
+        assert mig["migrated_entries"] > 0, "smoke: nothing migrated"
+        assert mig["moved_bucket_pct"] > 0, "smoke: rebalance moved nothing"
+        assert stranded["migrated_entries"] == 0, \
+            "smoke: stranded arm migrated"
+        assert auto["scale_ups"] >= 1, "smoke: autoscaler never scaled up"
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single small configuration (CI guard)")
+    ap.add_argument("--json", default=None,
+                    help="also write rows to this path "
+                         "(BENCH_migration.json)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f'{name},{us:.2f},"{derived}"')
+    if args.json:
+        records = [{"bench": "migration", "name": n,
+                    "us_per_call": round(float(u), 2), "derived": str(d)}
+                   for n, u, d in rows]
+        with open(args.json, "w") as f:
+            json.dump({"benches": ["migration"], "rows": records}, f,
+                      indent=1)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

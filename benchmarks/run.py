@@ -30,6 +30,7 @@ BENCHES = (
     "cosim",              # beyond-paper: edge-to-TPU co-simulation sweep
     "federation",         # beyond-paper: cross-EN offload policy sweep
     "fault_recovery",     # beyond-paper: fault injection + recovery under loss
+    "migration",          # beyond-paper: store migration under fleet churn
     "roofline",           # §Roofline (reads dry-run artifacts)
 )
 

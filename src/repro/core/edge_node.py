@@ -97,6 +97,10 @@ class ExecCompletion:
     backup: bool = False               # a straggler backup won the race
     remote_en: Optional[str] = None    # federated: prefix of the EN that
                                        # actually answered (offloaded miss)
+    stale_owner: bool = False          # the answering EN no longer owns the
+                                       # task's buckets (store hit served off
+                                       # a pre-rebalance resident — migration
+                                       # should have moved it)
 
 
 class ComputeBackend:
@@ -154,6 +158,14 @@ class ComputeBackend:
         reject every in-flight future with ``ExecAborted``.  The inline
         model resolves at submit time, so it has nothing in flight; the
         serving engine backend overrides this to abort its replicas."""
+
+    def on_en_join(self, node: Any) -> None:
+        """A new EN joined the fleet (``ReservoirNetwork.add_en``).
+        Backends with per-EN execution state (``EngineBackend``'s replica
+        engines) create it here; the inline model needs nothing — the
+        network initializes its busy-queue accounting itself.  The
+        partition-derived state (replica ``bucket_range``) is fixed by the
+        ``on_partition_change`` that follows the join's re-partition."""
 
 
 @dataclasses.dataclass
@@ -276,6 +288,11 @@ class EdgeNode:
             "remote_hits": 0,    # federated tasks answered from this store
             "remote_execs": 0,   # federated tasks executed on this EN
             "remote_coalesced": 0,  # federated followers riding a leader
+            # store migration (DESIGN.md §Store migration):
+            "migrated_out": 0,   # entries extracted and shipped elsewhere
+            "migrated_in": 0,    # entries landed here by a migration batch
+            "stale_owner_hits": 0,  # store hits served for buckets this EN
+                                    # no longer owns (pre-migration window)
             # fault/recovery layer (faults/, PIT aging, retransmission):
             "pit_expired": 0,    # PIT entries aged out at this node
             "retx_coalesced": 0,  # retransmissions deduped onto in-flight work

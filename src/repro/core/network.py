@@ -35,7 +35,7 @@ from .forwarder import Forwarder
 from .lsh import LSHParams, get_lsh, normalize
 from .namespace import make_task_name, parse_task_name
 from .packets import Data, Interest
-from .rfib import partition, rebalance
+from .rfib import owners_batch, partition, rebalance
 from .sim_clock import EventLoop, Future, Timer
 
 APP_FACE = 0  # face id reserved for the local application on every node
@@ -115,6 +115,9 @@ class TaskRecord:
     forwarding_error: bool = False
     retx: int = 0                # consumer retransmissions sent for this task
     failed: bool = False         # gave up (retx budget exhausted / NACKed out)
+    remote_en: Optional[str] = None  # federated: EN that actually answered
+    stale_owner: bool = False    # served off a store that no longer owns the
+                                 # task's buckets (pre-migration remote peek)
 
     @property
     def completion_time(self) -> float:
@@ -159,6 +162,25 @@ class Metrics:
         if not reused:
             return float("nan")
         return sum(bool(r.correct) for r in reused) / len(reused)
+
+    def local_en_fraction(self) -> float:
+        """Fraction of completed tasks answered by the rFIB-routed EN's own
+        store (reuse == 'en' with no federated detour) — the quantity store
+        migration pins through churn: without it, rebalanced buckets keep
+        hitting remotely off the old owner (see ``stale_owner_fraction``)."""
+        done = self.completed()
+        if not done:
+            return 0.0
+        return sum(r.reuse == "en" and r.remote_en is None
+                   for r in done) / len(done)
+
+    def stale_owner_fraction(self) -> float:
+        """Fraction of completed tasks served by an EN that had already lost
+        ownership of their buckets (stranded-store symptom)."""
+        done = self.completed()
+        if not done:
+            return 0.0
+        return sum(r.stale_owner for r in done) / len(done)
 
     def forwarding_error_rate(self) -> float:
         """Paper Fig. 10: 'percent of tasks forwarded to an EN that does not
@@ -221,6 +243,11 @@ class ReservoirNetwork:
                                        # lifetime alongside retx so retrans-
                                        # missions refresh live entries
         pit_sweep_interval_s: float = 1.0,  # PIT aging tick (event-driven)
+        store_migration: bool = True,  # ship stranded reuse entries to their
+                                       # new bucket owners on every ownership
+                                       # change (rebalance / leave / join);
+                                       # False reproduces the pre-migration
+                                       # stranded-store behaviour
         seed: int = 0,
     ):
         assert mode in ("reservoir", "icedge")
@@ -260,6 +287,10 @@ class ReservoirNetwork:
         self.link_delay_s = link_delay_s
         self.user_link_delay_s = user_link_delay_s
         self.icedge_tag_bits = icedge_tag_bits
+        self.store_migration = bool(store_migration)
+        self._seed = seed
+        self._cs_capacity = cs_capacity
+        self._en_store_capacity = en_store_capacity
         self._rng = random.Random(seed)
         self.loop = EventLoop()
         self.metrics = Metrics()
@@ -406,9 +437,25 @@ class ReservoirNetwork:
         if num_buckets is None:
             num_buckets = self.lsh_params.effective_buckets
         en_prefixes = [self.edge_nodes[n].prefix for n in self.en_nodes]
+        # old partition snapshot: the migration diff below compares each
+        # stored entry's pre- vs post-rebalance owner (ranges/prefixes are
+        # identical across forwarders; only faces differ)
+        old_entries = list(next(iter(self.forwarders.values()))
+                           .rfib.entries(svc))
         for node, fwd in self.forwarders.items():
-            faces = {p: [fwd.fib.next_hop(p) or APP_FACE]
-                     for p in en_prefixes}
+            faces = {}
+            for p in en_prefixes:
+                nh = fwd.fib.next_hop(p)
+                if nh is None:
+                    # APP_FACE (0) is a legitimate *falsy* next hop (the EN's
+                    # own node); None means NO route — silently mapping it to
+                    # APP_FACE (the old ``or APP_FACE``) installed a bogus
+                    # local-delivery face for a prefix this node can't reach.
+                    raise RuntimeError(
+                        f"rebalance_service({svc!r}): node {node!r} has no "
+                        f"FIB route toward EN prefix {p!r}; install routes "
+                        "before re-partitioning")
+                faces[p] = [nh]
             rebalance(fwd.rfib, svc, en_prefixes, faces,
                       self.lsh_params.num_tables, num_buckets,
                       self.lsh_params.index_size_bytes, weights=weights)
@@ -418,6 +465,60 @@ class ReservoirNetwork:
         # replica per EN
         if _notify_backend:
             self.backend.on_partition_change()
+        self._migrate_service(svc, old_entries)
+
+    def _migrate_service(self, svc: str, old_entries,
+                         include: Optional[List[Any]] = None) -> None:
+        """Ship stranded reuse entries to their new bucket owners.
+
+        Diffs each live EN's store against the OLD vs NEW partition with the
+        same per-table majority vote the rFIB routes by (``owners_batch``):
+        an entry moves iff this EN owned its buckets before the change and a
+        *different* EN owns them now — only moved ranges transfer.  With
+        ``include`` (a departing EN retained in ``_departed``), everything
+        live in that store is handed to its current owner regardless of the
+        old partition: the source is leaving the fabric entirely.
+
+        A no-op when ``store_migration`` is off or nothing moved — so a
+        zero-churn run never instantiates a federator and stays bit-for-bit
+        identical to the pre-migration simulator.
+        """
+        if not self.store_migration:
+            return
+        new_entries = list(next(iter(self.forwarders.values()))
+                           .rfib.entries(svc))
+        if not new_entries:
+            return
+        prefix_node = {self.edge_nodes[n].prefix: n for n in self.en_nodes}
+        sources = list(self.en_nodes) if include is None else list(include)
+        moves: List[Tuple[Any, Any, List[int]]] = []
+        for node in sources:
+            en = self._en_of(node)
+            store = en.stores.get(svc)
+            if store is None or not len(store):
+                continue
+            ids, bks = store.live_buckets()
+            new_own = owners_batch(new_entries, bks)
+            if node in self.edge_nodes:
+                old_own = (owners_batch(old_entries, bks) if old_entries
+                           else [None] * len(ids))
+                keep = en.prefix
+                sel = [(i, d) for i, o, d in zip(ids, old_own, new_own)
+                       if o == keep and d is not None and d != keep]
+            else:  # departing source: hand off every live entry
+                sel = [(i, d) for i, d in zip(ids, new_own) if d is not None]
+            by_dst: Dict[str, List[int]] = {}
+            for i, d in sel:
+                by_dst.setdefault(d, []).append(i)
+            for dprefix in sorted(by_dst):
+                dst = prefix_node.get(dprefix)
+                if dst is not None and dst != node:
+                    moves.append((node, dst, by_dst[dprefix]))
+        if not moves:
+            return
+        fed = self._ensure_federator()
+        for src, dst, id_list in moves:
+            fed.migrate_out(src, dst, svc, id_list)
 
     def remove_en(self, node: Any) -> None:
         """EN leave: re-partition its bucket ranges across the survivors.
@@ -426,21 +527,86 @@ class ReservoirNetwork:
         -executing tasks drain gracefully (their completions still deliver)
         and pre-leave TTC ready entries still answer their fetches; but the
         node stops being a routing target: every service is re-partitioned
-        across the remaining ENs, window-buffered tasks are failed over
-        immediately, and Interests still in flight toward the old entry are
-        failed over on arrival (``_failover_interest``) instead of dangling.
+        across the remaining ENs, its reuse store is handed off to the new
+        bucket owners before the drain completes (``store_migration``),
+        window-buffered tasks are failed over immediately, and Interests
+        still in flight toward the old entry are failed over on arrival
+        (``_failover_interest``) instead of dangling.
         """
         en = self.edge_nodes.pop(node)
         self.en_nodes.remove(node)
         self._departed[node] = en
         self._icedge_store.pop(node, None)
         for svc in self.services:
+            # survivors whose ranges shifted migrate via the per-service
+            # rebalance; the departing store is handed off right after
             self.rebalance_service(svc, _notify_backend=False)
+            self._migrate_service(svc, [], include=[node])
         self.backend.on_partition_change()  # once, on the final partition
         if self.federator is not None:
             self.federator.on_en_leave(node)
         for interest in self._en_pending.pop(node, []):
             self._failover_interest(node, interest)
+
+    def add_en(self, node: Any, attach_to: Any = None,
+               link_delay_s: Optional[float] = None,
+               store_capacity: Optional[int] = None,
+               weights=None) -> None:
+        """EN join (elastic scale-up): attach a new edge node and carve its
+        bucket ranges out of the existing partition.
+
+        ``node`` may be a brand-new graph node (``attach_to`` names its
+        upstream, default core link delay) or an existing forwarder-only
+        node being promoted to an EN.  The join re-runs shortest-path route
+        installation (every node learns the new prefix; the new node learns
+        everyone else's), re-partitions every service, and — via the same
+        ownership diff as a rebalance — pulls the stored entries of its new
+        ranges from their previous owners, so the joining EN starts warm
+        instead of converting its slice's hits into misses.
+        """
+        if node in self.edge_nodes:
+            raise ValueError(f"{node!r} is already an EN")
+        if node in self._crashed:
+            raise ValueError(f"{node!r} crashed; crashed ids do not rejoin")
+        if node not in self.graph:
+            if attach_to is None:
+                raise ValueError("a new node needs attach_to")
+            d = self.link_delay_s if link_delay_s is None else float(link_delay_s)
+            self.graph.add_node(node)
+            self.forwarders[node] = Forwarder(
+                f"/net/{node}", cs_capacity=self._cs_capacity,
+                seed=self._seed + zlib.crc32(str(node).encode()) % 9973,
+                pit_lifetime_s=self.pit_lifetime_s,
+            )
+            self._face_count[node] = APP_FACE + 1
+            self.graph.add_edge(node, attach_to, delay=d)
+            self._connect(node, attach_to, d)
+        cap = (self._en_store_capacity if store_capacity is None
+               else store_capacity)
+        en = EdgeNode(f"/en/{node}", self.lsh_params, store_capacity=cap,
+                      similarity="cosine", seed=self._seed + 17)
+        self.en_nodes.append(node)
+        self.edge_nodes[node] = en
+        self._departed.pop(node, None)  # a gracefully-left id may rejoin
+                                        # (fresh state; the old store is gone)
+        self._icedge_store[node] = {}
+        self._en_busy_until[node] = 0.0
+        self._en_pending[node] = []
+        for svc in self.services.values():
+            en.register(svc)
+        self._install_routes()
+        # the new node's bare-service FIB fallback (register_service installs
+        # these only on nodes that existed at registration time)
+        fwd = self.forwarders[node]
+        for svc in self.services:
+            fwd.fib.insert(f"/{svc}", APP_FACE)
+        self.backend.on_en_join(node)
+        if self.federator is not None:
+            self.federator.on_en_join(node)
+        for svc in self.services:
+            self.rebalance_service(svc, weights=weights,
+                                   _notify_backend=False)
+        self.backend.on_partition_change()  # once, on the final partition
 
     def crash_en(self, node: Any) -> None:
         """Crash-stop (fail-stop, no drain) — the adversarial counterpart of
@@ -520,6 +686,12 @@ class ReservoirNetwork:
         """App-face Interest at a departed EN's node (still a forwarder)."""
         if "service" not in interest.app_params:
             self._en_fetch(node, interest)  # pre-leave TTC ready entries
+        elif interest.app_params.get("migrate"):
+            # a migration batch whose destination left while it was in
+            # flight: re-home the entries to their owners under the CURRENT
+            # partition (the source already tombstoned them — dropping the
+            # batch here would lose the reuse state being rescued)
+            self._ensure_federator().reroute_migration(node, interest)
         elif interest.app_params.get("failover"):
             # a failover proxy whose target ALSO left before it arrived:
             # chain to the next owner (the proxy's waiter is another
@@ -695,6 +867,10 @@ class ReservoirNetwork:
         if "service" not in interest.app_params:
             # deferred result fetch (paper Fig. 3b): /<EN-prefix>/<svc>/task/<h>
             self._en_fetch(node, interest)
+            return
+        if interest.app_params.get("migrate"):
+            # store-migration batch landing at its new bucket owner
+            self._ensure_federator().handle_migration(node, interest)
             return
         if interest.app_params.get("federated"):
             # federated execution (DESIGN.md §Federation): a remote EN's
@@ -1039,6 +1215,8 @@ class ReservoirNetwork:
                 f"{self._en_of(key[0]).prefix}/replica/{comp.replica}"
         if comp.remote_en:
             meta["fed_en"] = comp.remote_en
+        if comp.stale_owner:
+            meta["stale_owner"] = True
         if comp.backup:
             meta["backup"] = True
         entry.meta = meta
@@ -1070,6 +1248,8 @@ class ReservoirNetwork:
                 f"{en.prefix}/replica/{comp.replica}"
         if comp.remote_en:
             meta["fed_en"] = comp.remote_en
+        if comp.stale_owner:
+            meta["stale_owner"] = True
         if comp.backup:
             meta["backup"] = True
         data = Data(name, content=comp.result, meta=meta)
@@ -1366,6 +1546,8 @@ class ReservoirNetwork:
                     # answered (fed_en), not the EN the rFIB routed to
                     rec.reuse_node = (data.meta.get("fed_en")
                                       or data.meta.get("en"))
+                rec.remote_en = data.meta.get("fed_en")
+                rec.stale_owner = bool(data.meta.get("stale_owner", False))
                 rec.similarity = float(data.meta.get("similarity", -1.0))
                 rec.aggregated = bool(data.meta.get("window_agg", False))
                 rec.forwarding_error = bool(data.meta.get("fwd_error", False))

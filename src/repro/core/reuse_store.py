@@ -47,6 +47,7 @@ the scoring matmul is offloaded to the ``sim_topk`` kernel.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import OrderedDict
 from typing import Any, List, Optional, Sequence, Tuple, Union
 
@@ -103,6 +104,26 @@ def _table_updater():
 
         _TABLE_UPDATER = _upd
     return _TABLE_UPDATER
+
+
+@dataclasses.dataclass
+class StoreExport:
+    """A migratable slice of a ``ReuseStore`` (DESIGN.md §Store migration).
+
+    ``ids`` are the *source* slot ids in LRU order (oldest first) — purely
+    informational after extraction; the destination allocates its own slots.
+    ``buckets`` carries the admission-time LSH buckets (N, T), so landing
+    the slice via ``insert_batch(embeddings, results, buckets=buckets)``
+    preserves exactly the table placement the entries were named under.
+    """
+
+    ids: List[int]
+    embeddings: np.ndarray       # (N, dim) float32, normalized as stored
+    results: List[Any]
+    buckets: np.ndarray          # (N, T) admission-time bucket indices
+
+    def __len__(self) -> int:
+        return len(self.ids)
 
 
 def _auto_bucket_cap(params: LSHParams, capacity: int) -> int:
@@ -708,6 +729,75 @@ class ReuseStore:
     def result_of(self, idx: int) -> Any:
         return self._results[idx]
 
+    def buckets_of(self, idx: int) -> np.ndarray:
+        """Admission-time (T,) LSH buckets of a live entry."""
+        if idx not in self._lru:
+            raise KeyError(f"slot {idx} is not live")
+        return self._buckets_of[idx]
+
     def live_ids(self) -> List[int]:
         """Slot ids currently resident (LRU order, oldest first)."""
         return list(self._lru)
+
+    def live_buckets(self) -> Tuple[List[int], np.ndarray]:
+        """(live ids in LRU order, their (N, T) admission-time buckets)."""
+        ids = list(self._lru)
+        if not ids:
+            t = self.params.num_tables
+            return ids, np.empty((0, t), np.int64)
+        return ids, np.stack([np.asarray(self._buckets_of[i], np.int64)
+                              for i in ids])
+
+    # ------------------------------------------------------------- migration
+    def ids_in_bucket_range(self, lo: int, hi: int) -> List[int]:
+        """Live ids (LRU order) whose admission buckets majority-fall in
+        [lo, hi].
+
+        "Majority" is a strict per-entry vote (more than half the T tables)
+        — the single-range analogue of the rFIB's per-EN majority routing.
+        Network-level migration diffs the full multi-EN partition instead
+        (``rfib.owners_batch``); this helper serves single-range callers
+        and the property harness.
+        """
+        t = self.params.num_tables
+        out = []
+        for idx in self._lru:
+            bks = self._buckets_of[idx]
+            inside = sum(1 for b in bks if lo <= int(b) <= hi)
+            if 2 * inside > t:
+                out.append(idx)
+        return out
+
+    def export(self, ids: Sequence[int]) -> StoreExport:
+        """Pure read of live entries -> ``StoreExport`` (order preserved).
+
+        Embeddings gather through the paged (page, offset) decomposition
+        (``_rows``); results and admission buckets copy by reference.
+        """
+        ids = [int(i) for i in ids]
+        for i in ids:
+            if i not in self._lru:
+                raise KeyError(f"slot {i} is not live")
+        t = self.params.num_tables
+        buckets = (np.stack([np.asarray(self._buckets_of[i], np.int64)
+                             for i in ids])
+                   if ids else np.empty((0, t), np.int64))
+        return StoreExport(
+            ids=ids,
+            embeddings=np.array(self._rows(np.asarray(ids, np.int64))),
+            results=[self._results[i] for i in ids],
+            buckets=buckets,
+        )
+
+    def extract(self, ids: Sequence[int]) -> StoreExport:
+        """Export ``ids`` and remove them from this store (migration source).
+
+        Removal rides the existing tombstone path (``remove``): table
+        detach + zeroed page row + dirty-page mark, so the next device sync
+        stays O(touched pages) and a reused slot id can never resurrect the
+        migrated embedding.
+        """
+        exp = self.export(ids)
+        for i in exp.ids:
+            self.remove(i)
+        return exp

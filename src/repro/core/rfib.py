@@ -17,6 +17,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .namespace import decode_task_hash
 
 
@@ -55,11 +57,6 @@ class RFIB:
     def insert(self, entry: RFibEntry) -> None:
         self._by_service.setdefault(entry.service.strip("/"), []).append(entry)
 
-    def remove_en(self, service: str, en_prefix: str) -> None:
-        svc = service.strip("/")
-        entries = self._by_service.get(svc, [])
-        entries[:] = [e for e in entries if e.en_prefix != en_prefix]
-
     def entries(self, service: str) -> List[RFibEntry]:
         return self._by_service.get(service.strip("/"), [])
 
@@ -77,19 +74,65 @@ class RFIB:
         if not entries:
             return None
         buckets = decode_task_hash(hash_component, entries[0].index_size_bytes)
-        votes: Dict[str, int] = {}
-        first: Dict[str, RFibEntry] = {}
-        for table, bucket in enumerate(buckets):
-            for e in entries:
-                if e.covers(table, bucket):
-                    votes[e.en_prefix] = votes.get(e.en_prefix, 0) + 1
-                    first.setdefault(e.en_prefix, e)
-                    break
-        if not votes:
-            return None
-        # majority; ties broken by EN prefix for determinism
-        winner = max(votes.items(), key=lambda kv: (kv[1], kv[0]))[0]
-        return first[winner]
+        return majority_owner(entries, buckets)
+
+
+def majority_owner(entries: Sequence[RFibEntry],
+                   buckets: Sequence[int]) -> Optional[RFibEntry]:
+    """The entry owning the majority of ``buckets`` (one per table).
+
+    Shared between ``RFIB.lookup`` (task routing) and store migration
+    (ownership of an admitted entry): both MUST agree, or a migrated entry
+    lands on an EN the rFIB will never route its near-duplicates to.
+    """
+    votes: Dict[str, int] = {}
+    first: Dict[str, RFibEntry] = {}
+    for table, bucket in enumerate(buckets):
+        for e in entries:
+            if e.covers(table, int(bucket)):
+                votes[e.en_prefix] = votes.get(e.en_prefix, 0) + 1
+                first.setdefault(e.en_prefix, e)
+                break
+    if not votes:
+        return None
+    # majority; ties broken by EN prefix for determinism
+    winner = max(votes.items(), key=lambda kv: (kv[1], kv[0]))[0]
+    return first[winner]
+
+
+def owners_batch(entries: Sequence[RFibEntry],
+                 buckets: np.ndarray) -> List[Optional[str]]:
+    """Vectorized ``majority_owner`` over an (N, T) bucket matrix.
+
+    Returns the winning ``en_prefix`` per row (None where no entry covers
+    any table's bucket).  Votes and tie-breaks match ``majority_owner``
+    exactly — first covering entry per (table, bucket) gets the vote,
+    winner is the (count, prefix) maximum — so a migration diff computed
+    here can never disagree with ``RFIB.lookup`` routing.
+    """
+    buckets = np.atleast_2d(np.asarray(buckets, np.int64))
+    n, t_n = buckets.shape
+    if n == 0 or not entries:
+        return [None] * n
+    # prefix columns ordered DESCENDING so argmax's first-max tie-break
+    # picks the lexicographically largest prefix, matching majority_owner
+    prefixes = sorted({e.en_prefix for e in entries}, reverse=True)
+    col = {p: i for i, p in enumerate(prefixes)}
+    votes = np.zeros((n, len(prefixes)), np.int64)
+    for t in range(t_n):
+        b = buckets[:, t]
+        taken = np.zeros(n, bool)  # first covering entry wins the table
+        for e in entries:
+            r = e.ranges.get(t)
+            if r is None:
+                continue
+            m = ~taken & (b >= r[0]) & (b <= r[1])
+            if m.any():
+                votes[m, col[e.en_prefix]] += 1
+                taken |= m
+    win = np.argmax(votes, axis=1)
+    has = votes.max(axis=1) > 0
+    return [prefixes[w] if h else None for w, h in zip(win, has)]
 
 
 def partition(

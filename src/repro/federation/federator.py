@@ -29,6 +29,7 @@ bucket *ownership* shifts away from a hot EN, not just individual tasks.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any, Dict, List, Optional, Tuple
 
 import networkx as nx
@@ -39,6 +40,7 @@ from repro.core.lsh import normalize
 from repro.core.namespace import TASK_KEYWORD, decode_task_hash, parse_task_name
 from repro.core.network import APP_FACE
 from repro.core.packets import Data, Interest
+from repro.core.rfib import owners_batch
 from repro.core.sim_clock import Future
 
 from .policy import LocalOnlyPolicy, OffloadContext, OffloadPolicy, get_policy
@@ -88,6 +90,11 @@ class Federator:
         dead_peer_detection: bool = True,   # telemetry-staleness detector
         suspect_after_s: Optional[float] = None,  # default 5x gossip interval
         dead_after_s: Optional[float] = None,     # default 12x gossip interval
+        migrate_batch: int = 256,           # entries per migration Interest
+        migrate_serialize_s_per_entry: float = 2e-6,  # per-entry source-side
+                                            # serialization charge (~dim*4 B
+                                            # at edge-link rate); batches ship
+                                            # back-to-back after it
     ):
         self.net = net
         self.policy: OffloadPolicy = get_policy(policy)
@@ -112,12 +119,26 @@ class Federator:
         self._remote_inflight: Dict[Tuple[Any, str], Future] = {}
         self._offloads_by_dst: Dict[Any, List[_Offload]] = {}
         self._rtt_cache: Dict[Tuple[Any, Any], float] = {}
+        self.migrate_batch = int(migrate_batch)
+        self.migrate_serialize_s_per_entry = float(migrate_serialize_s_per_entry)
+        self._migrate_seq = itertools.count()
+        self._autoscaler: Optional[Tuple[Any, Any, Any]] = None
         self.stats = {
             "decisions": 0, "offloads": 0, "remote_hits": 0,
             "remote_execs": 0, "remote_coalesced": 0, "rebalances": 0,
             "leave_redispatched": 0, "dropped_at_departed": 0,
             "offload_timeouts": 0, "timeout_redispatched": 0,
             "peers_dead": 0, "dead_redispatched": 0,
+            # store migration (DESIGN.md §Store migration)
+            "migrations": 0,           # migrate_out invocations
+            "migrated_entries": 0,     # entries shipped (incl. reroutes)
+            "migrate_batches": 0,      # migration Interests emitted
+            "migrate_acks": 0,         # ack Data received back at sources
+            "migrated_in": 0,          # entries landed at destinations
+            "migrations_rerouted": 0,  # batches re-homed off a departed dst
+            "stale_owner_hits": 0,     # remote hits at a no-longer-owner
+            # autoscaling (attach_autoscaler)
+            "scale_ups": 0, "scale_downs": 0,
         }
 
     # ----------------------------------------------------------- decisions
@@ -274,7 +295,8 @@ class Federator:
                 data.content, t,
                 reuse="en" if reuse is not None else None,
                 similarity=float(data.meta.get("similarity", 1.0)),
-                remote_en=data.meta.get("en", en_src.prefix))
+                remote_en=data.meta.get("en", en_src.prefix),
+                stale_owner=bool(data.meta.get("stale_owner", False)))
             out.try_set_result(comp, now=t)
 
         def send() -> None:
@@ -391,9 +413,15 @@ class Federator:
             en.stats["reused"] += 1
             en.stats["remote_hits"] += 1
             self.stats["remote_hits"] += 1
-            data = Data(name, content=result,
-                        meta={"reuse": "en", "similarity": sim,
-                              "en": en.prefix})
+            meta = {"reuse": "en", "similarity": sim, "en": en.prefix}
+            if self._serving_stale(node, en, svc_name, name):
+                # hit served off a no-longer-owner (reuse-affinity peek or a
+                # stale forwarding hint): state the rFIB stopped routing here
+                # still answered — the stranded-store symptom migration fixes
+                meta["stale_owner"] = True
+                en.stats["stale_owner_hits"] += 1
+                self.stats["stale_owner_hits"] += 1
+            data = Data(name, content=result, meta=meta)
             net._send_from_en(node, data, search_t)
             return
         en.stats["remote_execs"] += 1
@@ -409,6 +437,20 @@ class Federator:
             self._reply_remote(node, name, f.result)
 
         fut.add_done_callback(done)
+
+    def _serving_stale(self, node: Any, en, svc_name: str,
+                       fed_name: str) -> bool:
+        """True when ``en`` answers a federated task whose buckets the rFIB
+        now assigns to a *different* EN (post-rebalance stranded state)."""
+        task_name = fed_name[len(en.prefix):]
+        try:
+            _, kw, comp = parse_task_name(task_name)
+        except ValueError:
+            return False
+        if kw != TASK_KEYWORD:
+            return False
+        owner = self.net.forwarders[node].rfib.lookup(svc_name, comp)
+        return owner is not None and owner.en_prefix != en.prefix
 
     def _reply_remote(self, node: Any, name: str, comp: ExecCompletion) -> None:
         """Send the executing EN's result back as Data on the PIT path."""
@@ -445,10 +487,165 @@ class Federator:
                 0.0)
             fut.add_done_callback(lambda f, out=rec.out: f.propagate(out))
 
+    # ------------------------------------------------------------- EN join
+    def on_en_join(self, node: Any) -> None:
+        """A new EN joined (or a gracefully-departed one rejoined): readmit
+        it to the gossip views, seed its heartbeat so the failure detector
+        measures staleness from the join rather than epoch 0, and drop the
+        RTT cache (the topology gained links)."""
+        self.gossip.welcome(node)
+        self._rtt_cache.clear()
+        if self.health is not None:
+            self.health.revive(node)
+
+    # ---------------------------------------------------- store migration
+    def migrate_out(self, src: Any, dst: Any, svc: str,
+                    ids: List[int]) -> int:
+        """Hand ``src``'s reuse entries ``ids`` (store slots) to ``dst``.
+
+        Remove-at-send semantics: ``extract`` atomically exports and
+        tombstones the slots at the source, so a slot can never answer
+        locally *and* be re-admitted remotely.  A batch lost to a dst crash
+        is plain cache loss — re-execution regenerates the entries — never
+        duplicated or corrupted state.  Batches ride the NDN fabric as
+        Interests named ``/<dst-prefix>/<svc>/migrate/<seq>`` (plain FIB
+        forwarding on the dst prefix); the ack Data retraces the PIT path.
+        Returns the number of entries shipped."""
+        net = self.net
+        en_src = self._en_any(src)
+        store = en_src.stores[svc]
+        live = set(store.live_ids())
+        exp = store.extract([i for i in ids if i in live])
+        n = len(exp)
+        if n == 0:
+            return 0
+        self.stats["migrations"] += 1
+        en_src.stats["migrated_out"] += n
+        delay = 0.0
+        for s in range(0, n, self.migrate_batch):
+            e = min(s + self.migrate_batch, n)
+            # source-side serialization: batches leave back-to-back, each
+            # charged for packing its own entries before it hits the wire
+            delay += self.migrate_serialize_s_per_entry * (e - s)
+            self._send_migration(
+                src, dst, svc, exp.embeddings[s:e], exp.results[s:e],
+                exp.buckets[s:e], delay)
+        return n
+
+    def _send_migration(self, src: Any, dst: Any, svc: str,
+                        embs: np.ndarray, results: List[Any],
+                        buckets: np.ndarray, delay_s: float) -> None:
+        net = self.net
+        seq = next(self._migrate_seq)
+        name = f"{self._en_any(dst).prefix}/{svc}/migrate/{seq}"
+        self.stats["migrate_batches"] += 1
+        self.stats["migrated_entries"] += len(results)
+
+        def on_ack(data: Data, t: float) -> None:
+            self.stats["migrate_acks"] += 1
+
+        net._pending_cb.setdefault((src, name), []).append(on_ack)
+
+        def send() -> None:
+            if src in net._crashed:
+                return  # source died holding the export: the batch is lost
+            mig_int = Interest(name, app_params={
+                "migrate": True, "service": svc,
+                "embeddings": np.asarray(embs, np.float32),
+                "results": list(results),
+                "buckets": np.asarray(buckets),
+                "origin": self._en_any(src).prefix,
+            })
+            fwd = net.forwarders[src]
+            actions = fwd.on_interest(mig_int, APP_FACE, net.loop.now)
+            net._emit(src, actions, net.loop.now)
+
+        if delay_s > 0:
+            net.loop.call_later(delay_s, send)
+        else:
+            send()
+
+    def handle_migration(self, node: Any, interest: Interest) -> None:
+        """A migration batch reached its new bucket owner: admit the entries
+        with their original admission-time buckets (NOT re-hashed — the rFIB
+        routes by those buckets) and ack so the source's PIT trail clears."""
+        net = self.net
+        en = net.edge_nodes.get(node)
+        if en is None:
+            return  # raced a crash; the batch is lost (plain cache loss)
+        p = interest.app_params
+        svc = p["service"]
+        store = en.stores[svc]
+        embs = np.asarray(p["embeddings"], np.float32)
+        store.insert_batch(embs, list(p["results"]),
+                           buckets=np.asarray(p["buckets"]))
+        store.sync_device()  # absorb the page uploads off the query path
+        n = len(p["results"])
+        en.stats["migrated_in"] += n
+        self.stats["migrated_in"] += n
+        ack = Data(interest.name, content={"migrated": n},
+                   meta={"control": "migrate-ack", "cacheable": False,
+                         "en": en.prefix})
+        net._send_from_en(node, ack, 0.0)
+
+    def reroute_migration(self, node: Any, interest: Interest) -> None:
+        """A migration batch landed on a *departed* dst: re-home each entry
+        to its current owner under the live partition and ack the original
+        name so the source's PIT breadcrumbs clear."""
+        net = self.net
+        p = interest.app_params
+        svc = p["service"]
+        embs = np.asarray(p["embeddings"], np.float32)
+        results = list(p["results"])
+        buckets = np.atleast_2d(np.asarray(p["buckets"]))
+        self.stats["migrations_rerouted"] += 1
+        ack = Data(interest.name, content={"migrated": 0, "rerouted": True},
+                   meta={"control": "migrate-ack", "cacheable": False})
+        net._send_from_en(node, ack, 0.0)
+        entries = net.forwarders[node].rfib.entries(svc)
+        owners = owners_batch(entries, buckets)
+        prefix_node = {net.edge_nodes[n].prefix: n for n in net.en_nodes}
+        groups: Dict[str, List[int]] = {}
+        for i, o in enumerate(owners):
+            if o is not None and o in prefix_node:
+                groups.setdefault(o, []).append(i)
+        for o in sorted(groups):
+            idxs = groups[o]
+            self.stats["migrated_entries"] += len(idxs)
+            self._send_migration(
+                node, prefix_node[o], svc, embs[idxs],
+                [results[i] for i in idxs], buckets[idxs], 0.0)
+
+    # --------------------------------------------------------- autoscaling
+    def attach_autoscaler(self, policy, scale_up, scale_down) -> None:
+        """Wire an ``AutoscalePolicy``: evaluated once per gossip round on
+        live backend load snapshots.  ``scale_up()`` / ``scale_down()``
+        perform the membership change itself (benchmarks bind them to
+        ``net.add_en`` / ``net.remove_en``), so the policy stays a pure
+        sizing decision."""
+        self._autoscaler = (policy, scale_up, scale_down)
+
+    def _check_autoscale(self) -> None:
+        policy, up, down = self._autoscaler
+        net = self.net
+        now = net.loop.now
+        n = len(net.en_nodes)
+        snaps = {node: net.backend.load_snapshot(node, now)
+                 for node in net.en_nodes}
+        desired = policy.desired(now, snaps, n)
+        if desired > n:
+            self.stats["scale_ups"] += 1
+            up()
+        elif desired < n:
+            self.stats["scale_downs"] += 1
+            down()
+
     # ----------------------------------------------------------- rebalance
     def _on_gossip_round(self) -> None:
         if self.health is not None:
             self.health.check()  # live ENs just published: age ~0 for them
+        if self._autoscaler is not None:
+            self._check_autoscale()
         if not self.rebalance_enabled:
             return
         self._rounds_since_check += 1

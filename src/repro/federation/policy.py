@@ -148,6 +148,63 @@ class ReuseAffinityPolicy(OffloadPolicy):
         return best
 
 
+class AutoscalePolicy:
+    """Fleet-sizing decision from gossiped load telemetry (NOT an
+    ``OffloadPolicy`` — it sizes the fleet, it does not place tasks).
+
+    Evaluated once per gossip round (``Federator.attach_autoscaler``) on the
+    live per-EN ``LoadSnapshot``s.  The signal is the fleet-mean expected
+    wait: above ``high_wait_s`` for ``persistence`` consecutive rounds the
+    policy asks for one more EN; below ``low_wait_s`` equally persistently,
+    one fewer.  Every decision arms a ``cooldown_rounds`` freeze so the
+    membership change — re-partition, store migration, engine spin-up —
+    settles before the next verdict (hysteresis against flapping).  With
+    bucket-granular store migration wired into ``add_en``/``remove_en``,
+    both directions preserve the warm reuse state, which is what lets p99
+    and reuse-hit stay pinned through scaling (BENCH_migration.json)."""
+
+    def __init__(self, high_wait_s: float = 0.25, low_wait_s: float = 0.02,
+                 min_ens: int = 2, max_ens: int = 16, persistence: int = 3,
+                 cooldown_rounds: int = 10):
+        self.high_wait_s = float(high_wait_s)
+        self.low_wait_s = float(low_wait_s)
+        self.min_ens = int(min_ens)
+        self.max_ens = int(max_ens)
+        self.persistence = int(persistence)
+        self.cooldown_rounds = int(cooldown_rounds)
+        self._hot = 0
+        self._cold = 0
+        self._cooldown = 0
+
+    def desired(self, now: float, snaps: Dict[Any, LoadSnapshot],
+                n: int) -> int:
+        """Target fleet size given the current snapshots; ``n`` = live ENs."""
+        if self._cooldown > 0:
+            self._cooldown -= 1
+            return n
+        if not snaps:
+            return n
+        waits = [s.wait_s(now) for s in snaps.values()]
+        mean_wait = sum(waits) / len(waits)
+        if mean_wait > self.high_wait_s:
+            self._hot += 1
+            self._cold = 0
+            if self._hot >= self.persistence and n < self.max_ens:
+                self._hot = 0
+                self._cooldown = self.cooldown_rounds
+                return n + 1
+        elif mean_wait < self.low_wait_s:
+            self._cold += 1
+            self._hot = 0
+            if self._cold >= self.persistence and n > self.min_ens:
+                self._cold = 0
+                self._cooldown = self.cooldown_rounds
+                return n - 1
+        else:
+            self._hot = self._cold = 0
+        return n
+
+
 _POLICIES = {
     LocalOnlyPolicy.name: LocalOnlyPolicy,
     LeastLoadedPolicy.name: LeastLoadedPolicy,

