@@ -31,6 +31,7 @@ BENCHES = (
     "federation",         # beyond-paper: cross-EN offload policy sweep
     "fault_recovery",     # beyond-paper: fault injection + recovery under loss
     "migration",          # beyond-paper: store migration under fleet churn
+    "sanitizer_overhead",  # armed vs disarmed invariant-sanitizer cost
     "roofline",           # §Roofline (reads dry-run artifacts)
 )
 

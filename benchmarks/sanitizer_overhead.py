@@ -1,0 +1,151 @@
+"""Sanitizer-overhead benchmark (ISSUE 9): armed vs disarmed sim cost.
+
+The runtime sanitizer (``RESERVOIR_SANITIZE=1``, DESIGN.md §Static analysis
+& sanitizers) arms invariant checks on the event-loop dispatch path, the
+reuse-store sync/table mutators, and the migration ledger.  For the armed
+mode to be usable in CI (the sanitized tier-1 job) it must stay cheap; for
+the zero-fault bit-for-bit parity goldens to stay meaningful, the DISARMED
+mode must cost nothing (a ``None``/bool test per hook).
+
+Two interleaved best-of arms over an identical seeded workload (same
+topology, same task stream, same virtual-time schedule):
+
+* **off** — plain run, sanitizer disarmed (the production default);
+* **on**  — same run with ``RESERVOIR_SANITIZE=1`` at network build time,
+  arming the EventLoop context tracking, the store audits, and the PIT /
+  migration idle audits.
+
+Reported: wall us/task per arm and the armed/disarmed ratio.  Acceptance
+(asserted in every mode, including ``--smoke``): armed costs < 10% wall
+overhead on the smoke path, and both arms produce identical simulation
+results (completion count, reuse fraction, virtual end time) — the
+sanitizer observes, never perturbs.
+
+Standalone: ``python -m benchmarks.sanitizer_overhead [--smoke] [--json P]``
+(CI runs ``--smoke``); also registered in ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import List
+
+import networkx as nx
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import LSHParams, ReservoirNetwork
+from repro.core.edge_node import Service
+from repro.core.lsh import normalize
+
+DIM = 32
+N_ENS = 3
+N_USERS = 2
+THRESHOLD = 0.9
+LOAD_HZ = 50.0
+OVERHEAD_BUDGET = 0.10  # armed mode must cost < 10% on the smoke path
+
+
+def _stream(n: int, seed: int = 7) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    base = normalize(rng.standard_normal((24, DIM)).astype(np.float32))
+    picks = rng.integers(0, 24, n)
+    return normalize(base[picks] + 0.02 * rng.standard_normal(
+        (n, DIM)).astype(np.float32))
+
+
+def _run_once(n_tasks: int, sanitize: bool, seed: int = 0):
+    """One seeded run -> (wall seconds, result signature)."""
+    params = LSHParams(dim=DIM, num_tables=3, num_probes=6, seed=11)
+    g = nx.Graph()
+    ens = [f"en{i}" for i in range(N_ENS)]
+    for en in ens:
+        g.add_edge("core", en, delay=0.002)
+    env_key = "RESERVOIR_SANITIZE"
+    prev = os.environ.get(env_key)
+    os.environ[env_key] = "1" if sanitize else "0"
+    try:
+        net = ReservoirNetwork(g, ens, params, seed=seed)
+    finally:
+        if prev is None:
+            os.environ.pop(env_key, None)
+        else:
+            os.environ[env_key] = prev
+    assert (net.loop.sanitizer is not None) == sanitize
+    net.register_service(Service(
+        "/svc", execute=lambda x: round(float(np.sum(x)), 5),
+        exec_time_s=(0.010, 0.015), input_dim=DIM))
+    for u in range(N_USERS):
+        net.add_user(f"u{u}", "core")
+    X = _stream(n_tasks)
+    rng = np.random.default_rng(seed + 2)
+    arrivals = np.cumsum(rng.exponential(1.0 / LOAD_HZ, n_tasks))
+    t0 = time.perf_counter()
+    for i, (t, x) in enumerate(zip(arrivals, X)):
+        net.submit_task(f"u{i % N_USERS}", "svc", x, THRESHOLD,
+                        at_time=float(t))
+    net.run()
+    wall = time.perf_counter() - t0
+    m = net.metrics
+    sig = (len(m.completed()), round(m.reuse_fraction(), 9),
+           round(net.loop.now, 9))
+    return wall, sig
+
+
+def run(smoke: bool = True) -> list:
+    """Interleaved best-of arms (same discipline as PR 3's methodology):
+    alternating off/on repetitions so machine noise hits both arms alike."""
+    n_tasks = 200 if smoke else 600
+    reps = 3 if smoke else 5
+    best = {"off": float("inf"), "on": float("inf")}
+    sigs = {}
+    for _ in range(reps):
+        for arm, sanitize in (("off", False), ("on", True)):
+            wall, sig = _run_once(n_tasks, sanitize)
+            best[arm] = min(best[arm], wall)
+            sigs.setdefault(arm, sig)
+            if sigs[arm] != sig:
+                raise AssertionError(
+                    f"nondeterministic arm {arm}: {sigs[arm]} vs {sig}")
+    if sigs["off"] != sigs["on"]:
+        raise AssertionError(
+            "sanitizer perturbed the simulation: "
+            f"off={sigs['off']} on={sigs['on']}")
+    ratio = best["on"] / best["off"]
+    overhead_pct = (ratio - 1.0) * 100
+    assert ratio < 1.0 + OVERHEAD_BUDGET, (
+        f"armed sanitizer costs {overhead_pct:.1f}% "
+        f"(budget {OVERHEAD_BUDGET * 100:.0f}%)")
+    us = {arm: best[arm] / n_tasks * 1e6 for arm in best}
+    rows: List[Row] = [
+        ("sanitizer_overhead/off", us["off"],
+         f"tasks={n_tasks} completed={sigs['off'][0]}"),
+        ("sanitizer_overhead/on", us["on"],
+         f"ratio={ratio:.3f} overhead={overhead_pct:+.1f}% "
+         f"budget=<{OVERHEAD_BUDGET * 100:.0f}%"),
+    ]
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small task count (CI)")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f'{name},{us:.2f},"{derived}"')
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "us_per_call": u, "derived": d}
+                       for n, u, d in rows], f, indent=1)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

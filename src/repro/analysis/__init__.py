@@ -1,0 +1,24 @@
+"""Static analysis + runtime sanitizers for the Reservoir simulator.
+
+Two halves, one contract (DESIGN.md §Static analysis & sanitizers):
+
+* ``repro.analysis.lint`` — an AST-based linter (stdlib ``ast`` only) with
+  repo-specific determinism (D-class) and JAX (J-class) rules.  Run as
+  ``python -m repro.analysis.lint src/``.  Every correctness guarantee the
+  repo sells (cross-process goldens, 200-seed parity harnesses, migration
+  conservation) rests on invariants like "never seed from process-salted
+  ``hash()``" and "never read the wall clock on the virtual timeline"; the
+  linter enforces them mechanically instead of by painful debugging.
+
+* ``repro.analysis.sanitizer`` — cheap runtime invariant checks armed by
+  ``RESERVOIR_SANITIZE=1`` (or ``EventLoop(sanitize=True)``) at the seams
+  the linter cannot see: Future double-resolution, timers scheduled in the
+  past, PIT entries leaked past drain-to-idle, dirty-page conservation and
+  host/device mirror coherence in the reuse store, and id conservation
+  across store migration.  Failures raise a structured ``SanitizerError``
+  carrying provenance (which callback scheduled the event, at what virtual
+  time).  Disarmed, every hook is a ``None`` check on the hot path.
+"""
+from .sanitizer import SanitizerError, env_enabled  # noqa: F401
+
+__all__ = ["SanitizerError", "env_enabled"]

@@ -193,7 +193,9 @@ class LSH:
             self.planes = jnp.asarray(planes / np.linalg.norm(planes, axis=-1, keepdims=True))
         else:
             raise ValueError(f"unknown LSH family {params.family!r}")
+        # lint: disable=J001(built once per LSH instance in __init__, cached)
         self._hash_jit = jax.jit(self._hash_impl)
+        # lint: disable=J001(built once per LSH instance in __init__, cached)
         self._probe_jit = jax.jit(self._probe_impl)
 
     # ------------------------------------------------------------------ hash

@@ -292,7 +292,10 @@ class ReservoirNetwork:
         self._cs_capacity = cs_capacity
         self._en_store_capacity = en_store_capacity
         self._rng = random.Random(seed)
-        self.loop = EventLoop()
+        self.loop = EventLoop()  # RESERVOIR_SANITIZE arms invariant checks
+        self._san = self.loop.sanitizer
+        if self._san is not None:
+            self._san.add_idle_check(self._audit_pit_drained)
         self.metrics = Metrics()
         self._task_ids = itertools.count()
         self.services: Dict[str, Service] = {}
@@ -661,6 +664,22 @@ class ReservoirNetwork:
             return 1.0
         return self.chaos.exec_factor(node, self._now)
 
+    def _audit_pit_drained(self) -> None:
+        """Sanitizer idle check: a PIT entry still pending once the loop
+        drains to idle is a black-holed Interest — nothing left on the heap
+        can ever satisfy it (exactly the PR 6 stale-entry bug).  Names the
+        chaos layer dropped, retransmission gave up on, or that died at a
+        crashed node are excused via ``Sanitizer.note_loss``."""
+        san = self._san
+        for node, fwd in self.forwarders.items():
+            for name in sorted(fwd.pit._table):
+                if not san.is_excused(name):
+                    san.fail("pit-leak",
+                             f"PIT entry {name!r} at node {node!r} still "
+                             "pending after drain-to-idle: the Interest is "
+                             "black-holed (no event left can satisfy it)",
+                             node=node, name=name)
+
     def _pit_sweep_tick(self) -> bool:
         """Periodic PIT aging on the event loop (was dead code: ``expire``
         existed but nothing ticked it, so unsatisfied entries leaked).
@@ -818,6 +837,9 @@ class ReservoirNetwork:
                     # App-face deliveries above are node-internal and exempt.
                     extra = self.chaos.on_link(node, peer, act.packet, t_out)
                     if extra is None:
+                        if self._san is not None:
+                            self._san.note_loss(act.packet.name,
+                                                "chaos link drop")
                         continue
                     delay += extra
                 self.at(t_out + delay, self._deliver, peer, peer_face, act.packet)
@@ -843,6 +865,8 @@ class ReservoirNetwork:
             # silence is the failure signal); the co-located forwarder keeps
             # routing transit traffic, only app-face deliveries die here.
             self.fault_stats["crash_drops"] += 1
+            if self._san is not None:
+                self._san.note_loss(packet.name, f"crashed EN {node!r}")
             return
         if isinstance(packet, Interest):
             if node in self.edge_nodes:
@@ -1236,6 +1260,9 @@ class ReservoirNetwork:
             if en is not None:
                 en.stats["exec_failed"] += 1
             if node in self._crashed:
+                if self._san is not None:
+                    self._san.note_loss(
+                        name, f"execution died at crashed {node!r}")
                 return  # the EN app died with the work; silence
             self._send_nack(node, name, str(fut.exception))
             return
@@ -1301,6 +1328,8 @@ class ReservoirNetwork:
         state unwinds and the consumer re-expresses immediately instead of
         waiting out its retransmission timer."""
         if node in self._crashed:
+            if self._san is not None:
+                self._san.note_loss(name, f"NACK died at crashed {node!r}")
             return
         en = self.edge_nodes.get(node) or self._departed.get(node)
         self.fault_stats["nacks_sent"] += 1
@@ -1317,6 +1346,9 @@ class ReservoirNetwork:
             if node in self._crashed:
                 # the result died with the EN (in-flight at crash time)
                 self.fault_stats["crash_drops"] += 1
+                if self._san is not None:
+                    self._san.note_loss(data.name,
+                                        f"result died at crashed {node!r}")
                 return
             actions = fwd.on_data(data, APP_FACE, self._now)
             self._emit(node, actions, self._now)
@@ -1413,6 +1445,13 @@ class ReservoirNetwork:
             def give_up():
                 rec.failed = True
                 self.fault_stats["retx_give_ups"] += 1
+                if self._san is not None:
+                    # the abandoned exchange may leave its task / fetch name
+                    # pending in PITs forever; that is the designed outcome
+                    self._san.note_loss(name, "consumer retx give-up")
+                    if state["fetch"] is not None:
+                        self._san.note_loss(state["fetch"],
+                                            "consumer retx give-up")
 
             def retransmit():
                 """Re-express the original task Interest (fresh nonce, retx

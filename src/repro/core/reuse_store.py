@@ -53,6 +53,8 @@ from typing import Any, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.analysis import sanitizer as _sanitize
+
 from .lsh import LSH, LSHParams, get_lsh, normalize
 from .similarity import get_similarity
 
@@ -83,7 +85,7 @@ def _page_updater():
         import jax
 
         @functools.partial(jax.jit, donate_argnums=(0,))
-        def _upd(buf, page, p):
+        def _upd(buf, page, p):  # lint: disable=J001(built once, module-global cache)
             return jax.lax.dynamic_update_slice(buf, page[None], (p, 0, 0))
 
         _PAGE_UPDATER = _upd
@@ -99,7 +101,7 @@ def _table_updater():
         import jax
 
         @functools.partial(jax.jit, donate_argnums=(0,))
-        def _upd(buf, slab, start):
+        def _upd(buf, slab, start):  # lint: disable=J001(built once, module-global cache)
             return jax.lax.dynamic_update_slice(buf, slab, (start, 0))
 
         _TABLE_UPDATER = _upd
@@ -203,6 +205,9 @@ class ReuseStore:
         self.inserts = 0
         self.queries = 0
         self.candidate_counts: List[int] = []
+        # RESERVOIR_SANITIZE arms post-mutation invariant audits; disarmed,
+        # every hook below is a single bool test on the hot path
+        self.sanitize = _sanitize.env_enabled()
 
     def __len__(self) -> int:
         return len(self._lru)
@@ -310,6 +315,8 @@ class ReuseStore:
                     jnp.int32(start))
             self._tdirty.clear()
             pages = len(uploaded)
+            if self.sanitize:
+                self._audit_table_sync(uploaded)
         else:
             pages = 0
         self.last_table_sync_pages = pages
@@ -353,7 +360,93 @@ class ReuseStore:
         self.last_sync_pages = len(uploaded)
         self.sync_pages_total += len(uploaded)
         self.sync_bytes_total += len(uploaded) * self.page_size * self.dim * 4
+        if self.sanitize:
+            self._audit_sync(uploaded)
         return len(uploaded)
+
+    # ------------------------------------------------------ sanitizer audits
+    def _san_fail(self, check: str, message: str, **details: Any) -> None:
+        san = _sanitize.current()
+        raise _sanitize.SanitizerError(
+            check, message, san.provenance() if san is not None else "",
+            **details)
+
+    def _audit_sync(self, uploaded: Sequence[int]) -> None:
+        """Post-``_sync_device`` audit (armed only): the dirty set must be
+        fully drained and every uploaded device page must match its host
+        page bit-for-bit (O(uploaded), not O(store))."""
+        if self._dirty:
+            self._san_fail(
+                "dirty-page-conservation",
+                f"sync_device left {len(self._dirty)} page(s) dirty "
+                f"({sorted(self._dirty)[:8]}...): uploads were dropped",
+                dirty=sorted(self._dirty))
+        for p in uploaded:
+            dev = np.asarray(self._emb_dev[p])
+            if not np.array_equal(dev, self._pages[p]):
+                bad = int(np.flatnonzero(
+                    (dev != self._pages[p]).any(axis=-1))[0])
+                self._san_fail(
+                    "mirror-divergence",
+                    f"device page {p} diverges from host after upload "
+                    f"(first bad row {bad}): the store would answer "
+                    "queries from stale embeddings", page=p, row=bad)
+
+    def _audit_table_sync(self, uploaded: Sequence[int]) -> None:
+        """Post-``_sync_tables`` audit (armed only): uploaded slot-table
+        slabs must match the host tables bit-for-bit."""
+        if self._tdirty:
+            self._san_fail(
+                "table-dirty-conservation",
+                f"_sync_tables left {len(self._tdirty)} slab(s) dirty",
+                tdirty=sorted(self._tdirty))
+        flat = self._slots.reshape(self._table_rows, self.bucket_cap)
+        rows = self._table_slab_rows
+        for p in uploaded:
+            start = min(p * rows, max(self._table_rows - rows, 0))
+            dev = np.asarray(self._slots_dev[start:start + rows])
+            if not np.array_equal(dev, flat[start:start + rows]):
+                self._san_fail(
+                    "table-mirror-divergence",
+                    f"device slot-table slab {p} diverges from host after "
+                    "upload: the fused query would gather wrong slots",
+                    slab=p)
+
+    def _audit_bucket_rows(self, pairs) -> None:
+        """Trailing-(-1) validity of touched bucket rows (armed only): each
+        row must be ``fill`` valid slot ids then -1 padding — the fused
+        kernel reads validity from the slot values alone, so a hole or a
+        stale id past ``fill`` silently corrupts every gather."""
+        for t, b in pairs:
+            row = self._slots[t, b]
+            f = int(self._fill[t, b])
+            if (row[:f] < 0).any() or (f < row.size and
+                                       (row[f:] != -1).any()):
+                self._san_fail(
+                    "slot-table-trailing-invalid",
+                    f"bucket row (table={t}, bucket={b}) violates the "
+                    f"trailing-(-1) invariant: fill={f}, row={row.tolist()}",
+                    table=int(t), bucket=int(b), fill=f)
+
+    def audit_mirror(self) -> None:
+        """Deep coherence audit of *every* device-resident page and table
+        slab against host truth (O(store) — tests and post-migration
+        checks, not the hot path).  Clean mirrors with pending dirty pages
+        are fine (the dirt is by definition not uploaded yet)."""
+        if self._emb_dev is not None:
+            clean = [p for p in range(len(self._pages))
+                     if p not in self._dirty]
+            held_dirty, self._dirty = self._dirty, set()
+            try:
+                self._audit_sync(clean)
+            finally:
+                self._dirty = held_dirty
+        if self._slots_dev is not None and not self._tdirty:
+            self._audit_table_sync(
+                range(-(-self._table_rows // self._table_slab_rows)))
+        self._audit_bucket_rows(
+            (t, b) for t in range(self.params.num_tables)
+            for b in range(self.params.num_buckets))
 
     # ---------------------------------------------------------------- tables
     def _tslab(self, t: int, b: int) -> int:
@@ -374,6 +467,10 @@ class ReuseStore:
                 self._slots[t, b, c] = idx
                 self._cursor[t, b] = (c + 1) % cap
                 self.overflows += 1
+        if self.sanitize:
+            self._audit_bucket_rows(
+                (t, int(buckets[t]))
+                for t in range(self.params.num_tables))
 
     def _table_remove(self, idx: int, buckets: np.ndarray) -> None:
         """Remove idx from its buckets (swap-with-last keeps slots compact)."""
@@ -388,6 +485,10 @@ class ReuseStore:
                 row[f - 1] = -1
                 self._fill[t, b] = f - 1
                 self._tdirty.add(self._tslab(t, b))
+        if self.sanitize:
+            self._audit_bucket_rows(
+                (t, int(buckets[t]))
+                for t in range(self.params.num_tables))
 
     def _candidate_matrix(self, probes: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """(B, T, P) probe buckets -> ((B, C) slot ids, (B,) counts).
@@ -510,6 +611,7 @@ class ReuseStore:
         cap = self.bucket_cap
         n = ids.shape[0]
         rank_base = np.arange(n, dtype=np.int64)
+        touched = [] if self.sanitize else None
         for t in range(self.params.num_tables):
             order = np.argsort(buckets[:, t], kind="stable")
             bs = buckets[order, t]
@@ -534,6 +636,10 @@ class ReuseStore:
             self._tdirty.update(
                 ((t * self._slots.shape[1] + uniq)
                  // self._table_slab_rows).tolist())
+            if touched is not None:
+                touched.extend((t, int(b)) for b in uniq)
+        if touched is not None:
+            self._audit_bucket_rows(touched)
 
     # ----------------------------------------------------------------- query
     def candidates(self, embedding: np.ndarray) -> List[int]:

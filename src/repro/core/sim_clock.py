@@ -25,6 +25,8 @@ import heapq
 import itertools
 from typing import Any, Callable, List, Optional, Tuple
 
+from repro.analysis import sanitizer as _sanitize
+
 
 class Timer:
     """Cancellable handle for one scheduled event."""
@@ -80,11 +82,24 @@ class RepeatingTimer:
 class EventLoop:
     """Deterministic virtual-clock event loop (min-heap by (t, seq))."""
 
-    def __init__(self, start: float = 0.0):
+    def __init__(self, start: float = 0.0,
+                 sanitize: Optional[bool] = None):
         self._now = float(start)
         self._events: List[Tuple[float, int, Timer, Callable, tuple]] = []
         self._seq = itertools.count()
         self.processed = 0
+        # sanitize=None defers to RESERVOIR_SANITIZE; the armed loop carries
+        # a Sanitizer, the disarmed one a None so every hook site below is a
+        # single attribute test on the hot path.
+        if sanitize is None:
+            sanitize = _sanitize.env_enabled()
+        self._san: Optional[_sanitize.Sanitizer] = (
+            _sanitize.Sanitizer(self) if sanitize else None)
+
+    @property
+    def sanitizer(self) -> Optional[_sanitize.Sanitizer]:
+        """The armed Sanitizer, or None when disarmed."""
+        return self._san
 
     @property
     def now(self) -> float:
@@ -95,6 +110,14 @@ class EventLoop:
 
     def at(self, t: float, fn: Callable, *args) -> Timer:
         """Schedule ``fn(*args)`` at virtual time ``t``; returns its Timer."""
+        san = self._san
+        if san is not None and t < self._now:
+            san.fail("timer-in-past",
+                     f"timer for {getattr(fn, '__qualname__', fn)!r} "
+                     f"scheduled at t={t:.6f} which is before now="
+                     f"{self._now:.6f}: it would run 'immediately' but "
+                     "stamped with an already-elapsed time",
+                     t=t, now=self._now)
         timer = Timer(t)
         heapq.heappush(self._events, (t, next(self._seq), timer, fn, args))
         return timer
@@ -118,17 +141,40 @@ class EventLoop:
         event lands exactly there (standard DES semantics), so arrivals
         injected after a partial drain happen *at* the horizon."""
         n = 0
-        while self._events and n < max_events:
-            t, _, timer, fn, args = self._events[0]
-            if t > until:
-                break
-            heapq.heappop(self._events)
-            if timer.cancelled:
-                continue
-            self._now = t
-            fn(*args)
-            n += 1
-            self.processed += 1
+        san = self._san
+        if san is None:  # zero-cost path: no per-event closure or context
+            while self._events and n < max_events:
+                t, _, timer, fn, args = self._events[0]
+                if t > until:
+                    break
+                heapq.heappop(self._events)
+                if timer.cancelled:
+                    continue
+                self._now = t
+                fn(*args)
+                n += 1
+                self.processed += 1
+        else:
+            while self._events and n < max_events:
+                t, _, timer, fn, args = self._events[0]
+                if t > until:
+                    break
+                heapq.heappop(self._events)
+                if timer.cancelled:
+                    continue
+                self._now = t
+                san.push_context(
+                    f"{getattr(fn, '__qualname__', fn)!r} @ t={t:.6f}")
+                try:
+                    fn(*args)
+                finally:
+                    san.pop_context()
+                n += 1
+                self.processed += 1
+            if not self._events and n < max_events:
+                # true drain-to-idle (not a horizon break): audit the
+                # subsystem invariants that only hold at quiescence
+                san.run_idle_checks()
         if until != float("inf") and n < max_events and self._now < until:
             self._now = until
         return self._now
@@ -153,7 +199,8 @@ class Future:
     ``propagate``/``then``, which route errors for them).
     """
 
-    __slots__ = ("_result", "_exception", "_done", "_callbacks", "resolved_at")
+    __slots__ = ("_result", "_exception", "_done", "_callbacks",
+                 "resolved_at", "_late_ok")
 
     def __init__(self):
         self._result: Any = None
@@ -161,6 +208,14 @@ class Future:
         self._done = False
         self._callbacks: List[Callable[["Future"], None]] = []
         self.resolved_at: Optional[float] = None
+        self._late_ok = False
+
+    def allow_late(self) -> None:
+        """Mark a *designed* resolve-after-rejection race (e.g. a slow
+        remote reply still allowed to lose against an offload-timeout
+        abort) so the sanitizer's resolve-after-exception check stays
+        quiet for this future."""
+        self._late_ok = True
 
     @property
     def done(self) -> bool:
@@ -186,6 +241,15 @@ class Future:
 
     def try_set_result(self, value: Any, now: Optional[float] = None) -> bool:
         if self._done:
+            if self._exception is not None and not self._late_ok:
+                san = _sanitize.current()
+                if san is not None:
+                    san.fail("future-resolve-after-exception",
+                             "try_set_result on a future already rejected "
+                             f"with {self._exception!r}: the value is "
+                             "silently dropped after waiters saw an error; "
+                             "mark designed races with allow_late()",
+                             exception=repr(self._exception))
             return False
         self._result = value
         self.resolved_at = now
@@ -193,6 +257,14 @@ class Future:
         return True
 
     def set_result(self, value: Any, now: Optional[float] = None) -> None:
+        if self._done:
+            san = _sanitize.current()
+            if san is not None:
+                san.fail("future-double-resolve",
+                         "set_result on an already-resolved future: two "
+                         "code paths both believe they own this result "
+                         "(racers must use try_set_result)",
+                         prior_exception=repr(self._exception))
         if not self.try_set_result(value, now):
             raise RuntimeError("Future already resolved")
 
@@ -208,6 +280,13 @@ class Future:
 
     def set_exception(self, exc: BaseException,
                       now: Optional[float] = None) -> None:
+        if self._done:
+            san = _sanitize.current()
+            if san is not None:
+                san.fail("future-double-resolve",
+                         "set_exception on an already-resolved future "
+                         "(racers must use try_set_exception)",
+                         exception=repr(exc))
         if not self.try_set_exception(exc, now):
             raise RuntimeError("Future already resolved")
 

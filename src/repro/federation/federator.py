@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import networkx as nx
@@ -48,6 +49,13 @@ from .telemetry import PeerHealth, TelemetryGossip
 
 # mid-range forwarder processing charge per hop for the RTT estimate
 _HOP_PROC_S = 86e-6
+
+
+def _batch_fingerprint(embs: np.ndarray) -> int:
+    """Content fingerprint of a migration batch for the sanitizer's
+    id-conservation ledger (crc32 over the canonical float32 bytes)."""
+    return zlib.crc32(np.ascontiguousarray(
+        np.asarray(embs, np.float32)).tobytes())
 
 
 @dataclasses.dataclass
@@ -337,6 +345,10 @@ class Federator:
         rec.timeout_timer = None
         if rec.out.done or rec.cancelled:
             return
+        # designed race: the pending Data callback stays registered, so a
+        # merely-slow remote reply may still try to resolve after the
+        # redispatch (or the src-gone abort) settled the future
+        rec.out.allow_late()
         self.stats["offload_timeouts"] += 1
         if self.health is not None:
             self.health.note_timeout(rec.dst)
@@ -540,6 +552,10 @@ class Federator:
         name = f"{self._en_any(dst).prefix}/{svc}/migrate/{seq}"
         self.stats["migrate_batches"] += 1
         self.stats["migrated_entries"] += len(results)
+        san = net.loop.sanitizer
+        if san is not None:
+            san.note_migration_out(name, len(results),
+                                   _batch_fingerprint(embs))
 
         def on_ack(data: Data, t: float) -> None:
             self.stats["migrate_acks"] += 1
@@ -548,6 +564,8 @@ class Federator:
 
         def send() -> None:
             if src in net._crashed:
+                if san is not None:
+                    san.note_migration_lost(name, "source crashed pre-send")
                 return  # source died holding the export: the batch is lost
             mig_int = Interest(name, app_params={
                 "migrate": True, "service": svc,
@@ -570,13 +588,20 @@ class Federator:
         with their original admission-time buckets (NOT re-hashed — the rFIB
         routes by those buckets) and ack so the source's PIT trail clears."""
         net = self.net
+        san = net.loop.sanitizer
         en = net.edge_nodes.get(node)
         if en is None:
+            if san is not None:
+                san.note_migration_lost(interest.name,
+                                        "destination crashed before admit")
             return  # raced a crash; the batch is lost (plain cache loss)
         p = interest.app_params
         svc = p["service"]
         store = en.stores[svc]
         embs = np.asarray(p["embeddings"], np.float32)
+        if san is not None:
+            san.note_migration_in(interest.name, len(p["results"]),
+                                  _batch_fingerprint(embs))
         store.insert_batch(embs, list(p["results"]),
                            buckets=np.asarray(p["buckets"]))
         store.sync_device()  # absorb the page uploads off the query path
@@ -599,6 +624,12 @@ class Federator:
         results = list(p["results"])
         buckets = np.atleast_2d(np.asarray(p["buckets"]))
         self.stats["migrations_rerouted"] += 1
+        san = net.loop.sanitizer
+        if san is not None:
+            # the original batch DID arrive (at the departed dst); the
+            # re-homed shipments below open fresh ledger entries
+            san.note_migration_in(interest.name, len(results),
+                                  _batch_fingerprint(embs))
         ack = Data(interest.name, content={"migrated": 0, "rerouted": True},
                    meta={"control": "migrate-ack", "cacheable": False})
         net._send_from_en(node, ack, 0.0)

@@ -115,6 +115,7 @@ def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
                                    compute_dtype=cfg.dtype)
             batch_specs = model.input_specs(shape)
             batch_shd = shl.batch_shardings(batch_specs, mesh)
+            # lint: disable=J001(one-shot AOT lowering per config, never re-called)
             jitted = jax.jit(step, in_shardings=(state_shd, batch_shd),
                              out_shardings=(state_shd, None),
                              donate_argnums=(0,))
@@ -129,6 +130,7 @@ def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
             def prefill_step(params, batch):
                 return model.prefill(params, batch, max_len)
 
+            # lint: disable=J001(one-shot AOT lowering per config, never re-called)
             jitted = jax.jit(prefill_step, in_shardings=(params_shd, batch_shd))
             lowered = jitted.lower(params_shapes, batch_specs)
         else:  # decode
@@ -143,6 +145,7 @@ def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool = False,
             def serve_step(params, tokens, cache, pos):
                 return model.decode_step(params, tokens, cache, pos)
 
+            # lint: disable=J001(one-shot AOT lowering per config, never re-called)
             jitted = jax.jit(
                 serve_step,
                 in_shardings=(params_shd, tok_shd["tokens"], cache_shd,

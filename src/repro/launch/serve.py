@@ -63,7 +63,7 @@ def main() -> None:
     max_len = args.seq_len + 8
 
     @jax.jit
-    def prefill(p, batch):
+    def prefill(p, batch):  # lint: disable=J001(built once per CLI process)
         logits, _ = model.prefill(p, batch, max_len)
         return logits
 

@@ -87,6 +87,7 @@ def main() -> None:
         else:
             params = model.init(jax.random.PRNGKey(0))
             state = {"params": params, "opt": adamw_init(params, ocfg)}
+        # lint: disable=J001(built once per CLI process before the step loop)
         jit_step = jax.jit(step_fn, donate_argnums=(0,))
 
         t0 = time.time()

@@ -314,8 +314,12 @@ class AsyncServingEngine:
         self._queued.clear()
         for task in list(self._inflight.values()):
             self.backup.cancel(task.key)
+            # designed race: an execution event already on the loop may
+            # still try to resolve these after the abort settles them
+            task.future.allow_late()
             task.future.try_set_exception(exc, now=now)
             for _, _, ffut in task.followers:
+                ffut.allow_late()
                 ffut.try_set_exception(exc, now=now)
         self._inflight.clear()
 

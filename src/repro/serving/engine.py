@@ -125,8 +125,10 @@ class ReplicaEngine:
 
     def execute_batch(self, reqs: List[ServeRequest]) -> Tuple[List[Any], float]:
         """Stage 4a: run the model on a miss group -> (results, wall seconds)."""
+        # lint: disable=D002(real model execution wall time, by design)
         t_exec = time.perf_counter()
         outs = self.execute_fn(reqs)
+        # lint: disable=D002(real model execution wall time, by design)
         return outs, time.perf_counter() - t_exec
 
     def commit_execution(self, service: str, embs: np.ndarray,
@@ -162,6 +164,7 @@ class ReplicaEngine:
         ``now`` sets the Content-Store clock (pass the virtual loop time
         when the replica is shared with an async engine so freshness
         decisions come from one clock); latency is always wall-measured."""
+        # lint: disable=D002(serve latency is wall-measured by design)
         t0 = time.perf_counter()
         t_cs = t0 if now is None else now
         emb = normalize(np.asarray(req.embedding, np.float32).reshape(-1))
@@ -172,6 +175,7 @@ class ReplicaEngine:
         content = self.cs_lookup(name, t_cs)
         if content is not None:
             return ServeResult(req.request_id, content, "cs", 1.0,
+                               # lint: disable=D002(wall latency, by design)
                                time.perf_counter() - t0, self.replica_id)
         # 2. PIT-style aggregation of identical in-flight names
         if name in self.inflight:
@@ -184,6 +188,7 @@ class ReplicaEngine:
         if idx is not None:
             self.admit_en_hit(name, result, t_cs)
             return ServeResult(req.request_id, result, "en", sim,
+                               # lint: disable=D002(wall latency, by design)
                                time.perf_counter() - t0, self.replica_id)
         # 4. execute from scratch
         self.inflight[name] = [req]
@@ -192,6 +197,7 @@ class ReplicaEngine:
                               exec_time, buckets=np.asarray(buckets)[None])
         self.inflight.pop(name, None)
         return ServeResult(req.request_id, outs[0], None, sim,
+                           # lint: disable=D002(wall latency, by design)
                            time.perf_counter() - t0, self.replica_id)
 
     def handle_batch(self, reqs: List[ServeRequest],
@@ -206,6 +212,7 @@ class ReplicaEngine:
         call per service and bulk-inserted.  ``now`` sets the Content-Store
         clock (see ``handle``); latency is always wall-measured.
         """
+        # lint: disable=D002(serve latency is wall-measured by design)
         t0 = time.perf_counter()
         t_cs = t0 if now is None else now
         if not reqs:
@@ -215,6 +222,7 @@ class ReplicaEngine:
 
         def _done(i: int, result: Any, reuse: Optional[str], sim: float):
             results[i] = ServeResult(reqs[i].request_id, result, reuse, sim,
+                                     # lint: disable=D002(wall latency, by design)
                                      time.perf_counter() - t0, self.replica_id)
 
         # --- CS hits + within-batch coalescing

@@ -1,0 +1,675 @@
+"""Reservoir-lint + runtime sanitizer coverage (DESIGN.md §Static analysis).
+
+Two halves, mirroring ``src/repro/analysis``:
+
+* linter fixtures — per rule (D001-D004, J001-J002): positive snippets that
+  must flag (>= 5 deliberate violations per rule class), negative snippets
+  that must stay clean, and waived cases (plus the W000/W001 waiver-ledger
+  rules);
+* sanitizer trips — each runtime invariant deliberately violated (double
+  resolve, past timer, PIT leak, mirror divergence, migration id loss, and
+  the table/trailing audits), asserting the structured ``SanitizerError``;
+  plus the sanitizer-OFF zero-cost guard that keeps the bit-for-bit parity
+  goldens honest.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.analysis import SanitizerError, env_enabled
+from repro.analysis.lint import RULES, Violation, lint_paths, lint_source
+from repro.core import LSHParams, ReuseStore, normalize
+from repro.core.sim_clock import EventLoop, Future
+
+P = LSHParams(dim=16, num_tables=2, num_probes=4, seed=3)
+
+
+def codes(violations, include_waived=False):
+    return [v.rule for v in violations if include_waived or not v.waived]
+
+
+# =========================================================== linter: D rules
+class TestD001Hash:
+    def test_builtin_hash_flags(self):
+        vs = lint_source("x = hash('abc')\n", "src/repro/core/mod.py")
+        assert codes(vs) == ["D001"]
+        assert vs[0].line == 1 and "crc32" in vs[0].message
+
+    def test_hash_of_object_flags(self):
+        vs = lint_source("def f(obj):\n    return hash(obj)\n",
+                         "src/repro/core/mod.py")
+        assert codes(vs) == ["D001"]
+
+    def test_hash_anywhere_in_src(self):
+        # D001 applies even in wall-clock-exempt packages
+        vs = lint_source("seed = hash(name) % 7\n",
+                         "src/repro/launch/mod.py")
+        assert codes(vs) == ["D001"]
+
+    def test_crc32_is_clean(self):
+        vs = lint_source(
+            "import zlib\nseed = zlib.crc32(str(n).encode()) % 9973\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == []
+
+    def test_method_named_hash_is_clean(self):
+        vs = lint_source("h = obj.hash(x)\n", "src/repro/core/mod.py")
+        assert codes(vs) == []
+
+    def test_waived_with_reason(self):
+        vs = lint_source(
+            "x = hash(k)  # lint: disable=D001(interning only, not seeding)\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == []
+        assert codes(vs, include_waived=True) == ["D001"]
+        assert vs[0].waive_reason == "interning only, not seeding"
+
+
+class TestD002WallClock:
+    def test_time_time_in_core(self):
+        vs = lint_source("import time\nt = time.time()\n",
+                         "src/repro/core/mod.py")
+        assert codes(vs) == ["D002"]
+
+    def test_perf_counter_in_federation(self):
+        vs = lint_source("import time\nt = time.perf_counter()\n",
+                         "src/repro/federation/mod.py")
+        assert codes(vs) == ["D002"]
+
+    def test_datetime_now_in_faults(self):
+        vs = lint_source(
+            "import datetime\nt = datetime.datetime.now()\n",
+            "src/repro/faults/mod.py")
+        assert codes(vs) == ["D002"]
+
+    def test_aliased_import_resolves(self):
+        # the canonicalizer must see through ``import time as clock``
+        vs = lint_source("import time as clock\nt = clock.monotonic()\n",
+                         "src/repro/serving/mod.py")
+        assert codes(vs) == ["D002"]
+
+    def test_from_import_resolves(self):
+        vs = lint_source("from time import time\nt = time()\n",
+                         "src/repro/core/mod.py")
+        assert codes(vs) == ["D002"]
+
+    def test_launch_and_benchmarks_exempt(self):
+        src = "import time\nt = time.time()\n"
+        assert codes(lint_source(src, "src/repro/launch/mod.py")) == []
+        assert codes(lint_source(src, "benchmarks/mod.py")) == []
+
+    def test_virtual_clock_is_clean(self):
+        vs = lint_source("t = loop.now\n", "src/repro/core/mod.py")
+        assert codes(vs) == []
+
+    def test_waiver_on_preceding_line(self):
+        vs = lint_source(
+            "import time\n"
+            "# lint: disable=D002(wall latency by design)\n"
+            "t = time.perf_counter()\n",
+            "src/repro/serving/mod.py")
+        assert codes(vs) == []
+        assert codes(vs, include_waived=True) == ["D002"]
+
+
+class TestD003Randomness:
+    def test_unseeded_random_instance(self):
+        vs = lint_source("import random\nr = random.Random()\n",
+                         "src/repro/core/mod.py")
+        assert codes(vs) == ["D003"]
+
+    def test_seeded_random_is_clean(self):
+        vs = lint_source("import random\nr = random.Random(17)\n",
+                         "src/repro/core/mod.py")
+        assert codes(vs) == []
+
+    def test_global_random_draw(self):
+        vs = lint_source("import random\nx = random.randint(0, 9)\n",
+                         "src/repro/core/mod.py")
+        assert codes(vs) == ["D003"]
+
+    def test_global_np_random_state(self):
+        vs = lint_source("import numpy as np\nnp.random.seed(0)\n",
+                         "src/repro/core/mod.py")
+        assert codes(vs) == ["D003"]
+
+    def test_global_np_random_draw(self):
+        vs = lint_source(
+            "import numpy as np\nx = np.random.standard_normal(4)\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == ["D003"]
+
+    def test_unseeded_default_rng(self):
+        vs = lint_source(
+            "import numpy as np\nrng = np.random.default_rng()\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == ["D003"]
+
+    def test_seeded_default_rng_is_clean(self):
+        vs = lint_source(
+            "import numpy as np\nrng = np.random.default_rng(42)\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == []
+
+    def test_system_random_flags(self):
+        vs = lint_source("import random\nr = random.SystemRandom()\n",
+                         "src/repro/core/mod.py")
+        assert codes(vs) == ["D003"]
+
+
+class TestD004SetIteration:
+    def test_for_over_set_literal(self):
+        vs = lint_source("for x in {1, 2, 3}:\n    pass\n",
+                         "src/repro/core/mod.py")
+        assert codes(vs) == ["D004"]
+
+    def test_for_over_set_call(self):
+        vs = lint_source("s = set(items)\nfor x in s:\n    emit(x)\n",
+                         "src/repro/core/mod.py")
+        assert codes(vs) == ["D004"]
+
+    def test_list_of_set(self):
+        vs = lint_source("s = set(a)\nout = list(s)\n",
+                         "src/repro/core/mod.py")
+        assert codes(vs) == ["D004"]
+
+    def test_comprehension_over_set_attr(self):
+        vs = lint_source(
+            "class C:\n"
+            "    def __init__(self):\n"
+            "        self._dirty = set()\n"
+            "    def drain(self):\n"
+            "        return [p for p in self._dirty]\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == ["D004"]
+
+    def test_join_over_set(self):
+        vs = lint_source("s = {'a', 'b'}\nout = ','.join(s)\n",
+                         "src/repro/core/mod.py")
+        assert codes(vs) == ["D004"]
+
+    def test_sorted_set_is_clean(self):
+        vs = lint_source("s = set(a)\nfor x in sorted(s):\n    emit(x)\n",
+                         "src/repro/core/mod.py")
+        assert codes(vs) == []
+
+    def test_reassigned_to_list_is_clean(self):
+        vs = lint_source(
+            "s = set(a)\ns = sorted(s)\nfor x in s:\n    emit(x)\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == []
+
+    def test_membership_test_is_clean(self):
+        vs = lint_source("s = set(a)\nok = x in s\n",
+                         "src/repro/core/mod.py")
+        assert codes(vs) == []
+
+
+# =========================================================== linter: J rules
+class TestJ001Retrace:
+    def test_jit_inside_function(self):
+        vs = lint_source(
+            "import jax\n"
+            "def f(x):\n"
+            "    g = jax.jit(lambda y: y + 1)\n"
+            "    return g(x)\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == ["J001"]
+
+    def test_jit_inside_loop(self):
+        vs = lint_source(
+            "import jax\n"
+            "fns = []\n"
+            "for i in range(4):\n"
+            "    fns.append(jax.jit(step))\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == ["J001"]
+
+    def test_pallas_call_inside_function(self):
+        vs = lint_source(
+            "from jax.experimental import pallas as pl\n"
+            "def f(x):\n"
+            "    return pl.pallas_call(kern, out_shape=s)(x)\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == ["J001"]
+
+    def test_decorated_def_inside_function(self):
+        vs = lint_source(
+            "import jax\n"
+            "def outer():\n"
+            "    @jax.jit\n"
+            "    def inner(x):\n"
+            "        return x\n"
+            "    return inner\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == ["J001"]
+
+    def test_partial_jit_inside_function(self):
+        vs = lint_source(
+            "import functools\nimport jax\n"
+            "def build():\n"
+            "    return functools.partial(jax.jit, donate_argnums=(0,))\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == ["J001"]
+
+    def test_module_scope_jit_is_clean(self):
+        vs = lint_source(
+            "import jax\n"
+            "step = jax.jit(lambda x: x * 2)\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    return x + 1\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == []
+
+    def test_pallas_call_inside_jitted_fn_is_clean(self):
+        # the standard kernel idiom: module-jitted wrapper builds the
+        # pallas_call at trace time (cached by the jit)
+        vs = lint_source(
+            "import jax\n"
+            "from jax.experimental import pallas as pl\n"
+            "@jax.jit\n"
+            "def fused(x):\n"
+            "    return pl.pallas_call(kern, out_shape=s)(x)\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == []
+
+    def test_waived_cached_builder(self):
+        vs = lint_source(
+            "import jax\n"
+            "def build():\n"
+            "    # lint: disable=J001(built once, cached in module global)\n"
+            "    return jax.jit(step)\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == []
+        assert codes(vs, include_waived=True) == ["J001"]
+
+
+class TestJ002HostSync:
+    def test_float_on_traced_value(self):
+        vs = lint_source(
+            "import jax\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    return float(x)\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == ["J002"]
+
+    def test_item_in_jit_scope(self):
+        vs = lint_source(
+            "import jax\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    return x.sum().item()\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == ["J002"]
+
+    def test_np_asarray_in_jit_scope(self):
+        vs = lint_source(
+            "import jax\nimport numpy as np\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    return np.asarray(x)\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == ["J002"]
+
+    def test_np_array_in_kernel_body(self):
+        # *_kernel naming convention marks Pallas kernel bodies
+        vs = lint_source(
+            "import numpy as np\n"
+            "def gather_kernel(x_ref, o_ref):\n"
+            "    o_ref[...] = np.array(x_ref[...])\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == ["J002"]
+
+    def test_int_on_traced_in_jit(self):
+        vs = lint_source(
+            "import jax\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    n = int(x.shape_dep)\n"
+            "    return n\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == ["J002"]
+
+    def test_float_outside_jit_is_clean(self):
+        vs = lint_source("def f(x):\n    return float(x)\n",
+                         "src/repro/core/mod.py")
+        assert codes(vs) == []
+
+    def test_float_of_constant_in_jit_is_clean(self):
+        vs = lint_source(
+            "import jax\n"
+            "@jax.jit\n"
+            "def f(x):\n"
+            "    return x * float(2)\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == []
+
+
+# ====================================================== linter: waiver ledger
+class TestWaiverLedger:
+    def test_bare_waiver_is_w000(self):
+        vs = lint_source("x = hash(k)  # lint: disable=D001\n",
+                         "src/repro/core/mod.py")
+        # the reason-less waiver does NOT suppress, and is itself flagged
+        assert sorted(codes(vs)) == ["D001", "W000"]
+
+    def test_unused_waiver_is_w001(self):
+        vs = lint_source("x = 1  # lint: disable=D001(stale reason)\n",
+                         "src/repro/core/mod.py")
+        assert codes(vs) == ["W001"]
+
+    def test_multi_code_waiver(self):
+        vs = lint_source(
+            "import time\n"
+            "# lint: disable=D002(bench), D001(interning)\n"
+            "x = hash(str(time.time()))\n",
+            "src/repro/core/mod.py")
+        assert codes(vs) == []
+        assert sorted(codes(vs, include_waived=True)) == ["D001", "D002"]
+
+    def test_string_literal_not_a_waiver(self):
+        vs = lint_source(
+            's = "lint: disable=D001(nope)"\nx = hash(s)\n',
+            "src/repro/core/mod.py")
+        assert codes(vs) == ["D001"]
+
+
+class TestLintDriver:
+    def test_repo_src_is_clean(self):
+        """Acceptance: the final tree lints clean (waivers justified)."""
+        vs = [v for v in lint_paths(["src"]) if not v.waived]
+        assert vs == [], "\n".join(v.format() for v in vs)
+
+    def test_every_waiver_in_src_has_reason(self):
+        waived = [v for v in lint_paths(["src"]) if v.waived]
+        assert waived, "expected justified waivers in the tree"
+        assert all(v.waive_reason for v in waived)
+
+    def test_rule_catalogue_severities(self):
+        assert RULES["D001"][0] == "error"
+        assert RULES["D004"][0] == "warning"
+        assert RULES["J002"][0] == "warning"
+
+    def test_syntax_error_reports_not_raises(self):
+        vs = lint_source("def broken(:\n", "src/repro/core/mod.py")
+        assert codes(vs) == ["W000"]
+
+
+# ============================================================ sanitizer trips
+class TestSanitizerTrips:
+    def test_future_double_resolve(self):
+        loop = EventLoop(sanitize=True)
+        fut = Future()
+
+        def bad():
+            fut.set_result("first")
+            fut.set_result("second")
+
+        loop.at(0.5, bad)
+        with pytest.raises(SanitizerError) as ei:
+            loop.run()
+        assert ei.value.check == "future-double-resolve"
+        assert "bad" in ei.value.provenance  # which callback, at what time
+        assert "t=0.5" in ei.value.provenance
+
+    def test_future_resolve_after_exception(self):
+        loop = EventLoop(sanitize=True)
+        fut = Future()
+
+        def bad():
+            fut.try_set_exception(RuntimeError("backend died"))
+            fut.try_set_result("late value silently dropped")
+
+        loop.at(1.0, bad)
+        with pytest.raises(SanitizerError) as ei:
+            loop.run()
+        assert ei.value.check == "future-resolve-after-exception"
+
+    def test_allow_late_quiets_designed_race(self):
+        loop = EventLoop(sanitize=True)
+        fut = Future()
+
+        def designed():
+            fut.allow_late()
+            fut.try_set_exception(RuntimeError("timeout abort"))
+            assert fut.try_set_result("slow remote reply") is False
+
+        loop.at(1.0, designed)
+        loop.run()  # no SanitizerError
+        assert fut.exception is not None
+
+    def test_timer_in_past(self):
+        loop = EventLoop(sanitize=True)
+        loop.run(until=5.0)
+        with pytest.raises(SanitizerError) as ei:
+            loop.at(1.0, lambda: None)
+        assert ei.value.check == "timer-in-past"
+        assert ei.value.details["t"] == 1.0
+
+    def test_pit_leak_on_black_holed_interest(self):
+        """A PIT entry nothing will ever satisfy must fail the idle audit
+        (the PR 6 stale-entry bug, mechanically caught)."""
+        loop = EventLoop(sanitize=True)
+        san = loop.sanitizer
+
+        class FakePit:
+            _table = {"/svc/task/DEAD": object()}
+
+        class FakeFwd:
+            pit = FakePit()
+
+        net_fwds = {"core": FakeFwd()}
+        san.add_idle_check(lambda: [
+            san.fail("pit-leak",
+                     f"PIT entry {n!r} at node {node!r} still pending "
+                     "after drain-to-idle")
+            for node, fwd in net_fwds.items()
+            for n in sorted(fwd.pit._table)
+            if not san.is_excused(n)])
+        loop.at(0.1, lambda: None)
+        with pytest.raises(SanitizerError) as ei:
+            loop.run()
+        assert ei.value.check == "pit-leak"
+
+    def test_pit_leak_end_to_end_with_real_network(self):
+        """Same invariant through the real wiring: plant a stale entry in a
+        live forwarder's PIT and drain to idle."""
+        import os
+
+        import networkx as nx
+
+        from repro.core import ReservoirNetwork
+
+        os.environ["RESERVOIR_SANITIZE"] = "1"
+        try:
+            g = nx.Graph()
+            g.add_edge("core", "en0")
+            net = ReservoirNetwork(
+                g, en_nodes=["en0"],
+                lsh_params=LSHParams(dim=8, num_tables=2, num_probes=2,
+                                     seed=1))
+        finally:
+            del os.environ["RESERVOIR_SANITIZE"]
+        assert net.loop.sanitizer is not None
+        from repro.core.packets import Interest
+        net.forwarders["core"].pit.admit(
+            Interest("/svc/task/STALE"), 3, 0.0)
+        net.at(net.loop.now + 0.01, lambda: None)
+        with pytest.raises(SanitizerError) as ei:
+            net.run()
+        assert ei.value.check == "pit-leak"
+        assert "STALE" in str(ei.value)
+
+    def test_excused_loss_passes_idle_audit(self):
+        loop = EventLoop(sanitize=True)
+        san = loop.sanitizer
+        table = {"/svc/task/LOST": object()}
+        san.add_idle_check(lambda: [
+            san.fail("pit-leak", f"leaked {n}")
+            for n in sorted(table) if not san.is_excused(n)])
+        san.note_loss("/svc/task/LOST", "chaos link drop")
+        loop.at(0.1, lambda: None)
+        loop.run()  # excused: no error
+
+    def test_mirror_divergence(self):
+        store = ReuseStore(P, capacity=64, page_size=8)
+        store.sanitize = True
+        for i in range(12):
+            store.insert(_vec(i), f"r{i}")
+        store.sync_device(ensure=True)  # clean + audited
+        # corrupt host truth behind the dirty set's back: the device page is
+        # now stale, which the deep audit must catch
+        store._pages[0][0, 0] += 1.0
+        with pytest.raises(SanitizerError) as ei:
+            store.audit_mirror()
+        assert ei.value.check == "mirror-divergence"
+        assert ei.value.details["page"] == 0
+
+    def test_dirty_page_conservation(self):
+        store = ReuseStore(P, capacity=64, page_size=8)
+        store.sanitize = True
+        store.insert(_vec(1), "r")
+        store.sync_device(ensure=True)
+        # a page marked dirty after sync must fail conservation if the
+        # audit sees it un-uploaded
+        store._dirty.add(0)
+        with pytest.raises(SanitizerError) as ei:
+            store._audit_sync([])
+        assert ei.value.check == "dirty-page-conservation"
+
+    def test_slot_table_trailing_invariant(self):
+        store = ReuseStore(P, capacity=64, page_size=8)
+        store.sanitize = True
+        idx = store.insert(_vec(1), "r")
+        # poke a stale id past fill: the fused kernel would gather it
+        b = int(store._buckets_of[idx][0])
+        f = int(store._fill[0, b])
+        store._slots[0, b, f] = 99
+        with pytest.raises(SanitizerError) as ei:
+            store._audit_bucket_rows([(0, b)])
+        assert ei.value.check == "slot-table-trailing-invalid"
+
+    def test_migration_id_loss(self):
+        loop = EventLoop(sanitize=True)
+        san = loop.sanitizer
+        san.note_migration_out("/en/e1/svc/migrate/0", 5, 0xABC)
+        loop.at(0.1, lambda: None)
+        with pytest.raises(SanitizerError) as ei:
+            loop.run()  # idle: sent but never delivered nor excused
+        assert ei.value.check == "migration-id-loss"
+
+    def test_migration_corruption_and_duplication(self):
+        loop = EventLoop(sanitize=True)
+        san = loop.sanitizer
+        name = "/en/e1/svc/migrate/1"
+        san.note_migration_out(name, 5, 0xABC)
+        with pytest.raises(SanitizerError) as ei:
+            san.note_migration_in(name, 4, 0xABC)  # an entry vanished
+        assert ei.value.check == "migration-id-conservation"
+
+        loop2 = EventLoop(sanitize=True)
+        san2 = loop2.sanitizer
+        san2.note_migration_out(name, 5, 0xABC)
+        san2.note_migration_in(name, 5, 0xABC)
+        with pytest.raises(SanitizerError) as ei:
+            san2.note_migration_in(name, 5, 0xABC)  # replayed batch
+        assert ei.value.check == "migration-duplicate-delivery"
+
+    def test_migration_excused_loss_settles(self):
+        loop = EventLoop(sanitize=True)
+        san = loop.sanitizer
+        name = "/en/e1/svc/migrate/2"
+        san.note_migration_out(name, 5, 0xABC)
+        san.note_migration_lost(name, "destination crashed before admit")
+        loop.at(0.1, lambda: None)
+        loop.run()  # excused cache loss: settles clean
+
+    def test_migration_end_to_end_conservation(self):
+        """Real migration through the fabric under the armed sanitizer:
+        ledger opens at _send_migration, closes at handle_migration."""
+        import os
+
+        import networkx as nx
+
+        from repro.core import ReservoirNetwork, Service
+
+        os.environ["RESERVOIR_SANITIZE"] = "1"
+        try:
+            g = nx.Graph()
+            g.add_edge("en0", "core", delay=0.001)
+            g.add_edge("en1", "core", delay=0.001)
+            net = ReservoirNetwork(
+                g, en_nodes=["en0", "en1"],
+                lsh_params=LSHParams(dim=8, num_tables=2, num_probes=2,
+                                     seed=1),
+                store_migration=True)
+        finally:
+            del os.environ["RESERVOIR_SANITIZE"]
+        net.register_service(Service("svc", lambda e: 0.0))
+        store = net.edge_nodes["en0"].stores["svc"]
+        for i in range(6):
+            store.insert(_vec(i, 8), f"r{i}")
+        fed = net._ensure_federator()
+        shipped = fed.migrate_out("en0", "en1", "svc",
+                                  store.live_ids()[:4])
+        assert shipped == 4
+        net.run()  # idle audit: every batch delivered -> settles clean
+        assert fed.stats["migrated_in"] == 4
+
+
+# ======================================================= sanitizer-off guard
+class TestZeroCostDisarmed:
+    def test_env_enabled_parsing(self, monkeypatch):
+        monkeypatch.delenv("RESERVOIR_SANITIZE", raising=False)
+        assert env_enabled() is False
+        monkeypatch.setenv("RESERVOIR_SANITIZE", "1")
+        assert env_enabled() is True
+        monkeypatch.setenv("RESERVOIR_SANITIZE", "0")
+        assert env_enabled() is False
+
+    def test_loop_disarmed_has_no_sanitizer(self):
+        assert EventLoop().sanitizer is None or env_enabled()
+
+    def test_sanitizer_off_zero_cost(self):
+        """Disarmed, the EventLoop dispatch path must take the no-sanitizer
+        branch: no context strings built, no closures allocated per event,
+        and the module-level sanitizer stack never grows — this is what
+        keeps the zero-fault bit-for-bit parity goldens green."""
+        from repro.analysis import sanitizer as san_mod
+
+        loop = EventLoop(sanitize=False)
+        depth_seen = []
+        loop.at(0.1, lambda: depth_seen.append(len(san_mod._STACK)))
+        loop.run()
+        assert depth_seen == [0]  # no sanitizer context pushed
+        # disarmed Future paths never consult the sanitizer stack
+        fut = Future()
+        assert fut.try_set_result(1) is True
+        assert fut.try_set_result(2) is False  # plain first-result-wins
+        with pytest.raises(RuntimeError):
+            fut.set_result(3)  # plain RuntimeError, not SanitizerError
+        # disarmed store: hook flag is off, audits never run
+        store = ReuseStore(P, capacity=16, page_size=8)
+        assert store.sanitize is False or env_enabled()
+
+    def test_disarmed_run_bit_identical(self):
+        """The armed/disarmed loops must schedule identically (same event
+        order, same clock) — sanitize only observes, never perturbs."""
+        def trace(sanitize):
+            loop = EventLoop(sanitize=sanitize)
+            order = []
+            loop.at(0.2, lambda: order.append(("b", loop.now)))
+            loop.at(0.1, lambda: order.append(("a", loop.now)))
+            loop.at(0.1, lambda: loop.call_later(
+                0.05, lambda: order.append(("c", loop.now))))
+            loop.run()
+            return order, loop.now, loop.processed
+
+        assert trace(False) == trace(True)
+
+
+def _vec(seed, d=16):
+    return normalize(np.random.default_rng(seed).standard_normal(d))

@@ -162,7 +162,10 @@ class TestStoreMigration:
         assert len(ids) == 5
         fed.migrate_out(src, dst, "svc", ids)
         # dst leaves before the batch's ~10 ms core traversal completes
-        net.at(0.004, net.remove_en, dst)
+        # (relative to now: _warm already advanced the virtual clock, and an
+        # absolute 0.004 would be a timer in the past — the sanitizer's
+        # timer-in-past check catches exactly that clock-rewind)
+        net.at(net.loop.now + 0.004, net.remove_en, dst)
         net.run()
         assert fed.stats["migrations_rerouted"] >= 1
         live_total = sum(_sizes(net).values())
