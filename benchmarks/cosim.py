@@ -98,8 +98,17 @@ def _run_one(backend_kind: str, load_hz: float, window_s: float,
         "reuse_pct": m.reuse_fraction() * 100,
         "p99_ms": float(np.percentile(cts, 99)) * 1e3,
         "makespan_s": makespan,
+        # per-phase latency decomposition, sourced from the ONE metrics
+        # registry instead of re-deriving from TaskRecord fields here
+        **net.registry.phase_summary(),
         **stats,
     }
+
+
+def _phases(r: dict) -> str:
+    """Registry-sourced phase decomposition for a bench row's detail."""
+    return ";".join(f"{p}_ms={r[p + '_ms']:.2f}"
+                    for p in ("forward", "search", "execute", "aggregate"))
 
 
 def run(smoke: bool = False) -> list:
@@ -118,7 +127,8 @@ def run(smoke: bool = False) -> list:
                 f"gap_instant={r['gap']:.2f}x;gap_all={r['gap_all']:.2f}x;"
                 f"reuse_pct={r['reuse_pct']:.1f};"
                 f"ct_reuse_ms={r['reuse_s'] * 1e3:.2f};"
-                f"p99_ms={r['p99_ms']:.1f};executed={r['executed']}"))
+                f"p99_ms={r['p99_ms']:.1f};executed={r['executed']};"
+                f"{_phases(r)}"))
             for nrep in replicas:
                 r = _run_one("engine", load, window, nrep, n_tasks)
                 if load >= 100:
@@ -132,7 +142,7 @@ def run(smoke: bool = False) -> list:
                     f"ct_reuse_ms={r['reuse_s'] * 1e3:.2f};"
                     f"p99_ms={r['p99_ms']:.1f};executed={r['executed']};"
                     f"aggregated={r['aggregated']};backups={r['backups']};"
-                    f"backup_wins={r['backup_wins']}"))
+                    f"backup_wins={r['backup_wins']};{_phases(r)}"))
     # NaN-safe: np.min propagates a NaN gap (a config with no instant reuse)
     # instead of skipping it like builtin min(), and `not (NaN >= 4)` FAILs.
     min_gap = float(np.min(gaps_under_load))

@@ -133,14 +133,20 @@ def _run_one(policy: str, load_hz: float, n_tasks: int, n_ens: int,
         "remote_hits": fs["remote_hits"],
         "remote_execs": fs["remote_execs"],
         "rebalances": fs["rebalances"],
+        # registry-sourced per-phase latency decomposition (one source of
+        # truth shared with launch/serve and benchmarks/cosim)
+        **net.registry.phase_summary(),
     }
 
 
 def _derived(r: dict) -> str:
+    phases = ";".join(f"{p}_ms={r[p + '_ms']:.2f}"
+                      for p in ("forward", "search", "execute", "aggregate"))
     return (f"p99_ms={r['p99_ms']:.1f};mean_ms={r['mean_ms']:.1f};"
             f"reuse_pct={r['reuse_pct']:.1f};gap={r['gap']:.2f}x;"
             f"hot_share={r['hot_share']:.2f};offloads={r['offloads']};"
-            f"remote_hits={r['remote_hits']};rebalances={r['rebalances']}")
+            f"remote_hits={r['remote_hits']};rebalances={r['rebalances']};"
+            f"{phases}")
 
 
 def run(smoke: bool = False) -> list:

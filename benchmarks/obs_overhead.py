@@ -1,0 +1,215 @@
+"""Observability-overhead benchmark (ISSUE 10): traced vs plain sim cost.
+
+The observability layer (``repro/obs``, DESIGN.md §Observability) arms
+per-task tracing + the hot-loop profiler on the event-loop dispatch path
+the same way the sanitizer does.  Two contracts are asserted here:
+
+* **disarmed is free AND bit-identical** — the plain run (tracer and
+  profiler both ``None``) must produce the same simulation results as a
+  fully armed run (completion count, reuse fraction, virtual end time):
+  the tracer observes the virtual timeline, never perturbs it;
+* **armed stays cheap** — ``RESERVOIR_TRACE=1 RESERVOIR_PROFILE=1`` must
+  cost < 10% wall overhead in the best interleaved off/on pair (identical
+  seeded workload), so tracing a real co-sim is routine, not a special
+  build.
+
+A third section exercises the armed path end-to-end on a federated co-sim
+with chaos faults: the exported document must be valid Chrome trace-event
+JSON (parsed back), carry zero unclosed spans, and the profiler report
+must rank the EventLoop callback sites.
+
+Standalone: ``python -m benchmarks.obs_overhead [--smoke] [--json P]``
+(CI runs ``--smoke``); also registered in ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import List
+
+import networkx as nx
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import LSHParams, ReservoirNetwork
+from repro.core.edge_node import Service
+from repro.core.lsh import normalize
+from repro.faults.chaos import ChaosController
+from repro.faults.plan import CrashEvent, FaultPlan, LinkFault
+
+DIM = 32
+N_ENS = 3
+N_USERS = 2
+THRESHOLD = 0.9
+LOAD_HZ = 50.0
+OVERHEAD_BUDGET = 0.10  # armed tracing+profiling must cost < 10%
+
+_ENV_KEYS = ("RESERVOIR_TRACE", "RESERVOIR_PROFILE")
+
+
+def _stream(n: int, seed: int = 7) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    base = normalize(rng.standard_normal((24, DIM)).astype(np.float32))
+    picks = rng.integers(0, 24, n)
+    return normalize(base[picks] + 0.02 * rng.standard_normal(
+        (n, DIM)).astype(np.float32))
+
+
+def _build(n_tasks: int, armed: bool, seed: int = 0,
+           offload_policy=None, chaos: bool = False) -> ReservoirNetwork:
+    params = LSHParams(dim=DIM, num_tables=3, num_probes=6, seed=11)
+    g = nx.Graph()
+    ens = [f"en{i}" for i in range(N_ENS)]
+    for en in ens:
+        g.add_edge("core", en, delay=0.002)
+    prev = {k: os.environ.get(k) for k in _ENV_KEYS}
+    for k in _ENV_KEYS:
+        os.environ[k] = "1" if armed else "0"
+    try:
+        net = ReservoirNetwork(
+            g, ens, params, seed=seed, offload_policy=offload_policy,
+            retx_timeout_s=0.25 if chaos else None,
+            pit_lifetime_s=2.0 if chaos else None)
+    finally:
+        for k, v in prev.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+    assert (net.loop.tracer is not None) == armed
+    assert (net.loop.profiler is not None) == armed
+    if chaos:
+        ChaosController(net, FaultPlan(
+            seed=3,
+            links=[LinkFault(loss=0.05)],
+            crashes=[CrashEvent(node=ens[-1], at=1.5)]))
+    net.register_service(Service(
+        "/svc", execute=lambda x: round(float(np.sum(x)), 5),
+        exec_time_s=(0.010, 0.015), input_dim=DIM))
+    for u in range(N_USERS):
+        net.add_user(f"u{u}", "core")
+    X = _stream(n_tasks)
+    rng = np.random.default_rng(seed + 2)
+    arrivals = np.cumsum(rng.exponential(1.0 / LOAD_HZ, n_tasks))
+    for i, (t, x) in enumerate(zip(arrivals, X)):
+        net.submit_task(f"u{i % N_USERS}", "svc", x, THRESHOLD,
+                        at_time=float(t))
+    return net
+
+
+def _run_once(n_tasks: int, armed: bool, seed: int = 0):
+    """One seeded run -> (wall seconds, result signature).
+
+    Times ``net.run()`` only: submission merely schedules closures (their
+    tracer work fires inside the loop and IS measured), while the submit
+    loop's numpy staging would just add noise to both arms."""
+    net = _build(n_tasks, armed, seed=seed)
+    t0 = time.perf_counter()
+    net.run()
+    wall = time.perf_counter() - t0
+    m = net.metrics
+    sig = (len(m.completed()), round(m.reuse_fraction(), 9),
+           round(net.loop.now, 9))
+    return wall, sig
+
+
+def _armed_cosim(n_tasks: int) -> List[Row]:
+    """Armed end-to-end: federated + chaos co-sim -> valid trace export
+    plus a profiler report ranking the EventLoop callback sites."""
+    net = _build(n_tasks, armed=True, offload_policy="least-loaded",
+                 chaos=True)
+    net.run()
+    tr, prof = net.loop.tracer, net.loop.profiler
+    doc = json.loads(json.dumps(tr.to_chrome()))  # round-trip: valid JSON
+    assert doc["traceEvents"], "armed run exported no events"
+    assert not tr.open_spans(), f"unclosed spans: {tr.open_spans()}"
+    task_spans = [e for e in doc["traceEvents"]
+                  if e.get("ph") == "X" and e["name"] == "task"]
+    assert task_spans, "no task spans in the export"
+    rows = prof.rows()
+    assert rows and rows[0]["wall_s"] >= rows[-1]["wall_s"], \
+        "profiler rows not ranked"
+    top = rows[0]
+    return [
+        ("obs_overhead/armed_cosim", top["wall_s"] * 1e6,
+         f"events={len(doc['traceEvents'])};task_spans={len(task_spans)};"
+         f"sites={len(rows)};top_site={top['site']};"
+         f"top_count={top['count']}"),
+    ]
+
+
+def run(smoke: bool = True) -> list:
+    """Interleaved off/on pairs, disarmed-vs-armed, one seeded workload.
+
+    Overhead estimator: per-pair on/off wall ratios (each pair runs
+    back-to-back so a noisy-neighbour slow phase hits both arms alike and
+    cancels in the ratio).  The budget gate uses the BEST (minimum) pair —
+    the pairwise analogue of best-of wall timing: the observation least
+    inflated by machine noise.  The median is reported alongside; on a
+    quiet machine the two agree.  A best-of across arms (the sanitizer
+    benchmark's estimator) is fragile on shared machines where run-to-run
+    wall time swings far more than the effect being measured."""
+    n_tasks = 200 if smoke else 600
+    reps = 5 if smoke else 7
+    best = {"off": float("inf"), "on": float("inf")}
+    sigs = {}
+    ratios = []
+    for arm, armed in (("off", False), ("on", True)):  # warm caches/JIT
+        _run_once(n_tasks, armed)
+    for _ in range(reps):
+        pair = {}
+        for arm, armed in (("off", False), ("on", True)):
+            wall, sig = _run_once(n_tasks, armed)
+            pair[arm] = wall
+            best[arm] = min(best[arm], wall)
+            sigs.setdefault(arm, sig)
+            if sigs[arm] != sig:
+                raise AssertionError(
+                    f"nondeterministic arm {arm}: {sigs[arm]} vs {sig}")
+        ratios.append(pair["on"] / pair["off"])
+    if sigs["off"] != sigs["on"]:
+        raise AssertionError(
+            "observability perturbed the simulation: "
+            f"off={sigs['off']} on={sigs['on']}")
+    ratio = float(np.min(ratios))
+    median = float(np.median(ratios))
+    overhead_pct = (ratio - 1.0) * 100
+    assert ratio < 1.0 + OVERHEAD_BUDGET, (
+        f"armed observability costs {overhead_pct:.1f}% in the BEST "
+        f"interleaved pair (budget {OVERHEAD_BUDGET * 100:.0f}%; "
+        f"median pair {100 * (median - 1.0):+.1f}%)")
+    us = {arm: best[arm] / n_tasks * 1e6 for arm in best}
+    rows: List[Row] = [
+        ("obs_overhead/off", us["off"],
+         f"tasks={n_tasks} completed={sigs['off'][0]}"),
+        ("obs_overhead/on", us["on"],
+         f"best_pair_ratio={ratio:.3f} overhead={overhead_pct:+.1f}% "
+         f"median_pair_ratio={median:.3f} "
+         f"budget=<{OVERHEAD_BUDGET * 100:.0f}%"),
+    ]
+    rows += _armed_cosim(n_tasks)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small task count (CI)")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f'{name},{us:.2f},"{derived}"')
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "us_per_call": u, "derived": d}
+                       for n, u, d in rows], f, indent=1)
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

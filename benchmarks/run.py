@@ -32,6 +32,7 @@ BENCHES = (
     "fault_recovery",     # beyond-paper: fault injection + recovery under loss
     "migration",          # beyond-paper: store migration under fleet churn
     "sanitizer_overhead",  # armed vs disarmed invariant-sanitizer cost
+    "obs_overhead",       # armed vs disarmed tracing/profiling cost
     "roofline",           # §Roofline (reads dry-run artifacts)
 )
 

@@ -44,6 +44,17 @@ J-class — JAX rules (retrace / host-sync hygiene):
   block dispatch (or silently fall back to host math) in the kernel/store
   hot paths.
 
+O-class — observability rules (metrics-registry hygiene):
+
+* **O001** (error): direct subscript mutation of a legacy stats mapping
+  (``<obj>.stats[...] += 1`` / ``= ...`` on ``stats`` / ``engine_stats`` /
+  ``fault_stats``) inside a sim-path package.  Those mappings are
+  ``repro.obs.registry.CounterGroup`` views adopted by the one
+  ``MetricsRegistry``; write through ``.inc(key, n)`` so every increment
+  is a registry event the per-interval snapshots can see.  Tests and
+  benchmarks may still poke the mapping (CounterGroup stays a
+  MutableMapping for exactly that reason).
+
 Waivers: append ``# lint: disable=D001(reason)`` to the flagged line (or
 put the comment alone on the line directly above).  A reason is mandatory
 — a bare waiver is itself a violation (W000) — and a waiver that matches
@@ -73,9 +84,13 @@ RULES: Dict[str, Tuple[str, str]] = {
     "D004": ("warning", "order-sensitive iteration over a bare set"),
     "J001": ("error", "jit/pallas_call constructed per call (retrace)"),
     "J002": ("warning", "implicit host sync in jit/kernel scope"),
+    "O001": ("error", "direct mutation of a registry-adopted stats map"),
     "W000": ("error", "waiver without a reason"),
     "W001": ("error", "unused waiver"),
 }
+
+# legacy stats mappings re-homed into the metrics registry (O001)
+REGISTRY_STATS_ATTRS = {"stats", "engine_stats", "fault_stats"}
 
 # packages where only the virtual clock may be read (D002)
 SIM_PATH_PACKAGES = {"core", "federation", "faults", "serving"}
@@ -353,6 +368,18 @@ class _Checker(ast.NodeVisitor):
 
     visit_AsyncFunctionDef = visit_FunctionDef
 
+    def _check_stats_mutation(self, tgt: ast.AST, node: ast.AST) -> None:
+        # O001 — <obj>.stats[...] written directly in a sim path
+        if not (self.sim_path and isinstance(tgt, ast.Subscript)
+                and isinstance(tgt.value, ast.Attribute)
+                and tgt.value.attr in REGISTRY_STATS_ATTRS):
+            return
+        self._add("O001", node,
+                  f"direct mutation of '.{tgt.value.attr}[...]': this "
+                  "mapping is a CounterGroup adopted by the metrics "
+                  "registry; write through .inc(key, n) so the increment "
+                  "is visible to per-interval snapshots")
+
     def visit_Assign(self, node: ast.Assign) -> None:
         if _is_set_expr(node.value, self.scopes[-1]):
             for tgt in node.targets:
@@ -362,6 +389,12 @@ class _Checker(ast.NodeVisitor):
             for tgt in node.targets:  # reassignment to non-set clears the mark
                 if isinstance(tgt, ast.Name):
                     self.scopes[-1].set_names.discard(tgt.id)
+        for tgt in node.targets:
+            self._check_stats_mutation(tgt, node)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._check_stats_mutation(node.target, node)
         self.generic_visit(node)
 
     def _check_iteration(self, iter_node: ast.AST) -> None:

@@ -20,6 +20,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.registry import CounterGroup
+
 from .lsh import LSHParams
 from .packets import Data, Interest
 from .namespace import parse_task_name
@@ -223,11 +225,19 @@ class InlineBackend(ComputeBackend):
             en.stores[svc_name].insert(emb, result)
         else:
             defer_inserts.append((emb, result))
-        en.stats["executed"] += 1
+        en.stats.inc("executed")
         en.ttc.observe(svc_name, exec_t)
         start = max(net.loop.now + lead_delay_s, net._en_busy_until[node])
         done = start + exec_t
         net._en_busy_until[node] = done
+        net.registry.observe_phase("execute", exec_t)
+        tr = net._tracer
+        if tr is not None:
+            tmeta = net._task_meta.get(interest.name)
+            if tmeta is not None:
+                tr.complete("execute", "execute", tmeta[0], t0=start,
+                            dur=exec_t, task=tmeta[0], node=str(node),
+                            backend="inline")
         fut = Future()
         fut.set_result(ExecCompletion(result, done), now=net.loop.now)
         return fut
@@ -275,7 +285,7 @@ class EdgeNode:
         self.similarity = similarity
         self.queue_len = 0
         self._rng = random.Random(seed)
-        self.stats = {
+        self.stats = CounterGroup({
             "reused": 0, "executed": 0, "unknown_service": 0,
             # TTC-protocol fetch path (network co-sim, paper Fig. 3b):
             "fetches": 0,        # solicited deferred-result fetch Interests
@@ -297,7 +307,7 @@ class EdgeNode:
             "pit_expired": 0,    # PIT entries aged out at this node
             "retx_coalesced": 0,  # retransmissions deduped onto in-flight work
             "exec_failed": 0,    # executions rejected (ExecAborted -> NACK)
-        }
+        })
 
     def register(self, service: Service) -> None:
         name = service.name.strip("/")
@@ -311,7 +321,7 @@ class EdgeNode:
         service_name, kw, _ = parse_task_name(interest.name)
         svc = self.services.get(service_name.strip("/"))
         if svc is None:
-            self.stats["unknown_service"] += 1
+            self.stats.inc("unknown_service")
             raise KeyError(f"EN {self.prefix} does not offer {service_name}")
         emb = np.asarray(interest.app_params["input"], np.float32)
         threshold = float(interest.app_params.get("threshold", 0.0))
@@ -319,7 +329,7 @@ class EdgeNode:
 
     def _hit_outcome(self, interest: Interest, svc: Service, result: Any,
                      sim: float) -> TaskOutcome:
-        self.stats["reused"] += 1
+        self.stats.inc("reused")
         data = Data(
             interest.name,
             content=result,
@@ -345,7 +355,7 @@ class EdgeNode:
                 self.stores[key].insert(emb, result)
             else:
                 defer_inserts.append((emb, result))
-        self.stats["executed"] += 1
+        self.stats.inc("executed")
         data = Data(
             interest.name,
             content=result,

@@ -30,6 +30,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import networkx as nx
 import numpy as np
 
+from repro.obs.registry import CounterGroup, MetricsRegistry
+
 from .edge_node import ComputeBackend, EdgeNode, InlineBackend, Service
 from .forwarder import Forwarder
 from .lsh import LSHParams, get_lsh, normalize
@@ -248,6 +250,8 @@ class ReservoirNetwork:
                                        # change (rebalance / leave / join);
                                        # False reproduces the pre-migration
                                        # stranded-store behaviour
+        trace: Optional[bool] = None,  # None defers to RESERVOIR_TRACE
+        profile: Optional[bool] = None,  # None defers to RESERVOIR_PROFILE
         seed: int = 0,
     ):
         assert mode in ("reservoir", "icedge")
@@ -271,7 +275,7 @@ class ReservoirNetwork:
         self.pit_lifetime_s = (math.inf if pit_lifetime_s is None
                                else float(pit_lifetime_s))
         self._en_inflight: Dict[Tuple[Any, str], Future] = {}  # retx dedup
-        self.fault_stats = {
+        self.fault_stats = CounterGroup({
             "retx_sent": 0,        # consumer retransmissions emitted
             "retx_give_ups": 0,    # tasks abandoned after retx_max retries
             "nacks_sent": 0,       # EN-side failures answered with a NACK
@@ -279,7 +283,7 @@ class ReservoirNetwork:
             "crashed_ens": 0,      # crash_en invocations
             "crash_drops": 0,      # packets that died at a crashed EN app
             "crash_recoveries": 0,  # dead-peer verdicts that re-partitioned
-        }
+        })
         self.graph = graph
         self.lsh_params = lsh_params
         self.lsh = get_lsh(lsh_params)
@@ -292,10 +296,27 @@ class ReservoirNetwork:
         self._cs_capacity = cs_capacity
         self._en_store_capacity = en_store_capacity
         self._rng = random.Random(seed)
-        self.loop = EventLoop()  # RESERVOIR_SANITIZE arms invariant checks
+        # RESERVOIR_SANITIZE arms invariant checks; RESERVOIR_TRACE /
+        # RESERVOIR_PROFILE (or the explicit kwargs) arm observability
+        self.loop = EventLoop(trace=trace, profile=profile)
         self._san = self.loop.sanitizer
         if self._san is not None:
             self._san.add_idle_check(self._audit_pit_drained)
+        # observability (DESIGN.md §Observability): the tracer mirrors the
+        # sanitizer's arming (RESERVOIR_TRACE / EventLoop(trace=...)); the
+        # registry is ALWAYS on (purely observational, cannot perturb the
+        # seeded goldens) and re-homes every legacy stats dict below.
+        self._tracer = self.loop.tracer
+        self.registry = MetricsRegistry()
+        self.registry.adopt("fault", self.fault_stats)
+        # name -> [task_id, t_submit, open span id (None when disarmed)]:
+        # hop/phase attribution for packets already in flight.  Entries are
+        # registered at submit (plus fetch/federated aliases) and dropped at
+        # completion / give-up.
+        self._task_meta: Dict[str, List[Any]] = {}
+        if self.loop.profiler is not None:
+            self.loop.profiler.add_counter_source(
+                "store_sync_pages", self._total_sync_pages)
         self.metrics = Metrics()
         self._task_ids = itertools.count()
         self.services: Dict[str, Service] = {}
@@ -327,6 +348,7 @@ class ReservoirNetwork:
                 f"/en/{node}", lsh_params, store_capacity=en_store_capacity,
                 similarity="cosine", seed=seed + 17,
             )
+            self.registry.adopt(f"en/{node}", self.edge_nodes[node].stats)
         # ICedge EN store: coarse-tag -> latest result
         self._icedge_store: Dict[Any, Dict[str, Tuple[np.ndarray, Any]]] = {
             node: {} for node in self.en_nodes
@@ -590,6 +612,7 @@ class ReservoirNetwork:
                       similarity="cosine", seed=self._seed + 17)
         self.en_nodes.append(node)
         self.edge_nodes[node] = en
+        self.registry.adopt(f"en/{node}", en.stats)
         self._departed.pop(node, None)  # a gracefully-left id may rejoin
                                         # (fresh state; the old store is gone)
         self._icedge_store[node] = {}
@@ -631,7 +654,7 @@ class ReservoirNetwork:
         en = self.edge_nodes.pop(node)
         self.en_nodes.remove(node)
         self._crashed[node] = en
-        self.fault_stats["crashed_ens"] += 1
+        self.fault_stats.inc("crashed_ens")
         self._icedge_store.pop(node, None)
         self._en_pending.pop(node, None)
         for key in [k for k in self._en_ready if k[0] == node]:
@@ -655,7 +678,14 @@ class ReservoirNetwork:
         for svc in self.services:
             self.rebalance_service(svc, _notify_backend=False)
         self.backend.on_partition_change()
-        self.fault_stats["crash_recoveries"] += 1
+        self.fault_stats.inc("crash_recoveries")
+
+    def _total_sync_pages(self) -> int:
+        """Device sync-page total across every live EN reuse store (profiler
+        counter source)."""
+        return sum(s.sync_pages_total + s.table_sync_pages_total
+                   for en in self.edge_nodes.values()
+                   for s in en.stores.values())
 
     def exec_inflation(self, node: Any) -> float:
         """Slow-node fault: multiplier on sampled execution times (1.0 when
@@ -696,7 +726,7 @@ class ReservoirNetwork:
                 en = (self.edge_nodes.get(node) or self._departed.get(node)
                       or self._crashed.get(node))
                 if en is not None:
-                    en.stats["pit_expired"] += n
+                    en.stats.inc("pit_expired", n)
             if len(fwd.pit):
                 alive = True
         return alive
@@ -721,7 +751,7 @@ class ReservoirNetwork:
             # the delegating EN re-dispatched at leave time; late arrivals
             # are redundant — count and drop (PIT state expires upstream)
             if self.federator is not None:
-                self.federator.stats["dropped_at_departed"] += 1
+                self.federator.stats.inc("dropped_at_departed")
         else:
             self._failover_interest(node, interest)
 
@@ -820,7 +850,23 @@ class ReservoirNetwork:
         return self.loop.at(t, fn, *args)
 
     def run(self, until: float = float("inf"), max_events: int = 5_000_000) -> float:
-        return self.loop.run(until, max_events)
+        t = self.loop.run(until, max_events)
+        tr = self._tracer
+        if tr is not None and not len(self.loop):
+            # drain-to-idle: tasks that will never complete (lost past the
+            # retransmission budget with retx disabled, stranded at a crashed
+            # EN, ...) still close their spans — the well-formedness contract
+            # is "no open spans once the loop is idle".
+            for meta in self._task_meta.values():
+                if meta[2] is not None:
+                    tr.abandon(meta[2], why="unresolved-at-drain")
+                    meta[2] = None
+            # non-task spans (offloads whose reply was lost with the
+            # re-dispatch deadline disabled, ...) get the same treatment: a
+            # valid export never carries unclosed spans.
+            for sid, _, _, _ in tr.open_spans():
+                tr.abandon(sid, why="unresolved-at-drain")
+        return t
 
     def _emit(self, node: Any, actions, now: float) -> None:
         for act in actions:
@@ -840,12 +886,25 @@ class ReservoirNetwork:
                         if self._san is not None:
                             self._san.note_loss(act.packet.name,
                                                 "chaos link drop")
+                        if self._tracer is not None:
+                            meta = self._task_meta.get(act.packet.name)
+                            self._tracer.instant(
+                                "drop", "fault",
+                                meta[0] if meta else self._tracer.track("fault"),
+                                t=t_out, link=f"{node}->{peer}",
+                                task=meta[0] if meta else None)
                         continue
                     delay += extra
                 self.at(t_out + delay, self._deliver, peer, peer_face, act.packet)
 
     def _deliver(self, node: Any, face: int, packet) -> None:
         fwd = self.forwarders[node]
+        tr = self._tracer
+        if tr is not None:
+            meta = self._task_meta.get(packet.name)
+            if meta is not None:
+                tr.instant("hop", "forward", meta[0], node=str(node),
+                           kind=type(packet).__name__.lower(), task=meta[0])
         if isinstance(packet, Interest):
             extra = 0.0
             if self.mode == "icedge" and "/ictask/" in packet.name:
@@ -864,7 +923,7 @@ class ReservoirNetwork:
             # crash-stop: the EN application is gone (no drain, no NACK —
             # silence is the failure signal); the co-located forwarder keeps
             # routing transit traffic, only app-face deliveries die here.
-            self.fault_stats["crash_drops"] += 1
+            self.fault_stats.inc("crash_drops")
             if self._san is not None:
                 self._san.note_loss(packet.name, f"crashed EN {node!r}")
             return
@@ -906,11 +965,22 @@ class ReservoirNetwork:
         if interest.retx and self.mode == "reservoir" \
                 and self._en_retx_coalesce(node, interest):
             return
+        if not interest.retx:
+            # forward phase (paper Figs. 8-10 decomposition): submit -> first
+            # arrival of the task Interest at its EN's application face
+            tmeta = self._task_meta.get(interest.name)
+            if tmeta is not None:
+                self.registry.observe_phase("forward", self._now - tmeta[1])
         if self.mode == "reservoir" and self.en_batch_window_s > 0:
             # batch window (DESIGN.md §Array-native store): buffer tasks
             # arriving at this EN; one query_batch services the whole window.
             pending = self._en_pending[node]
             pending.append(interest)
+            if self._tracer is not None:
+                tmeta = self._task_meta.get(interest.name)
+                if tmeta is not None:
+                    self._tracer.instant("window-buffer", "window", tmeta[0],
+                                         node=str(node), task=tmeta[0])
             if len(pending) == 1:
                 self.at(self._now + self.en_batch_window_s,
                         self._flush_en_batch, node)
@@ -963,7 +1033,7 @@ class ReservoirNetwork:
         if self.protocol == "ttc":
             entry = self._en_ready.get(key)
             if entry is not None:
-                en.stats["retx_coalesced"] += 1
+                en.stats.inc("retx_coalesced")
                 ttc = (max(entry.done - self._now, 1e-4) if entry.resolved
                        else self._backend_ttc(node, interest.name, entry))
                 data = Data(interest.name,
@@ -973,11 +1043,11 @@ class ReservoirNetwork:
                 self._send_from_en(node, data, 0.0)
                 return True
         if key in self._en_inflight:
-            en.stats["retx_coalesced"] += 1
+            en.stats.inc("retx_coalesced")
             return True
         if any(p.name == interest.name
                for p in self._en_pending.get(node, ())):
-            en.stats["retx_coalesced"] += 1
+            en.stats.inc("retx_coalesced")
             return True
         return False
 
@@ -1025,8 +1095,19 @@ class ReservoirNetwork:
         en = self.edge_nodes[node]
         svc_name = interest.app_params["service"]
         result, sim, idx = qres
+        self.registry.observe_phase("search", search_t)
+        tr = self._tracer
+        if tr is not None:
+            tmeta = self._task_meta.get(interest.name)
+            if tmeta is not None:
+                store = en.stores[svc_name]
+                tr.complete("search", "search", tmeta[0], t0=self._now,
+                            dur=search_t, task=tmeta[0], node=str(node),
+                            fused=store.last_query_fused,
+                            sync_pages=store.last_query_sync_pages,
+                            hit=idx is not None, similarity=float(sim))
         if idx is not None:
-            en.stats["reused"] += 1
+            en.stats.inc("reused")
             data = Data(interest.name, content=result,
                         meta={"reuse": "en", "similarity": sim, "en": en.prefix})
             self._send_from_en(node, data, search_t)
@@ -1122,6 +1203,11 @@ class ReservoirNetwork:
             return
         self._en_pending[node] = []
         en = self.edge_nodes[node]
+        tr = self._tracer
+        if tr is not None:
+            tr.complete("en-window", "window", tr.track(f"en/{node}"),
+                        t0=self._now - self.en_batch_window_s,
+                        dur=self.en_batch_window_s, n=len(pending))
         by_svc: Dict[str, List[Interest]] = {}
         for interest in pending:
             by_svc.setdefault(interest.app_params["service"], []).append(interest)
@@ -1172,14 +1258,24 @@ class ReservoirNetwork:
         so the follower's Data rides the same timeline (straggler-backup
         wins included)."""
         en = self.edge_nodes[node]
-        en.stats["reused"] += 1
-        en.stats["window_reuse"] += 1
+        en.stats.inc("reused")
+        en.stats.inc("window_reuse")
         name = interest.name
+        t_enq = self._now
 
         def deliver(fut: Future) -> None:
             if fut.exception is not None:
                 return  # leader aborted (crash-stop); consumers re-express
             comp = fut.result
+            # aggregate phase: window-dedup wait on the in-flight leader
+            agg_s = max(comp.t_done - t_enq, 0.0)
+            self.registry.observe_phase("aggregate", agg_s)
+            tr = self._tracer
+            if tr is not None:
+                tmeta = self._task_meta.get(name)
+                if tmeta is not None:
+                    tr.complete("aggregate", "aggregate", tmeta[0], t0=t_enq,
+                                dur=agg_s, task=tmeta[0], similarity=sim)
             data = Data(name, content=comp.result,
                         meta={"reuse": "en", "similarity": sim,
                               "en": en.prefix, "window_agg": True})
@@ -1225,7 +1321,7 @@ class ReservoirNetwork:
             en = (self.edge_nodes.get(key[0]) or self._departed.get(key[0])
                   or self._crashed.get(key[0]))
             if en is not None:
-                en.stats["exec_failed"] += 1
+                en.stats.inc("exec_failed")
             return
         comp = fut.result
         entry.done = comp.t_done
@@ -1258,7 +1354,7 @@ class ReservoirNetwork:
             en = (self.edge_nodes.get(node) or self._departed.get(node)
                   or self._crashed.get(node))
             if en is not None:
-                en.stats["exec_failed"] += 1
+                en.stats.inc("exec_failed")
             if node in self._crashed:
                 if self._san is not None:
                     self._san.note_loss(
@@ -1285,7 +1381,7 @@ class ReservoirNetwork:
     def _expire_ready(self, key: Tuple[Any, str], entry: _ReadyEntry) -> None:
         if self._en_ready.get(key) is entry:
             self._en_ready.pop(key, None)
-            self._en_of(key[0]).stats["ready_expired"] += 1
+            self._en_of(key[0]).stats.inc("ready_expired")
 
     def _en_fetch(self, node: Any, interest: Interest) -> None:
         """Deferred result fetch at an EN (paper Fig. 3b, second exchange)."""
@@ -1295,10 +1391,10 @@ class ReservoirNetwork:
         if entry is None:
             # unsolicited or expired: answer with a NACK (was a silent drop)
             # so the consumer re-expresses the task instead of timing out.
-            en.stats["fetch_drops"] += 1
+            en.stats.inc("fetch_drops")
             self._send_nack(node, interest.name, "no-ready-entry")
             return
-        en.stats["fetches"] += 1
+        en.stats.inc("fetches")
         if entry.resolved and entry.done <= self._now + 1e-9:
             self._en_ready.pop((node, orig), None)
             if entry.timer is not None:
@@ -1307,7 +1403,7 @@ class ReservoirNetwork:
                         meta=dict(entry.meta))
             self._send_from_en(node, data, 0.0)
         else:  # early fetch: respond with an updated TTC (paper §IV-C)
-            en.stats["early_fetches"] += 1
+            en.stats.inc("early_fetches")
             ttc = (entry.done - self._now if entry.resolved
                    else self._backend_ttc(node, orig, entry))
             data = Data(interest.name,
@@ -1332,7 +1428,12 @@ class ReservoirNetwork:
                 self._san.note_loss(name, f"NACK died at crashed {node!r}")
             return
         en = self.edge_nodes.get(node) or self._departed.get(node)
-        self.fault_stats["nacks_sent"] += 1
+        self.fault_stats.inc("nacks_sent")
+        if self._tracer is not None:
+            tmeta = self._task_meta.get(name)
+            if tmeta is not None:
+                self._tracer.instant("nack", "retx", tmeta[0], task=tmeta[0],
+                                     reason=reason, node=str(node))
         data = Data(name, content=None,
                     meta={"control": "nack", "reason": reason,
                           "cacheable": False,
@@ -1345,7 +1446,7 @@ class ReservoirNetwork:
         def emit():
             if node in self._crashed:
                 # the result died with the EN (in-flight at crash time)
-                self.fault_stats["crash_drops"] += 1
+                self.fault_stats.inc("crash_drops")
                 if self._san is not None:
                     self._san.note_loss(data.name,
                                         f"result died at crashed {node!r}")
@@ -1412,6 +1513,14 @@ class ReservoirNetwork:
                     zlib.crc32(tag.encode()) % len(self.en_nodes)]
                 hint = self.edge_nodes[en_node].prefix
             rec.name = name
+            tr = self._tracer
+            sid = None
+            if tr is not None:
+                tr.name_task(rec.task_id, f"task {rec.task_id}")
+                sid = tr.begin("task", "task", rec.task_id, t=t0,
+                               user=user_id, service=service, task_name=name)
+            tmeta = [rec.task_id, t0, sid]
+            self._task_meta[name] = tmeta
             # Send time of the latest Interest for this task.  The RTT that
             # schedules the Fig. 3b result fetch must be measured from it:
             # measuring from t_submit (the old behaviour) folds the whole
@@ -1442,9 +1551,19 @@ class ReservoirNetwork:
                 state["timer"] = self.at(self._now + timeout, on_timeout,
                                          phase, state["tries"])
 
+            def finish_trace(outcome: str, **args):
+                """Close the task's span and drop its name-map entries."""
+                if tr is not None and tmeta[2] is not None:
+                    tr.end(tmeta[2], outcome=outcome, retx=rec.retx, **args)
+                    tmeta[2] = None
+                self._task_meta.pop(name, None)
+                if state["fetch"] is not None:
+                    self._task_meta.pop(state["fetch"], None)
+
             def give_up():
                 rec.failed = True
-                self.fault_stats["retx_give_ups"] += 1
+                finish_trace("failed")
+                self.fault_stats.inc("retx_give_ups")
                 if self._san is not None:
                     # the abandoned exchange may leave its task / fetch name
                     # pending in PITs forever; that is the designed outcome
@@ -1465,7 +1584,10 @@ class ReservoirNetwork:
                     return
                 state["tries"] += 1
                 rec.retx += 1
-                self.fault_stats["retx_sent"] += 1
+                self.fault_stats.inc("retx_sent")
+                if tr is not None:
+                    tr.instant("retx", "retx", rec.task_id,
+                               task=rec.task_id, attempt=state["tries"])
                 state["phase"] = "task"
                 state["fetch"] = None
                 send_task()
@@ -1539,7 +1661,11 @@ class ReservoirNetwork:
                     # the exchange dead-ended at the EN (aborted execution,
                     # lost ready entry): re-express the original task — the
                     # (possibly re-partitioned) rFIB picks the owner afresh.
-                    self.fault_stats["nacks_received"] += 1
+                    self.fault_stats.inc("nacks_received")
+                    if tr is not None:
+                        tr.instant("nack-received", "retx", rec.task_id,
+                                   task=rec.task_id,
+                                   reason=data.meta.get("reason", ""))
                     cancel_timer()
                     state["phase"] = "task"
                     state["fetch"] = None
@@ -1556,6 +1682,13 @@ class ReservoirNetwork:
                     fetch_name = data.content["en_prefix"] + name
                     state["phase"] = "fetch"
                     state["fetch"] = fetch_name
+                    # fetch Interests carry the same task: alias the name so
+                    # hop attribution (and drain-close) follows the exchange
+                    self._task_meta[fetch_name] = tmeta
+                    if tr is not None:
+                        tr.instant("ttc-answer", "ttc", rec.task_id,
+                                   task=rec.task_id,
+                                   ttc=float(data.content["ttc"]))
 
                     def fetch():
                         if rec.t_complete >= 0 or rec.failed:
@@ -1592,6 +1725,8 @@ class ReservoirNetwork:
                 rec.forwarding_error = bool(data.meta.get("fwd_error", False))
                 if rec.reuse is not None:
                     rec.correct = results_match(rec.result, rec.true_result)
+                finish_trace("completed", reuse=rec.reuse or "scratch",
+                             reuse_node=rec.reuse_node)
 
             # The completion callback fires when Data reaches this user's
             # APP_FACE (via the PIT return path).

@@ -204,6 +204,13 @@ class ReuseStore:
         self.overflows = 0
         self.inserts = 0
         self.queries = 0
+        # --- observability (ISSUE 10): dispatch-path accounting exposed to
+        # the tracer's search spans — which path answered the last query and
+        # how many pages its device sync uploaded, plus running route counts
+        self.fused_queries = 0
+        self.staged_queries = 0
+        self.last_query_fused = False
+        self.last_query_sync_pages = 0
         self.candidate_counts: List[int] = []
         # RESERVOIR_SANITIZE arms post-mutation invariant audits; disarmed,
         # every hook below is a single bool test on the hot path
@@ -653,6 +660,9 @@ class ReuseStore:
     ) -> Tuple[Optional[Any], float, Optional[int]]:
         """Nearest stored task; returns (result, similarity, idx) or misses."""
         self.queries += 1
+        self.staged_queries += 1
+        self.last_query_fused = False
+        self.last_query_sync_pages = 0
         cand = self.candidates(embedding)
         self.candidate_counts.append(len(cand))
         if not cand:
@@ -711,12 +721,21 @@ class ReuseStore:
             if not peek:
                 self.candidate_counts.extend([0] * n)
             return [(None, -1.0, None)] * n
+        p0 = self.sync_pages_total + self.table_sync_pages_total
         if self._use_fused(n):
             # peek reads record no statistics, so the fused path skips the
             # candidate-count epilogue entirely (counts is None)
             val, idx, counts = self._query_fused(embs, need_counts=not peek)
+            self.last_query_fused = True
+            if not peek:
+                self.fused_queries += n
         else:
             val, idx, counts = self._query_staged(embs)
+            self.last_query_fused = False
+            if not peek:
+                self.staged_queries += n
+        self.last_query_sync_pages = (
+            self.sync_pages_total + self.table_sync_pages_total - p0)
         if not peek:
             self.candidate_counts.extend(int(c) for c in counts)
         out: List[Tuple[Optional[Any], float, Optional[int]]] = []

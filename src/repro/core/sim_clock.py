@@ -26,6 +26,8 @@ import itertools
 from typing import Any, Callable, List, Optional, Tuple
 
 from repro.analysis import sanitizer as _sanitize
+from repro.obs import profiler as _profiler
+from repro.obs import trace as _trace
 
 
 class Timer:
@@ -83,23 +85,44 @@ class EventLoop:
     """Deterministic virtual-clock event loop (min-heap by (t, seq))."""
 
     def __init__(self, start: float = 0.0,
-                 sanitize: Optional[bool] = None):
+                 sanitize: Optional[bool] = None,
+                 trace: Optional[bool] = None,
+                 profile: Optional[bool] = None):
         self._now = float(start)
         self._events: List[Tuple[float, int, Timer, Callable, tuple]] = []
         self._seq = itertools.count()
         self.processed = 0
         # sanitize=None defers to RESERVOIR_SANITIZE; the armed loop carries
         # a Sanitizer, the disarmed one a None so every hook site below is a
-        # single attribute test on the hot path.
+        # single attribute test on the hot path.  trace / profile follow the
+        # same contract with RESERVOIR_TRACE / RESERVOIR_PROFILE.
         if sanitize is None:
             sanitize = _sanitize.env_enabled()
         self._san: Optional[_sanitize.Sanitizer] = (
             _sanitize.Sanitizer(self) if sanitize else None)
+        if trace is None:
+            trace = _trace.env_enabled()
+        self._tracer: Optional[_trace.Tracer] = (
+            _trace.Tracer(self) if trace else None)
+        if profile is None:
+            profile = _profiler.env_enabled()
+        self._prof: Optional[_profiler.Profiler] = (
+            _profiler.Profiler(self) if profile else None)
 
     @property
     def sanitizer(self) -> Optional[_sanitize.Sanitizer]:
         """The armed Sanitizer, or None when disarmed."""
         return self._san
+
+    @property
+    def tracer(self) -> Optional[_trace.Tracer]:
+        """The armed Tracer, or None when disarmed."""
+        return self._tracer
+
+    @property
+    def profiler(self) -> Optional[_profiler.Profiler]:
+        """The armed Profiler, or None when disarmed."""
+        return self._prof
 
     @property
     def now(self) -> float:
@@ -142,7 +165,9 @@ class EventLoop:
         injected after a partial drain happen *at* the horizon."""
         n = 0
         san = self._san
-        if san is None:  # zero-cost path: no per-event closure or context
+        prof = self._prof
+        if san is None and prof is None:
+            # zero-cost path: no per-event closure, context, or clock reads
             while self._events and n < max_events:
                 t, _, timer, fn, args = self._events[0]
                 if t > until:
@@ -163,15 +188,20 @@ class EventLoop:
                 if timer.cancelled:
                     continue
                 self._now = t
-                san.push_context(
-                    f"{getattr(fn, '__qualname__', fn)!r} @ t={t:.6f}")
+                if san is not None:
+                    san.push_context(
+                        f"{getattr(fn, '__qualname__', fn)!r} @ t={t:.6f}")
+                mark = prof.begin() if prof is not None else None
                 try:
                     fn(*args)
                 finally:
-                    san.pop_context()
+                    if prof is not None:
+                        prof.end(_profiler.site_of(fn), mark)
+                    if san is not None:
+                        san.pop_context()
                 n += 1
                 self.processed += 1
-            if not self._events and n < max_events:
+            if san is not None and not self._events and n < max_events:
                 # true drain-to-idle (not a horizon break): audit the
                 # subsystem invariants that only hold at quiescence
                 san.run_idle_checks()

@@ -29,6 +29,7 @@ import zlib
 from typing import Any, Optional
 
 from repro.core.packets import Interest
+from repro.obs.registry import CounterGroup
 
 from .plan import FaultPlan
 
@@ -40,7 +41,7 @@ class ChaosController:
         # crc32-derived seed: deterministic across processes (PR 4 lesson)
         self._rng = random.Random(zlib.crc32(b"reservoir-chaos")
                                   ^ (plan.seed & 0xFFFFFFFF))
-        self.stats = {
+        self.stats = CounterGroup({
             "interest_drops": 0,
             "data_drops": 0,
             "partition_drops": 0,
@@ -48,8 +49,11 @@ class ChaosController:
             "gossip_drops": 0,
             "slow_samples": 0,
             "crashes": 0,
-        }
+        })
         net.chaos = self
+        reg = getattr(net, "registry", None)
+        if reg is not None:
+            reg.adopt("chaos", self.stats)
         for ev in plan.crashes:
             net.loop.at(ev.at, self._crash, ev.node)
 
@@ -63,7 +67,7 @@ class ChaosController:
         """Fate of one link traversal: None = drop, else extra delay (s)."""
         for p in self.plan.partitions:
             if p.separates(src, dst, now):
-                self.stats["partition_drops"] += 1
+                self.stats.inc("partition_drops")
                 return None
         if not self.plan.links:
             return 0.0
@@ -73,11 +77,11 @@ class ChaosController:
             if not rule.matches(src, dst, kind, now):
                 continue
             if rule.loss > 0.0 and self._rng.random() < rule.loss:
-                self.stats[kind + "_drops"] += 1
+                self.stats.inc(kind + "_drops")
                 return None
             if rule.jitter_s > 0.0:
                 extra += self._rng.uniform(0.0, rule.jitter_s)
-                self.stats["jitter_added"] += 1
+                self.stats.inc("jitter_added")
         return extra
 
     # ------------------------------------------------------------- exec seam
@@ -86,7 +90,7 @@ class ChaosController:
         for rule in self.plan.slow_nodes:
             if rule.active_for(node, now):
                 factor *= rule.factor
-                self.stats["slow_samples"] += 1
+                self.stats.inc("slow_samples")
         return factor
 
     # ----------------------------------------------------------- gossip seam
@@ -94,12 +98,12 @@ class ChaosController:
         for rule in self.plan.gossip:
             if rule.active(now) and rule.loss > 0.0 \
                     and self._rng.random() < rule.loss:
-                self.stats["gossip_drops"] += 1
+                self.stats.inc("gossip_drops")
                 return True
         return False
 
     # --------------------------------------------------------------- crashes
     def _crash(self, node: Any) -> None:
         if node in self.net.edge_nodes:
-            self.stats["crashes"] += 1
+            self.stats.inc("crashes")
             self.net.crash_en(node)

@@ -43,6 +43,7 @@ from repro.core.network import APP_FACE
 from repro.core.packets import Data, Interest
 from repro.core.rfib import owners_batch
 from repro.core.sim_clock import Future
+from repro.obs.registry import CounterGroup
 
 from .policy import LocalOnlyPolicy, OffloadContext, OffloadPolicy, get_policy
 from .telemetry import PeerHealth, TelemetryGossip
@@ -71,6 +72,7 @@ class _Offload:
     threshold: float
     out: Future                  # resolves with the ExecCompletion
     send_timer: Any = None       # lead-delay timer; cancelled on dst leave
+    trace_sid: Any = None        # open tracer span (armed runs only)
     timeout_timer: Any = None    # re-dispatch deadline (fault layer)
     cancelled: bool = False      # re-dispatched elsewhere; do not send/retry
 
@@ -131,7 +133,7 @@ class Federator:
         self.migrate_serialize_s_per_entry = float(migrate_serialize_s_per_entry)
         self._migrate_seq = itertools.count()
         self._autoscaler: Optional[Tuple[Any, Any, Any]] = None
-        self.stats = {
+        self.stats = CounterGroup({
             "decisions": 0, "offloads": 0, "remote_hits": 0,
             "remote_execs": 0, "remote_coalesced": 0, "rebalances": 0,
             "leave_redispatched": 0, "dropped_at_departed": 0,
@@ -147,7 +149,10 @@ class Federator:
             "stale_owner_hits": 0,     # remote hits at a no-longer-owner
             # autoscaling (attach_autoscaler)
             "scale_ups": 0, "scale_downs": 0,
-        }
+        })
+        reg = getattr(net, "registry", None)
+        if reg is not None:
+            reg.adopt("federation", self.stats)
 
     # ----------------------------------------------------------- decisions
     def note_activity(self) -> None:
@@ -165,7 +170,7 @@ class Federator:
     def decide(self, node: Any, svc_name: str, interest: Interest,
                emb: np.ndarray, threshold: float) -> Any:
         """Pick the EN a miss should execute on (``node`` = stay local)."""
-        self.stats["decisions"] += 1
+        self.stats.inc("decisions")
         self._miss_counts[node] = self._miss_counts.get(node, 0) + 1
         if isinstance(self.policy, LocalOnlyPolicy):
             # parity fast path: skip the context build (normalize, task-hash
@@ -288,8 +293,19 @@ class Federator:
         rec = _Offload(src, dst, fed_name, svc_name, interest,
                        np.asarray(emb, np.float32), threshold, out)
         self._offloads_by_dst.setdefault(dst, []).append(rec)
-        self.stats["offloads"] += 1
-        en_src.stats["offloaded"] += 1
+        self.stats.inc("offloads")
+        en_src.stats.inc("offloaded")
+        tr = net.loop.tracer
+        if tr is not None:
+            tmeta = net._task_meta.get(interest.name)
+            if tmeta is not None:
+                # the offload span lives on the originating task's track;
+                # aliasing the federated name onto the task's meta keeps hop
+                # instants attributed while the Interest crosses the fabric
+                rec.trace_sid = tr.begin(
+                    "offload", "federation", tmeta[0],
+                    task=tmeta[0], src=str(src), dst=str(dst))
+                net._task_meta.setdefault(fed_name, tmeta)
 
         def on_data(data: Data, t: float) -> None:
             recs = self._offloads_by_dst.get(rec.dst, [])
@@ -299,6 +315,8 @@ class Federator:
                 rec.timeout_timer.cancel()
                 rec.timeout_timer = None
             reuse = data.meta.get("reuse")
+            self._close_offload(
+                rec, "remote-hit" if reuse is not None else "remote-exec")
             comp = ExecCompletion(
                 data.content, t,
                 reuse="en" if reuse is not None else None,
@@ -334,6 +352,15 @@ class Federator:
             send()
         return out
 
+    def _close_offload(self, rec: _Offload, outcome: str) -> None:
+        """Close an offload's tracer span (idempotent; no-op disarmed) and
+        drop the federated-name alias from the task meta map."""
+        tr = self.net.loop.tracer
+        if tr is not None:
+            tr.end(rec.trace_sid, outcome=outcome)
+            rec.trace_sid = None
+            self.net._task_meta.pop(rec.fed_name, None)
+
     def _offload_timeout(self, rec: _Offload) -> None:
         """Re-dispatch deadline fired: the remote reply is overdue.
 
@@ -349,7 +376,8 @@ class Federator:
         # merely-slow remote reply may still try to resolve after the
         # redispatch (or the src-gone abort) settled the future
         rec.out.allow_late()
-        self.stats["offload_timeouts"] += 1
+        self.stats.inc("offload_timeouts")
+        self._close_offload(rec, "timeout")
         if self.health is not None:
             self.health.note_timeout(rec.dst)
         recs = self._offloads_by_dst.get(rec.dst, [])
@@ -360,7 +388,7 @@ class Federator:
                 ExecAborted("offload source %r gone at timeout" % (rec.src,)),
                 now=self.net.loop.now)
             return
-        self.stats["timeout_redispatched"] += 1
+        self.stats.inc("timeout_redispatched")
         fut = self.net.backend.submit(
             rec.src, rec.service, rec.interest, rec.emb, 0.0)
         fut.add_done_callback(lambda f, out=rec.out: f.propagate(out))
@@ -368,7 +396,7 @@ class Federator:
     def _peer_dead(self, node: Any) -> None:
         """PeerHealth declared ``node`` dead: purge every structure that
         still references it and re-dispatch its in-flight offloads."""
-        self.stats["peers_dead"] += 1
+        self.stats.inc("peers_dead")
         self._rtt_cache.clear()
         for key in [k for k in self._remote_inflight if k[0] == node]:
             self._remote_inflight.pop(key, None)
@@ -381,9 +409,10 @@ class Federator:
                 rec.timeout_timer.cancel()
                 rec.timeout_timer = None
             self.net._pending_cb.pop((rec.src, rec.fed_name), None)
+            self._close_offload(rec, "peer-dead")
             if rec.out.done or rec.src not in self.net.edge_nodes:
                 continue
-            self.stats["dead_redispatched"] += 1
+            self.stats.inc("dead_redispatched")
             fut = self.net.backend.submit(
                 rec.src, rec.service, rec.interest, rec.emb, 0.0)
             fut.add_done_callback(lambda f, out=rec.out: f.propagate(out))
@@ -401,7 +430,7 @@ class Federator:
         net = self.net
         en = net.edge_nodes.get(node)
         if en is None:  # departed while the Interest was in flight
-            self.stats["dropped_at_departed"] += 1
+            self.stats.inc("dropped_at_departed")
             return
         svc_name = interest.app_params["service"]
         emb = np.asarray(interest.app_params["input"], np.float32)
@@ -411,8 +440,14 @@ class Federator:
         leader = self._remote_inflight.get(key)
         if leader is not None:
             # follower rides the leader future: one execution, N replies
-            en.stats["remote_coalesced"] += 1
-            self.stats["remote_coalesced"] += 1
+            en.stats.inc("remote_coalesced")
+            self.stats.inc("remote_coalesced")
+            tr = net.loop.tracer
+            if tr is not None:
+                tmeta = net._task_meta.get(name)
+                if tmeta is not None:
+                    tr.instant("remote-coalesced", "federation", tmeta[0],
+                               node=str(node), task=tmeta[0])
             leader.add_done_callback(
                 lambda f: None if f.exception is not None
                 else self._reply_remote(node, name, f.result))
@@ -421,23 +456,30 @@ class Federator:
         search_t = net.delays.search_time_s(
             net.lsh_params.num_tables, max(len(store), 1))
         result, sim, idx = store.query(emb, threshold)
+        net.registry.observe_phase("search", search_t)
+        tr = net.loop.tracer
+        tmeta = net._task_meta.get(name) if tr is not None else None
+        if tmeta is not None:
+            tr.instant("remote-hit" if idx is not None else "remote-exec",
+                       "federation", tmeta[0], node=str(node), task=tmeta[0],
+                       similarity=float(sim))
         if idx is not None:
-            en.stats["reused"] += 1
-            en.stats["remote_hits"] += 1
-            self.stats["remote_hits"] += 1
+            en.stats.inc("reused")
+            en.stats.inc("remote_hits")
+            self.stats.inc("remote_hits")
             meta = {"reuse": "en", "similarity": sim, "en": en.prefix}
             if self._serving_stale(node, en, svc_name, name):
                 # hit served off a no-longer-owner (reuse-affinity peek or a
                 # stale forwarding hint): state the rFIB stopped routing here
                 # still answered — the stranded-store symptom migration fixes
                 meta["stale_owner"] = True
-                en.stats["stale_owner_hits"] += 1
-                self.stats["stale_owner_hits"] += 1
+                en.stats.inc("stale_owner_hits")
+                self.stats.inc("stale_owner_hits")
             data = Data(name, content=result, meta=meta)
             net._send_from_en(node, data, search_t)
             return
-        en.stats["remote_execs"] += 1
-        self.stats["remote_execs"] += 1
+        en.stats.inc("remote_execs")
+        self.stats.inc("remote_execs")
         fut = net.backend.submit(node, svc_name, interest, emb, search_t)
         self._remote_inflight[key] = fut
 
@@ -491,9 +533,10 @@ class Federator:
                 rec.timeout_timer.cancel()
                 rec.timeout_timer = None
             self.net._pending_cb.pop((rec.src, rec.fed_name), None)
+            self._close_offload(rec, "en-leave")
             if rec.out.done:
                 continue
-            self.stats["leave_redispatched"] += 1
+            self.stats.inc("leave_redispatched")
             fut = self.net._submit_execution(
                 rec.src, rec.service, rec.interest, rec.emb, rec.threshold,
                 0.0)
@@ -531,8 +574,8 @@ class Federator:
         n = len(exp)
         if n == 0:
             return 0
-        self.stats["migrations"] += 1
-        en_src.stats["migrated_out"] += n
+        self.stats.inc("migrations")
+        en_src.stats.inc("migrated_out", n)
         delay = 0.0
         for s in range(0, n, self.migrate_batch):
             e = min(s + self.migrate_batch, n)
@@ -550,15 +593,23 @@ class Federator:
         net = self.net
         seq = next(self._migrate_seq)
         name = f"{self._en_any(dst).prefix}/{svc}/migrate/{seq}"
-        self.stats["migrate_batches"] += 1
-        self.stats["migrated_entries"] += len(results)
+        self.stats.inc("migrate_batches")
+        self.stats.inc("migrated_entries", len(results))
+        tr = net.loop.tracer
+        if tr is not None:
+            tr.instant("migrate-send", "migration", tr.track("migrate"),
+                       batch=name, src=str(src), dst=str(dst), n=len(results))
         san = net.loop.sanitizer
         if san is not None:
             san.note_migration_out(name, len(results),
                                    _batch_fingerprint(embs))
 
         def on_ack(data: Data, t: float) -> None:
-            self.stats["migrate_acks"] += 1
+            self.stats.inc("migrate_acks")
+            if net.loop.tracer is not None:
+                net.loop.tracer.instant(
+                    "migrate-ack", "migration",
+                    net.loop.tracer.track("migrate"), batch=data.name)
 
         net._pending_cb.setdefault((src, name), []).append(on_ack)
 
@@ -606,8 +657,12 @@ class Federator:
                            buckets=np.asarray(p["buckets"]))
         store.sync_device()  # absorb the page uploads off the query path
         n = len(p["results"])
-        en.stats["migrated_in"] += n
-        self.stats["migrated_in"] += n
+        en.stats.inc("migrated_in", n)
+        self.stats.inc("migrated_in", n)
+        tr = net.loop.tracer
+        if tr is not None:
+            tr.instant("migrate-recv", "migration", tr.track("migrate"),
+                       batch=interest.name, node=str(node), n=n)
         ack = Data(interest.name, content={"migrated": n},
                    meta={"control": "migrate-ack", "cacheable": False,
                          "en": en.prefix})
@@ -623,7 +678,11 @@ class Federator:
         embs = np.asarray(p["embeddings"], np.float32)
         results = list(p["results"])
         buckets = np.atleast_2d(np.asarray(p["buckets"]))
-        self.stats["migrations_rerouted"] += 1
+        self.stats.inc("migrations_rerouted")
+        tr = net.loop.tracer
+        if tr is not None:
+            tr.instant("migrate-reroute", "migration", tr.track("migrate"),
+                       batch=interest.name, node=str(node))
         san = net.loop.sanitizer
         if san is not None:
             # the original batch DID arrive (at the departed dst); the
@@ -642,7 +701,7 @@ class Federator:
                 groups.setdefault(o, []).append(i)
         for o in sorted(groups):
             idxs = groups[o]
-            self.stats["migrated_entries"] += len(idxs)
+            self.stats.inc("migrated_entries", len(idxs))
             self._send_migration(
                 node, prefix_node[o], svc, embs[idxs],
                 [results[i] for i in idxs], buckets[idxs], 0.0)
@@ -665,10 +724,10 @@ class Federator:
                  for node in net.en_nodes}
         desired = policy.desired(now, snaps, n)
         if desired > n:
-            self.stats["scale_ups"] += 1
+            self.stats.inc("scale_ups")
             up()
         elif desired < n:
-            self.stats["scale_downs"] += 1
+            self.stats.inc("scale_downs")
             down()
 
     # ----------------------------------------------------------- rebalance
@@ -724,4 +783,4 @@ class Federator:
             net.rebalance_service(svc, weights=list(weights / weights.sum()),
                                   _notify_backend=False)
         net.backend.on_partition_change()  # once, on the final partition
-        self.stats["rebalances"] += 1
+        self.stats.inc("rebalances")

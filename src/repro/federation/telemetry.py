@@ -79,6 +79,18 @@ class TelemetryGossip:
                  for node in self.net.en_nodes}
         for node in snaps:
             self.last_publish[node] = now
+        reg = getattr(self.net, "registry", None)
+        if reg is not None:
+            # the gossip cadence is the metrics-snapshot cadence: one
+            # per-interval registry row per round, load gauges included
+            for node, snap in snaps.items():
+                reg.gauge(f"load/{node}/depth").set(snap.depth)
+                reg.gauge(f"load/{node}/service_s").set(snap.service_s)
+            reg.snapshot(now)
+        tr = self.net.loop.tracer
+        if tr is not None:
+            tr.instant("gossip-round", "gossip", tr.track("gossip"),
+                       round=self.rounds, n_ens=len(snaps))
         if self.prop_delay_s > 0 and now > 0:
             self.net.loop.call_later(self.prop_delay_s, self._apply, snaps)
         else:  # epoch-0 seeding (and zero-delay configs) apply inline

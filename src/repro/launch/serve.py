@@ -52,10 +52,16 @@ def main() -> None:
                     help="cosim federation policy: forward reuse-store "
                          "misses to a remote EN's engine (DESIGN.md "
                          "§Federation); default keeps execution local")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="cosim only: arm per-task tracing and write the "
+                         "Chrome trace-event / Perfetto JSON here")
     args = ap.parse_args()
     if args.offload_policy is not None and args.engine != "cosim":
         ap.error("--offload-policy requires --engine cosim (federation "
                  "runs between the co-simulated ENs)")
+    if args.trace_out is not None and args.engine != "cosim":
+        ap.error("--trace-out requires --engine cosim (spans live on the "
+                 "network's virtual timeline)")
 
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)
@@ -108,7 +114,8 @@ def main() -> None:
             max_wait_s=args.max_wait_ms * 1e-3, wall_time=True)
         net = ReservoirNetwork(
             g, ens, lshp, seed=0, en_batch_window_s=args.window_ms * 1e-3,
-            backend=backend, offload_policy=args.offload_policy)
+            backend=backend, offload_policy=args.offload_policy,
+            trace=True if args.trace_out else None)
         net.register_service(Service(
             f"/{args.dataset}", execute=svc_execute, input_dim=64))
         net.add_user("u0", "fwd1")
@@ -130,12 +137,22 @@ def main() -> None:
                if r.t_complete >= 0]
         stats = backend.stats()
         s = net.metrics.summary()
+        if args.trace_out:
+            net.loop.tracer.export(args.trace_out)
+            print(f"trace: {len(net.loop.tracer.events)} events -> "
+                  f"{args.trace_out}")
+        if net.loop.profiler is not None:
+            print(net.loop.profiler.report())
         print(f"\n{len(lat)} tasks through the co-sim in {wall:.1f}s wall "
               f"({makespan:.2f}s virtual, offered {args.rate:.0f} req/s, "
               f"EN window {args.window_ms:.0f} ms, {args.replicas} replicas/EN)")
         print(f"  network reuse: {s['reuse_pct']:.1f}% "
               f"(cs {s['reuse_pct_cs']:.1f}%, en {s['reuse_pct_en']:.1f}%), "
               f"accuracy {s['accuracy_pct']:.1f}%")
+        ph = net.registry.phase_summary()
+        print("  phases: " + "  ".join(
+            f"{p}={ph[p + '_ms']:.2f}ms/n={ph[p + '_n']}"
+            for p in ("forward", "search", "execute", "aggregate")))
         if net.federator is not None:
             fs = net.federator.stats
             print(f"  federation[{args.offload_policy}]: "

@@ -1,0 +1,156 @@
+"""Simulator hot-loop profiler (ISSUE 10, piece 3).
+
+Answers "where does a 10^5-task run actually spend WALL time" — the
+prerequisite for the ROADMAP's sim-scale vectorization work.  The armed
+``EventLoop.run()`` brackets every callback with ``begin``/``end`` here;
+per callback *site* (the function's qualname) we accumulate invocation
+count, cumulative wall seconds, and kernel activity deltas (fused-query
+device dispatches and jit retraces, read best-effort off
+``repro.kernels``), so the ranked report shows both where the host time
+goes and which phases pay for device work.  Store sync-page totals are
+surfaced through registered counter sources (the network registers a
+summer over its reuse stores).
+
+Arming follows the sanitizer pattern: ``RESERVOIR_PROFILE=1`` or
+``EventLoop(profile=True)``; disarmed, the loop keeps its zero-cost
+dispatch path.  This module lives in ``repro.obs`` deliberately: it is the
+one sanctioned consumer of the host wall clock (rule D002 bans wall time
+inside sim packages because it would leak into the virtual timeline — the
+profiler only ever *reports* it).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+_ENV = "RESERVOIR_PROFILE"
+
+
+def env_enabled() -> bool:
+    """True when RESERVOIR_PROFILE asks for an armed profiler."""
+    return os.environ.get(_ENV, "").strip().lower() in ("1", "true", "yes", "on")
+
+
+def _kernel_counters() -> Tuple[int, int]:
+    """(fused dispatches, jit retraces) — best-effort, never imports jax:
+    reads the counters only if the kernel modules are already loaded."""
+    ops = sys.modules.get("repro.kernels.ops")
+    fq = sys.modules.get("repro.kernels.fused_query")
+    return (getattr(ops, "FUSED_DISPATCH_COUNT", 0) if ops else 0,
+            getattr(fq, "FUSED_TRACE_COUNT", 0) if fq else 0)
+
+
+class _Site:
+    __slots__ = ("count", "wall_s", "dispatches", "retraces")
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.wall_s = 0.0
+        self.dispatches = 0
+        self.retraces = 0
+
+
+class Profiler:
+    """Per-callback-site accounting for one EventLoop."""
+
+    def __init__(self, loop: Any):
+        self.loop = loop
+        self.sites: Dict[str, _Site] = {}
+        self._sources: Dict[str, Callable[[], int]] = {}
+        # cached kernel-module refs: sys.modules lookups are cheap but the
+        # hot path pays them twice per event; once a module is loaded the
+        # reference never goes stale
+        self._ops: Any = None
+        self._fq: Any = None
+
+    def add_counter_source(self, name: str, fn: Callable[[], int]) -> None:
+        """Register an end-of-run total (e.g. summed store sync pages)."""
+        self._sources[name] = fn
+
+    # ------------------------------------------------------------- hot path
+    def _counters(self) -> Tuple[int, int]:
+        ops, fq = self._ops, self._fq
+        if ops is None:
+            ops = self._ops = sys.modules.get("repro.kernels.ops")
+        if fq is None:
+            fq = self._fq = sys.modules.get("repro.kernels.fused_query")
+        return (getattr(ops, "FUSED_DISPATCH_COUNT", 0) if ops else 0,
+                getattr(fq, "FUSED_TRACE_COUNT", 0) if fq else 0)
+
+    def begin(self) -> Tuple[float, int, int]:
+        d, r = self._counters()
+        return (time.perf_counter(), d, r)
+
+    def end(self, site: str, mark: Tuple[float, int, int]) -> None:
+        wall = time.perf_counter() - mark[0]
+        d, r = self._counters()
+        s = self.sites.get(site)
+        if s is None:
+            s = self.sites[site] = _Site()
+        s.count += 1
+        s.wall_s += wall
+        s.dispatches += d - mark[1]
+        s.retraces += r - mark[2]
+
+    # -------------------------------------------------------------- reports
+    def rows(self) -> List[Dict[str, Any]]:
+        """Sites ranked by cumulative wall time (descending)."""
+        out = []
+        for site, s in self.sites.items():
+            out.append({
+                "site": site, "count": s.count,
+                "wall_s": s.wall_s,
+                "mean_us": (s.wall_s / s.count * 1e6) if s.count else 0.0,
+                "dispatches": s.dispatches, "retraces": s.retraces,
+            })
+        out.sort(key=lambda r: r["wall_s"], reverse=True)
+        return out
+
+    def totals(self) -> Dict[str, Any]:
+        rows = self.rows()
+        t = {"events": sum(r["count"] for r in rows),
+             "wall_s": sum(r["wall_s"] for r in rows),
+             "dispatches": sum(r["dispatches"] for r in rows),
+             "retraces": sum(r["retraces"] for r in rows)}
+        for name, fn in self._sources.items():
+            try:
+                t[name] = fn()
+            except Exception:  # a crashed source must not kill the report
+                t[name] = None
+        return t
+
+    def report(self, top: int = 20) -> str:
+        """Ranked where-does-the-wall-time-go table."""
+        rows = self.rows()
+        totals = self.totals()
+        total_wall = totals["wall_s"] or 1.0
+        lines = [
+            f"EventLoop profile: {totals['events']} events, "
+            f"{totals['wall_s']:.3f}s wall, "
+            f"{totals['dispatches']} kernel dispatches, "
+            f"{totals['retraces']} retraces",
+            f"{'cum_s':>8} {'%':>5} {'count':>8} {'mean_us':>9} "
+            f"{'disp':>6} {'retr':>5}  site",
+        ]
+        for r in rows[:top]:
+            lines.append(
+                f"{r['wall_s']:8.3f} {100 * r['wall_s'] / total_wall:5.1f} "
+                f"{r['count']:8d} {r['mean_us']:9.1f} "
+                f"{r['dispatches']:6d} {r['retraces']:5d}  {r['site']}")
+        extra = {k: v for k, v in totals.items()
+                 if k not in ("events", "wall_s", "dispatches", "retraces")}
+        if extra:
+            lines.append("sources: " + ", ".join(
+                f"{k}={v}" for k, v in extra.items()))
+        return "\n".join(lines)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"sites": self.rows(), "totals": self.totals()}
+
+
+def site_of(fn: Callable) -> str:
+    """Stable site key for a callback (its qualname)."""
+    site: Optional[str] = getattr(fn, "__qualname__", None)
+    return site if site is not None else repr(fn)

@@ -52,6 +52,7 @@ from repro.core.edge_node import (
 from repro.core.lsh import LSHParams, normalize
 from repro.core.packets import Data
 from repro.core.sim_clock import EventLoop, Future, Timer
+from repro.obs.registry import CounterGroup
 from repro.training.elastic import BackupPolicy
 
 from .batcher import Batcher
@@ -108,7 +109,8 @@ class AsyncServingEngine:
         self._inflight: Dict[Tuple[int, str], _Task] = {}
         self._queued: Dict[int, _Task] = {}  # id(req) -> task while batched
         self._flush_timers: Dict[Tuple[int, str], Timer] = {}
-        self.engine_stats = {"backups": 0, "backup_wins": 0, "dispatches": 0}
+        self.engine_stats = CounterGroup(
+            {"backups": 0, "backup_wins": 0, "dispatches": 0})
 
     # --------------------------------------------------------------- submit
     def submit(self, req: ServeRequest) -> Future:
@@ -139,7 +141,7 @@ class AsyncServingEngine:
         # 2. PIT coalescing: attach as follower on the leader's future
         task = self._inflight.get((rid, name))
         if task is not None:
-            rep.stats["aggregated"] += 1
+            rep.stats.inc("aggregated")
             task.followers.append((req, t, fut))
             return
         # 3. new leader: register in-flight, queue for a batched flush
@@ -191,9 +193,13 @@ class AsyncServingEngine:
         if not tasks:
             return
         rep = self.replicas[exec_rid]
-        self.engine_stats["dispatches"] += 1
+        self.engine_stats.inc("dispatches")
+        tr = self.loop.tracer
         for task in tasks:
             task.dispatched.append(exec_rid)
+            if tr is not None and task.req.trace_tid is not None:
+                tr.instant("engine-dispatch", "engine", task.req.trace_tid,
+                           replica=exec_rid, task=task.req.trace_tid)
         embs = np.stack([task.emb for task in tasks])
         thrs = np.asarray([task.req.threshold for task in tasks], np.float32)
         out = rep.query_reuse(service, embs, thrs)
@@ -208,7 +214,11 @@ class AsyncServingEngine:
                     # and count the win like an executed backup
                     self.replicas[task.primary].cs.insert(
                         Data(task.name, content=result), t)
-                    self.engine_stats["backup_wins"] += 1
+                    self.engine_stats.inc("backup_wins")
+                    if tr is not None and task.req.trace_tid is not None:
+                        tr.instant("backup-win", "engine",
+                                   task.req.trace_tid, replica=exec_rid,
+                                   task=task.req.trace_tid, reuse="en")
                 self._resolve(task, result, "en", sim, exec_rid, t,
                               backup=is_backup)
             else:
@@ -259,7 +269,12 @@ class AsyncServingEngine:
                 # result too, so retries routed there hit its Content Store
                 self.replicas[task.primary].cs.insert(
                     Data(task.name, content=res), t)
-                self.engine_stats["backup_wins"] += 1
+                self.engine_stats.inc("backup_wins")
+                tr = self.loop.tracer
+                if tr is not None and task.req.trace_tid is not None:
+                    tr.instant("backup-win", "engine", task.req.trace_tid,
+                               replica=exec_rid, task=task.req.trace_tid,
+                               reuse="scratch")
             self._resolve(task, res, None, -1.0, exec_rid, t,
                           backup=is_backup)
 
@@ -293,7 +308,12 @@ class AsyncServingEngine:
         rid = min(candidates,
                   key=lambda r: (r - task.primary) % n)  # next ring neighbour
         task.backups_sent += 1
-        self.engine_stats["backups"] += 1
+        self.engine_stats.inc("backups")
+        tr = self.loop.tracer
+        if tr is not None and task.req.trace_tid is not None:
+            tr.instant("backup", "engine", task.req.trace_tid,
+                       replica=rid, attempt=task.backups_sent,
+                       task=task.req.trace_tid)
         self._dispatch(rid, task.service, [task], self.loop.now)
 
     # ------------------------------------------------------------ crash-stop
@@ -456,6 +476,17 @@ class EngineBackend(ComputeBackend):
                         random.Random(node_seed))),
                 bucket_range=bucket_range,
             )
+            self._adopt_stats(node, self.engines[node])
+
+    def _adopt_stats(self, node, engine: AsyncServingEngine) -> None:
+        """Re-home this EN's engine + replica counters onto the network's
+        metrics registry (gossip-cadence snapshots pick them up)."""
+        reg = getattr(self.net, "registry", None)
+        if reg is None:
+            return
+        reg.adopt(f"engine/{node}", engine.engine_stats)
+        for rep in engine.replicas:
+            reg.adopt(f"engine/{node}/r{rep.replica_id}", rep.stats)
 
     def _execute(self, reqs: List[ServeRequest]) -> List[Any]:
         """Replica execute_fn: run the registered edge service on each
@@ -478,10 +509,12 @@ class EngineBackend(ComputeBackend):
                defer_inserts=None) -> Future:
         net = self.net
         engine = self.engines[node]
+        tmeta = net._task_meta.get(interest.name)
         req = ServeRequest(
             next(self._ids), svc_name, emb, payload=emb,
             threshold=float(interest.app_params.get("threshold", 0.0)),
-            deadline_s=interest.app_params.get("deadline"))
+            deadline_s=interest.app_params.get("deadline"),
+            trace_tid=None if tmeta is None else tmeta[0])
         out = Future()
 
         def adapt(sr: ServeResult) -> ExecCompletion:
@@ -490,10 +523,18 @@ class EngineBackend(ComputeBackend):
             # _en_of: a departed EN's in-flight executions drain gracefully.
             t = net.loop.now
             en = net._en_of(node)
+            net.registry.observe_phase("execute", sr.latency_s)
+            tr = net._tracer
+            if tr is not None and req.trace_tid is not None:
+                tr.complete("execute", "execute", req.trace_tid,
+                            t0=t - sr.latency_s, dur=sr.latency_s,
+                            task=req.trace_tid, node=str(node),
+                            backend="engine", replica=sr.replica,
+                            reuse=sr.reuse or "scratch", backup=sr.backup)
             if sr.reuse is None:
                 # a real scratch execution: the network-edge reuse store
                 # learns the result at the moment it exists on the engine
-                en.stats["executed"] += 1
+                en.stats.inc("executed")
                 en.stores[svc_name].insert(emb, sr.result)
             return ExecCompletion(sr.result, t, reuse=sr.reuse,
                                   similarity=sr.similarity,
@@ -592,6 +633,7 @@ class EngineBackend(ComputeBackend):
                     random.Random(node_seed))),
             bucket_range=(0, self.net.lsh_params.effective_buckets),
         )
+        self._adopt_stats(node, self.engines[node])
 
     def on_en_crash(self, node) -> None:
         """Crash-stop (``ReservoirNetwork.crash_en``): the EN's engine dies

@@ -31,6 +31,7 @@ from repro.core.lsh import LSHParams, get_lsh, normalize
 from repro.core.namespace import make_task_name
 from repro.core.packets import Data
 from repro.core.reuse_store import ReuseStore
+from repro.obs.registry import CounterGroup
 from repro.training.elastic import BackupPolicy
 
 
@@ -42,6 +43,7 @@ class ServeRequest:
     payload: Any = None            # model inputs (tokens, ...)
     threshold: float = 0.9
     deadline_s: Optional[float] = None
+    trace_tid: Optional[int] = None   # originating task's trace track
 
 
 @dataclasses.dataclass
@@ -72,7 +74,7 @@ class ReplicaEngine:
         self.ttc = TTCEstimator()
         self.lsh_params = lsh_params
         self.inflight: Dict[str, List[ServeRequest]] = {}
-        self.stats = {"cs": 0, "en": 0, "executed": 0, "aggregated": 0}
+        self.stats = CounterGroup({"cs": 0, "en": 0, "executed": 0, "aggregated": 0})
 
     def _store(self, service: str) -> ReuseStore:
         if service not in self.stores:
@@ -110,7 +112,7 @@ class ReplicaEngine:
         hit = self.cs.lookup(name, now)
         if hit is None:
             return None
-        self.stats["cs"] += 1
+        self.stats.inc("cs")
         return hit.content
 
     def query_reuse(self, service: str, embs: np.ndarray,
@@ -120,7 +122,7 @@ class ReplicaEngine:
 
     def admit_en_hit(self, name: str, result: Any, now: float) -> None:
         """Record an EN hit: count it and cache the named result in the CS."""
-        self.stats["en"] += 1
+        self.stats.inc("en")
         self.cs.insert(Data(name, content=result), now)
 
     def execute_batch(self, reqs: List[ServeRequest]) -> Tuple[List[Any], float]:
@@ -154,7 +156,7 @@ class ReplicaEngine:
         self.ttc.observe(service, exec_time_s / max(len(outs), 1))
         for name, result in zip(names, outs):
             self.cs.insert(Data(name, content=result), now)
-            self.stats["executed"] += 1
+            self.stats.inc("executed")
 
     # ------------------------------------------------------------ sync paths
     def handle(self, req: ServeRequest, now: Optional[float] = None) -> Optional[ServeResult]:
@@ -180,7 +182,7 @@ class ReplicaEngine:
         # 2. PIT-style aggregation of identical in-flight names
         if name in self.inflight:
             self.inflight[name].append(req)
-            self.stats["aggregated"] += 1
+            self.stats.inc("aggregated")
             return None
         # 3. EN semantic reuse
         store = self._store(req.service)
@@ -235,7 +237,7 @@ class ReplicaEngine:
                 _done(i, content, "cs", 1.0)
                 continue
             if name in leaders:
-                self.stats["aggregated"] += 1
+                self.stats.inc("aggregated")
                 followers[i] = leaders[name]
                 continue
             leaders[name] = i
